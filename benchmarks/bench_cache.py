@@ -1,0 +1,75 @@
+"""Paper Table: multi-GPU collaborative caching vs LRU/LFU (§5).
+
+Claims checked: value-aware caching beats LRU by 15-20% hit rate on
+skewed+polluted workloads; the two-level access priority cuts cross-node
+accesses; AW-ResNet incremental training with rollback stays stable.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_engine, emit
+from repro.cache.policy import LFUCache, LRUCache, ValueCache
+from repro.data.synthetic import make_workload
+
+
+def _replay(cache, stream, values) -> float:
+    for k in stream:
+        k = int(k)
+        if cache.get(k) is None:
+            cache.put(k, k, value=float(values[k]), avg_deg=1.0,
+                      hit_rate=getattr(cache, "hit_rate", 0.5),
+                      latency_ms=30.0)
+    return cache.hit_rate
+
+
+def run() -> list[tuple]:
+    rows = []
+    # synthetic skewed access trace with scan pollution
+    rng = np.random.default_rng(0)
+    n_keys, cap, n_access = 500, 50, 6000
+    hot = rng.zipf(1.4, n_access) % 60
+    scan = np.arange(n_access) % n_keys
+    stream = np.where(rng.random(n_access) < 0.55, hot, scan)
+    freq = np.bincount(stream.astype(int), minlength=n_keys).astype(float)
+    # V(p) is a [0,1]-normalized fused score in the system (AW-ResNet over
+    # normalized features); log-compress raw counts to match that regime.
+    freq = np.log1p(freq) / np.log1p(freq.max())
+    hr_v = _replay(ValueCache(cap), stream, freq)
+    hr_l = _replay(LRUCache(cap), stream, freq)
+    hr_f = _replay(LFUCache(cap), stream, freq)
+    rows.append(("cache/hit_rate_vs_baselines", 0.0,
+                 f"value={hr_v:.3f};lru={hr_l:.3f};lfu={hr_f:.3f};"
+                 f"vs_lru=+{(hr_v - hr_l) * 100:.1f}pp"))
+
+    # end-to-end engine: cache on vs off latency + hit rate
+    g, eng = bench_engine(n_machines=3, spm=3, n_vertices=600, seed=2)
+    qs = make_workload(g, 20, seed=2, hot_fraction=0.7, n_hot=3)
+    eng.use_cache = False
+    lat_off = sum(eng.query(q)[1].latency_ms for q in qs)
+    eng.use_cache = True
+    lat_on = sum(eng.query(q)[1].latency_ms for q in qs)
+    rows.append(("cache/e2e_latency", 0.0,
+                 f"off_ms={lat_off:.0f};on_ms={lat_on:.0f};"
+                 f"speedup={lat_off / max(lat_on, 1e-9):.2f}x;"
+                 f"hit_rate={eng.cache.hit_rate:.3f}"))
+
+    # two-level priority: fraction of hits served without a cross-node hop
+    local = eng.cache.master.hits
+    total = eng.cache.total_accesses
+    cross = eng.cache.cross_node_accesses
+    rows.append(("cache/access_priority", 0.0,
+                 f"master_hits={local};accesses={total};"
+                 f"cross_node_frac={cross / max(total, 1):.2f}"))
+
+    # AW-ResNet stability
+    if eng.aw is not None:
+        rows.append(("cache/awresnet", 0.0,
+                     f"updates={eng.aw.n_updates};"
+                     f"rollbacks={eng.aw.n_rollbacks}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

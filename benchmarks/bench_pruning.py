@@ -1,0 +1,52 @@
+"""Paper Table: dominance-embedding pruning power (§3.2 / GNN-PE Table 4).
+
+Claims checked: index-level pruning removes the overwhelming majority of
+candidate paths (GNN-PE reports ~99.5% on US-Patents); training the
+certified-monotone GNN improves pruning over untrained params.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import gnn as gnn_lib
+from repro.core.artree import query_stats
+from repro.core.embedding import train_dominance_gnn
+from repro.core.matching import build_shard_index
+from repro.data.synthetic import make_dataset
+
+
+def _pruning(g, params, cfg) -> dict[str, float]:
+    index = build_shard_index(g, params, cfg, max_length=2)
+    out = {}
+    for l, tree in index.trees.items():
+        ep = index.embedded[l]
+        sel = [query_stats(tree, ep.embeddings[i])["selectivity"]
+               for i in range(0, ep.n_paths, max(ep.n_paths // 100, 1))]
+        prr = [query_stats(tree, ep.embeddings[i])["pruning_rate"]
+               for i in range(0, ep.n_paths, max(ep.n_paths // 100, 1))]
+        out[l] = (float(np.mean(sel)), float(np.mean(prr)))
+    return out
+
+
+def run() -> list[tuple]:
+    rows = []
+    for name in ("dblp-s", "nws-s"):
+        g = make_dataset(name)
+        cfg = gnn_lib.GNNConfig(n_labels=g.n_labels)
+        p0 = gnn_lib.init_params(cfg, jax.random.PRNGKey(0))
+        trained = train_dominance_gnn(g, cfg, n_steps=80, seed=0)
+        before = _pruning(g, p0, cfg)
+        after = _pruning(g, trained, cfg)
+        for l in sorted(after):
+            rows.append((f"pruning/{name}_len{l}", 0.0,
+                         f"selectivity={after[l][0]:.4f};"
+                         f"index_prune={after[l][1]:.4f};"
+                         f"untrained_sel={before[l][0]:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,36 @@
+"""Shared benchmark helpers: timing + the standard engine fixture."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.data.synthetic import make_workload, nws_graph
+from repro.dist.cluster import DistributedGNNPE
+
+
+def timeit(fn: Callable, n: int = 5, warmup: int = 1) -> float:
+    """Median wall microseconds per call."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def bench_engine(n_machines: int = 4, spm: int = 4, n_vertices: int = 800,
+                 seed: int = 0) -> tuple:
+    g = nws_graph(n_vertices, 6, 0.1, 8, seed=seed)
+    eng = DistributedGNNPE.build(g, n_machines, shards_per_machine=spm,
+                                 gnn_train_steps=25, seed=seed)
+    return g, eng
+
+
+def emit(rows: list[tuple]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,133 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count="
+                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
+"""Scan-correct roofline calibration for the LM family.
+
+XLA's cost_analysis counts a lax.scan body ONCE, so the main dry-run
+under-counts per-step FLOPs/bytes/collectives by ~n_layers for the
+scan-over-layers LMs.  This pass lowers small UNROLLED depths and
+extrapolates linearly:
+
+  dense-only stacks:      F(L) = nonscan + L*dense_body
+      -> lower L in {1, 2}; body = F(2) - F(1)
+  mixed stacks (f dense + m moe; deepseek f=3):
+      F(L) = nonscan + f*dense + (L-f)*moe for L > f
+      -> lower L in {f-1, f, f+1, f+2}: dense = F(f)-F(f-1),
+         moe = F(f+1)-F(f)  (and F(f+2) validates linearity)
+
+The corrected totals feed benchmarks/roofline.py via calib_results.json.
+
+  DRYRUN_DEVICES=512 PYTHONPATH=src python -m benchmarks.flops_calib \
+      [--out calib_results.json]
+"""
+
+import argparse
+import dataclasses
+import json
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_spec
+from repro.dist.sharding import clear_rules, set_mesh, set_rules
+from repro.launch.dryrun import _rules_for, collective_bytes
+from repro.launch.mesh import dp_axes_of, make_production_mesh
+
+LM_ARCHS = ["yi-6b", "h2o-danube-1.8b", "glm4-9b", "qwen2-moe-a2.7b",
+            "deepseek-v3-671b"]
+
+
+def lower_metrics(arch: str, shape_id: str, n_layers: int,
+                  mesh) -> dict[str, float]:
+    """Compile an unrolled depth-n_layers variant; return raw metrics."""
+    spec = get_spec(arch)
+    shape = spec.shapes[shape_id]
+    dp = dp_axes_of(mesh)
+    set_rules(_rules_for(spec.family, dp))
+    set_mesh(mesh)
+    try:
+        cfg = spec.make_config()
+        fd = cfg.moe.first_dense if cfg.moe is not None else 0
+        moe = cfg.moe
+        if moe is not None and n_layers <= fd:
+            # depth below the dense prefix: pure-dense variant
+            moe = None if n_layers < fd else moe
+        cfg = dataclasses.replace(
+            cfg, n_layers=n_layers, unroll=True, mtp=cfg.mtp,
+            moe=dataclasses.replace(moe, first_dense=min(fd, n_layers))
+            if moe is not None else None)
+        cell = spec.build_cell(cfg, shape, dp)
+        to_ns = lambda s: jax.tree.map(
+            lambda x: NamedSharding(mesh, x) if isinstance(x, P) else x,
+            s, is_leaf=lambda x: isinstance(x, P))
+        with mesh:
+            compiled = jax.jit(
+                cell.step_fn, in_shardings=to_ns(cell.in_shardings),
+                out_shardings=to_ns(cell.out_shardings),
+                donate_argnums=cell.donate_argnums,
+            ).lower(*cell.abstract_args).compile()
+        cost = compiled.cost_analysis()
+        return {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(collective_bytes(compiled.as_text())["total"]),
+        }
+    finally:
+        clear_rules()
+
+
+def calibrate_cell(arch: str, shape_id: str, mesh) -> dict[str, float]:
+    spec = get_spec(arch)
+    cfg = spec.make_config()
+    l_full = cfg.n_layers
+    fd = cfg.moe.first_dense if cfg.moe is not None else 0
+    out: dict[str, float] = {}
+    if cfg.moe is None or fd == 0:
+        f1 = lower_metrics(arch, shape_id, 1, mesh)
+        f2 = lower_metrics(arch, shape_id, 2, mesh)
+        for k in f1:
+            body = f2[k] - f1[k]
+            out[k] = f1[k] + (l_full - 1) * body
+    else:
+        fm1 = lower_metrics(arch, shape_id, fd - 1, mesh)   # dense-only
+        f0 = lower_metrics(arch, shape_id, fd, mesh)        # dense-only
+        f1 = lower_metrics(arch, shape_id, fd + 1, mesh)    # + 1 moe
+        for k in f0:
+            dense = f0[k] - fm1[k]
+            moe = f1[k] - f0[k]
+            nonscan = f0[k] - fd * dense
+            out[k] = nonscan + fd * dense + (l_full - fd) * moe
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="calib_results.json")
+    ap.add_argument("--scale", type=int, default=16)
+    ap.add_argument("--arch", default=None)
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=False, scale=args.scale)
+    results = []
+    archs = [args.arch] if args.arch else LM_ARCHS
+    for arch in archs:
+        spec = get_spec(arch)
+        for sid in spec.shapes:
+            if sid in spec.skip_shapes:
+                continue
+            try:
+                m = calibrate_cell(arch, sid, mesh)
+                rec = {"arch": arch, "shape": sid, "status": "ok", **m}
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": sid, "status": "failed",
+                       "error": f"{type(e).__name__}: {e}"}
+            print(rec)
+            results.append(rec)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Per (arch x shape) on the single-pod mesh:
+  compute_s    = HLO_FLOPs_per_device / peak_FLOP/s      (197e12 bf16, v5e)
+  memory_s     = HLO_bytes_per_device / HBM_bw           (819e9 B/s)
+  collective_s = collective_bytes_per_device / ICI_bw    (50e9 B/s/link)
+
+plus MODEL_FLOPS (6·N·D dense, 6·N_active·D MoE; family-specific analytic
+counts for GNN/recsys) and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--json dryrun_results.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.launch.mesh import HW
+
+
+def model_flops_per_device(arch: str, shape: str, n_devices: int) -> float:
+    """Analytic 'useful' FLOPs per step per device."""
+    from repro.configs import get_spec
+    spec = get_spec(arch)
+    cfg = spec.make_config()
+    sh = spec.shapes[shape]
+    if spec.family == "lm":
+        n_act = cfg.active_param_count()
+        b = sh.dims["global_batch"]
+        s = sh.dims["seq_len"]
+        if sh.kind == "train":
+            tokens = b * s
+            total = 6.0 * n_act * tokens          # fwd+bwd
+        elif sh.kind == "prefill":
+            total = 2.0 * n_act * b * s
+        else:                                     # decode: 1 token/request
+            total = 2.0 * n_act * b
+            if sh.kind == "decode":               # + attention over KV
+                t = s if cfg.sliding_window is None \
+                    else min(s, cfg.sliding_window)
+                if cfg.mla is not None:
+                    kv_d = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
+                    total += 2.0 * b * cfg.n_layers * cfg.n_heads * t * kv_d * 2
+                else:
+                    total += 2.0 * b * cfg.n_layers * cfg.n_heads * t \
+                        * cfg.head_dim * 2
+        return total / n_devices
+    if spec.family == "gnn":
+        n = sh.dims["n_nodes"] * sh.dims.get("batch", 1)
+        e = 2 * sh.dims["n_edges"] * sh.dims.get("batch", 1)
+        d = cfg.d_hidden
+        l = cfg.n_layers
+        # message MLP + node update per edge/node per layer, fwd+bwd (x3)
+        per_layer = e * (2 * d * d * 2) + n * (2 * d * d * 2)
+        if cfg.arch == "nequip":
+            per_layer = e * (9 * 9 * 9 * d + cfg.n_rbf * 2 * d * 3) * 2 \
+                + n * 9 * d * d * 2
+        return 3.0 * l * per_layer / n_devices
+    if spec.family == "recsys":
+        b = sh.dims["batch"]
+        s = cfg.seq_len
+        d = cfg.embed_dim
+        blk = cfg.n_blocks * (8 * d * d + 4 * d * cfg.d_ff
+                              + 4 * s * d) * s * b
+        if shape == "train_batch":
+            blk *= 3
+        if shape == "retrieval_cand":
+            blk += 2.0 * sh.dims["n_candidates"] * d
+        if shape == "serve_bulk":
+            blk += 2.0 * b * cfg.n_items * d
+        return blk / n_devices
+    return float("nan")
+
+
+def analyze(results: list[dict], calib: list[dict] | None = None
+            ) -> list[dict]:
+    """calib: scan-corrected totals from benchmarks/flops_calib.py — the
+    LM family's scan-over-layers bodies are counted once by cost_analysis,
+    so calibrated numbers override the raw dry-run ones where present."""
+    cal = {(c["arch"], c["shape"]): c for c in (calib or [])
+           if c.get("status") == "ok"}
+    rows = []
+    for r in results:
+        if r["status"] != "ok" or r["mesh"] != "single":
+            continue
+        nd = r["n_devices"]
+        c = cal.get((r["arch"], r["shape"]))
+        flops = c["flops"] if c else r["flops_per_device"]
+        byts = c["bytes"] if c else r["bytes_accessed_per_device"]
+        collb = c["coll"] if c else r["collectives"]["total"]
+        comp = flops / HW["peak_flops_bf16"]
+        mem = byts / HW["hbm_bw"]
+        coll = collb / HW["ici_bw"]
+        dom = max(("compute", comp), ("memory", mem), ("collective", coll),
+                  key=lambda kv: kv[1])
+        try:
+            mf = model_flops_per_device(r["arch"], r["shape"], nd)
+        except Exception:  # noqa: BLE001
+            mf = float("nan")
+        ratio = mf / max(flops, 1.0)
+        bound = max(comp, mem, coll)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": comp, "memory_s": mem, "collective_s": coll,
+            "dominant": dom[0],
+            "model_flops_per_dev": mf,
+            "useful_ratio": ratio,
+            "roofline_fraction": comp / bound if bound > 0 else 0.0,
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_results.json")
+    ap.add_argument("--calib", default=None)
+    ap.add_argument("--md", action="store_true", help="markdown table")
+    args = ap.parse_args()
+    results = json.load(open(args.json))
+    calib = json.load(open(args.calib)) if args.calib else None
+    rows = analyze(results, calib)
+    hdr = ("arch", "shape", "compute_s", "memory_s", "collective_s",
+           "dominant", "useful_ratio", "roofline_fraction")
+    if args.md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+        for w in rows:
+            print("| " + " | ".join(
+                f"{w[h]:.3e}" if isinstance(w[h], float) else str(w[h])
+                for h in hdr) + " |")
+    else:
+        print(",".join(hdr))
+        for w in rows:
+            print(",".join(
+                f"{w[h]:.4e}" if isinstance(w[h], float) else str(w[h])
+                for h in hdr))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only <name>]``
+Prints ``name,us_per_call,derived`` CSV rows (stdout) per benchmark.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="partition|migration|cache|plan|pruning|e2e")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_cache, bench_e2e, bench_migration,
+                            bench_partition, bench_plan, bench_pruning)
+    from benchmarks.common import emit
+
+    suites = {
+        "partition": bench_partition.run,
+        "migration": bench_migration.run,
+        "cache": bench_cache.run,
+        "plan": bench_plan.run,
+        "pruning": bench_pruning.run,
+        "e2e": bench_e2e.run,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            emit(fn())
+            print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}/SUITE_FAILED,0,{type(e).__name__}:{e}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Distributed matching deep-dive: migration, failover, plan comparison.
+
+    PYTHONPATH=src python examples/distributed_matching.py
+"""
+
+import numpy as np
+
+from repro.data.synthetic import make_workload, nws_graph
+from repro.dist.cluster import DistributedGNNPE
+from repro.train.elastic import WorkerFailover
+
+
+def main() -> None:
+    graph = nws_graph(800, 6, 0.1, 10, seed=2, label_skew=0.5)
+    engine = DistributedGNNPE.build(graph, n_machines=4,
+                                    shards_per_machine=4, seed=2)
+    queries = make_workload(graph, 16, seed=2, hot_fraction=0.8, n_hot=2)
+
+    # --- skewed load -> migrations ---------------------------------- #
+    engine.run_workload(queries, rebalance=True, corrupt_prob=0.1)
+    print(f"sigma history: {[round(h['sigma'], 3) for h in engine.history]}")
+    for m in engine.migrations:
+        print(f"  migrated {m.migrated} ({m.bytes_moved}B, "
+              f"{m.retransmissions} retrans, {m.virtual_ms:.1f} vms)")
+
+    # --- query plan comparison --------------------------------------- #
+    engine.use_cache = False
+    for mode in ("pescore", "degree", "natural"):
+        tel = [engine.query(q, plan_mode=mode)[1] for q in queries[:6]]
+        print(f"plan={mode:8s}: comm={sum(t.comm_bytes for t in tel):9d}B "
+              f"latency={sum(t.latency_ms for t in tel):7.1f}vms")
+    engine.use_cache = True
+
+    # --- kill a machine, verify exactness ----------------------------- #
+    fo = WorkerFailover(engine)
+    dead = fo.fail_machine(2)
+    print(f"machine 2 died; re-homed shards {dead}")
+    m, tel = engine.query(queries[0])
+    print(f"post-failover query: {len(m)} matches "
+          f"({tel.latency_ms:.1f} vms) — service continued")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: end-to-end distributed exact subgraph matching in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.data.synthetic import make_workload, nws_graph
+from repro.dist.cluster import DistributedGNNPE
+
+
+def main() -> None:
+    # 1. a synthetic labeled data graph (Newman-Watts-Strogatz, 6 labels)
+    graph = nws_graph(n=600, k=6, p=0.1, n_labels=6, seed=0)
+    print(f"data graph: {graph.n_vertices} vertices, {graph.n_edges} edges")
+
+    # 2. build the distributed engine: 4 machines, 16 ultra-fine shards,
+    #    per-shard dominance embeddings + aR-trees, PE-score model, caches
+    engine = DistributedGNNPE.build(graph, n_machines=4,
+                                    shards_per_machine=4, seed=0)
+    print(f"offline: {engine.offline_report}")
+
+    # 3. run a query workload with all three innovations active
+    queries = make_workload(graph, 10, seed=1, hot_fraction=0.5)
+    for i, q in enumerate(queries[:5]):
+        matches, tel = engine.query(q)
+        print(f"q{i}: |V(q)|={q.n_vertices} -> {len(matches)} exact matches "
+              f"({tel.latency_ms:.1f} virtual ms, "
+              f"{tel.shards_skipped} shards pruned, "
+              f"{tel.cache_hits} cache hits)")
+
+    # 4. full workload with dynamic load balancing
+    tels = engine.run_workload(queries, rebalance=True)
+    print(f"workload: cache hit rate {engine.cache.hit_rate:.2f}, "
+          f"{len(engine.migrations)} migration batches, "
+          f"load sigma {engine.load_sigma():.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""AW-ResNet: the adaptive-weight residual net behind dynamic cache values.
+
+Structure (§5.3.1-2): input 4-d features -> 1 residual unit (32-d) -> output
+4-d weights (softmax -> alpha, beta, gamma, delta sum to 1).
+
+Algorithm 2: initial weights from warm-up query feature variance.
+Algorithm 5: GPU-collaborative incremental training with reward gating —
+the new model replaces the old only if Reward improves by >= 3%; otherwise
+rollback.  Training trigger: 100 new feature sets (or hit-rate drop >= 5%).
+
+On the TPU mesh the inference batch (100 paths/batch, §5.3.2-3) is a single
+jitted matmul chain; in the simulator it runs on the CPU device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import adam_init, adam_update
+
+__all__ = ["AWResNet", "initial_weights_from_warmup", "incremental_train"]
+
+D_IN, D_HID, D_OUT = 4, 32, 4
+TRAIN_TRIGGER_SETS = 100
+TRAIN_BUFFER_SETS = 500
+REWARD_GATE = 0.03
+
+
+def _init_params(key: jax.Array) -> dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s1 = jnp.sqrt(2.0 / (D_IN + D_HID))
+    s2 = jnp.sqrt(2.0 / (D_HID + D_HID))
+    s3 = jnp.sqrt(2.0 / (D_HID + D_OUT))
+    return {
+        "w1": jax.random.normal(k1, (D_IN, D_HID)) * s1,
+        "b1": jnp.zeros(D_HID),
+        "w2": jax.random.normal(k2, (D_HID, D_HID)) * s2,
+        "b2": jnp.zeros(D_HID),
+        "w3": jax.random.normal(k3, (D_HID, D_OUT)) * s3,
+        "b3": jnp.zeros(D_OUT),
+    }
+
+
+@jax.jit
+def _forward(params: dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+    """[B, 4] features -> [B, 4] weights (rows sum to 1)."""
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = h + jax.nn.relu(h @ params["w2"] + params["b2"])   # residual unit
+    return jax.nn.softmax(h @ params["w3"] + params["b3"], axis=-1)
+
+
+def initial_weights_from_warmup(warmup_features: np.ndarray) -> np.ndarray:
+    """Algorithm 2: variance-ratio initial weights from [N, 4] warm-up feats."""
+    f = np.asarray(warmup_features, dtype=np.float64)
+    var = f.var(axis=0) if f.size else np.zeros(4)
+    total = var.sum()
+    if total == 0:
+        contrib = np.full(4, 0.25)
+    else:
+        contrib = var / total
+    w = 0.2 + 0.1 * contrib / max(contrib.max(), 1e-12)
+    return w / w.sum()
+
+
+class AWResNet:
+    """Stateful wrapper: weights inference + incremental training + rollback."""
+
+    def __init__(self, seed: int = 0,
+                 warmup_features: np.ndarray | None = None) -> None:
+        self.params = _init_params(jax.random.PRNGKey(seed))
+        self.opt = adam_init(self.params)
+        if warmup_features is not None and len(warmup_features):
+            self._bias_toward(initial_weights_from_warmup(warmup_features))
+        self.buffer: list[tuple[np.ndarray, float]] = []   # (feats4, hit)
+        self.new_since_train = 0
+        self.prev_hit_rate = 1.0
+        self.prev_latency_ms = 1.0
+        self.n_rollbacks = 0
+        self.n_updates = 0
+
+    def _bias_toward(self, w: np.ndarray) -> None:
+        """Set output bias so the untrained net predicts Algorithm-2 weights."""
+        self.params = dict(self.params)
+        self.params["b3"] = jnp.log(jnp.asarray(w, jnp.float32) + 1e-9)
+
+    # ---------------------------------------------------------------- #
+    def weights(self, feats: np.ndarray) -> np.ndarray:
+        """Batch inference: [B, 4] -> [B, 4] (alpha, beta, gamma, delta)."""
+        x = jnp.asarray(np.atleast_2d(feats), jnp.float32)
+        return np.asarray(_forward(self.params, x))
+
+    def observe(self, feats4: np.ndarray, hit: float) -> None:
+        self.buffer.append((np.asarray(feats4, np.float32), float(hit)))
+        if len(self.buffer) > TRAIN_BUFFER_SETS:
+            self.buffer.pop(0)
+        self.new_since_train += 1
+
+    def should_train(self, hit_rate: float) -> bool:
+        return (self.new_since_train >= TRAIN_TRIGGER_SETS
+                or hit_rate < self.prev_hit_rate - 0.05)
+
+    # ---------------------------------------------------------------- #
+    def train_once(self, hit_rate: float, latency_ms: float,
+                   n_steps: int = 30, lr: float = 1e-2) -> bool:
+        """Algorithm 5. Returns True if the new model was accepted."""
+        if len(self.buffer) < 8:
+            self.new_since_train = 0
+            return False
+        lam = 0.8 if (self.prev_hit_rate < 0.6
+                      and self.prev_latency_ms <= 20.0) else 0.4
+        feats = jnp.asarray(np.stack([f for f, _ in self.buffer]))
+        hits = jnp.asarray(np.array([h for _, h in self.buffer], np.float32))
+
+        def reward_of(params):
+            # params-dependent part of Algorithm-5's Reward: how well the
+            # fused value V(p) rank-correlates with observed hits (the
+            # lam*H and latency terms are constants w.r.t. params and would
+            # only blunt the 3% update gate).
+            w = _forward(params, feats)                     # [N, 4]
+            v = (w * feats).sum(axis=1)                      # fused value
+            corr = jnp.mean(v * hits) - jnp.mean(v) * jnp.mean(hits)
+            return lam * corr - (1 - lam) * (latency_ms
+                                             / max(self.prev_latency_ms,
+                                                   1e-6)) * 1e-4
+
+        old_params = self.params
+        old_reward = float(reward_of(old_params))
+        params, opt = self.params, self.opt
+        step = jax.jit(lambda p, o: _train_step(p, o, feats, hits, lam, lr))
+        for _ in range(n_steps):
+            params, opt = step(params, opt)
+        new_reward = float(reward_of(params))
+        self.new_since_train = 0
+        self.prev_hit_rate = hit_rate
+        self.prev_latency_ms = max(latency_ms, 1e-3)
+        # model update decision: accept iff reward improves by >= 3%
+        if new_reward - old_reward >= REWARD_GATE * max(abs(old_reward), 1e-3):
+            self.params, self.opt = params, opt
+            self.n_updates += 1
+            return True
+        self.n_rollbacks += 1
+        return False
+
+
+def _train_step(params, opt, feats, hits, lam, lr):
+    def loss_fn(p):
+        w = _forward(p, feats)
+        v = (w * feats).sum(axis=1)
+        # push fused value to rank-correlate with observed hits
+        corr = jnp.mean(v * hits) - jnp.mean(v) * jnp.mean(hits)
+        return -lam * corr + 1e-4 * sum(jnp.sum(jnp.square(x))
+                                        for x in jax.tree.leaves(p))
+    g = jax.grad(loss_fn)(params)
+    return adam_update(params, g, opt, lr=lr)
+
+
+def incremental_train(model: AWResNet, hit_rate: float,
+                      latency_ms: float) -> bool:
+    """Convenience trigger used by the cluster runtime."""
+    if model.should_train(hit_rate):
+        return model.train_once(hit_rate, latency_ms)
+    return False

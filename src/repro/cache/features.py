@@ -1,0 +1,121 @@
+"""Innovation 2 — four-dimensional path features with exponential decay.
+
+Feature snapshot per cached path (all normalized to [0,1], §5.3.2-2):
+
+  f1 normalized access frequency   freq(p)/max_freq        (1000-query window)
+  f2 normalized co-occurrence      co_count(p)/max_co      (with Top-100 paths)
+  f3 normalized recency            1 - (now-last)/window   (dynamic window)
+  f4 path matching contribution    match_freq/total_freq
+
+Decay: f_i(t) = clip(f_i(0) · e^{-t/tau}, 0, 1), tau = 300 s.
+
+Dynamic statistical window (§5.4-1): 30 s (F >= 20 q/s), 60 s (5 < F < 20),
+120 s (F <= 5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict, deque
+
+__all__ = ["FeatureTracker", "TAU", "dynamic_window"]
+
+TAU = 300.0
+FREQ_WINDOW_QUERIES = 1000
+TOP_K_COOCCUR = 100
+
+
+def dynamic_window(queries_per_s: float) -> float:
+    if queries_per_s >= 20:
+        return 30.0
+    if queries_per_s > 5:
+        return 60.0
+    return 120.0
+
+
+@dataclasses.dataclass
+class _PathStats:
+    freq: int = 0
+    co_count: int = 0
+    last_time: float = 0.0
+    first_time: float = 0.0
+    match_freq: int = 0
+    total_freq: int = 0
+    avg_degree: float = 1.0
+
+
+class FeatureTracker:
+    """Sliding-window statistics for every observed path signature."""
+
+    def __init__(self) -> None:
+        self.stats: dict[object, _PathStats] = defaultdict(_PathStats)
+        self.window: deque[tuple[float, tuple]] = deque()  # (time, sig-group)
+        self.query_times: deque[float] = deque()
+        self.now: float = 0.0
+
+    # ---------------------------------------------------------------- #
+    # recording
+    # ---------------------------------------------------------------- #
+    def record_query(self, t_s: float, sigs: list[object],
+                     matched: dict[object, bool],
+                     avg_degree: dict[object, float] | None = None) -> None:
+        """One query accessed paths `sigs`; matched[sig]=True if the path
+        contributed to final matches (feeds f4)."""
+        self.now = max(self.now, t_s)
+        self.query_times.append(t_s)
+        while self.query_times and self.query_times[0] < t_s - 300.0:
+            self.query_times.popleft()
+        group = tuple(sigs)
+        self.window.append((t_s, group))
+        while len(self.window) > FREQ_WINDOW_QUERIES:
+            self.window.popleft()
+        for s in sigs:
+            st = self.stats[s]
+            if st.freq == 0:
+                st.first_time = t_s
+            st.freq += 1
+            st.last_time = t_s
+            st.total_freq += 1
+            if matched.get(s, False):
+                st.match_freq += 1
+            if avg_degree and s in avg_degree:
+                st.avg_degree = avg_degree[s]
+        # co-occurrence with current top-100 signatures
+        top = self.top_signatures(TOP_K_COOCCUR)
+        top_set = set(top)
+        for s in sigs:
+            if top_set & (set(sigs) - {s}):
+                self.stats[s].co_count += 1
+
+    def top_signatures(self, k: int) -> list[object]:
+        return sorted(self.stats, key=lambda s: -self.stats[s].freq)[:k]
+
+    def queries_per_s(self) -> float:
+        if len(self.query_times) < 2:
+            return 0.0
+        span = self.query_times[-1] - self.query_times[0]
+        return len(self.query_times) / max(span, 1e-6)
+
+    # ---------------------------------------------------------------- #
+    # feature extraction
+    # ---------------------------------------------------------------- #
+    def features(self, sig: object) -> tuple[float, float, float, float]:
+        """(f1, f2, f3, f4) with decay, normalized to [0,1]."""
+        st = self.stats[sig]
+        max_freq = max((x.freq for x in self.stats.values()), default=1)
+        max_co = max((x.co_count for x in self.stats.values()), default=1)
+        win = dynamic_window(self.queries_per_s())
+        f1 = st.freq / max(max_freq, 1)
+        f2 = st.co_count / max(max_co, 1)
+        f3 = max(0.0, 1.0 - (self.now - st.last_time) / win)
+        f4 = st.match_freq / st.total_freq if st.total_freq > 0 else 0.0
+        age = self.now - st.first_time
+        decay = math.exp(-age / TAU)
+        return (min(max(f1 * decay, 0.0), 1.0),
+                min(max(f2 * decay, 0.0), 1.0),
+                min(max(f3, 0.0), 1.0),          # recency is already time-aware
+                min(max(f4 * decay, 0.0), 1.0))
+
+    def avg_degree(self, sig: object) -> float:
+        return self.stats[sig].avg_degree

@@ -1,0 +1,271 @@
+"""Two-level cache hierarchy + adaptive tiered eviction (Algorithms 3 & 4).
+
+Access priority (strict, §5.2):
+  master cache -> master memory(index) -> slave cache -> slave memory.
+
+Cache value (§5.3.2-3):
+  V(p) = alpha·f1 + beta·f2 + gamma·f3·d̄(p) + delta·f4
+
+Eviction (Algorithm 4): dynamic trigger T_up from (hit rate, latency);
+tiered labels: protected (V >= 0.5·maxV and (Top-50 pattern or d̄ >= theta_d)),
+normal (0.2..0.5·maxV, evicted ascending by V), evictable (< 0.2·maxV).
+
+theta_d (§5.4-2): max(quantile95(degrees)/2, 10).
+
+Baselines for benchmarks: LRUCache, LFUCache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Hashable
+
+import numpy as np
+
+__all__ = ["dynamic_trigger", "protected_degree_threshold", "ValueCache",
+           "TwoLevelCache", "LRUCache", "LFUCache", "AccessResult"]
+
+
+def dynamic_trigger(hit_rate: float, latency_ms: float) -> float:
+    """T_up per §5.3.2-4."""
+    if hit_rate >= 0.8 and latency_ms <= 10.0:
+        return 0.95
+    if 0.6 <= hit_rate < 0.8 and 10.0 < latency_ms <= 20.0:
+        return 0.90
+    return 0.80
+
+
+def protected_degree_threshold(degrees: np.ndarray) -> float:
+    """theta_d = max(quantile95 / 2, 10) over valid vertex degrees."""
+    d = np.asarray(degrees)
+    d = d[d >= 0]
+    if d.size == 0:
+        return 10.0
+    return max(float(np.quantile(d, 0.95)) / 2.0, 10.0)
+
+
+@dataclasses.dataclass
+class AccessResult:
+    data: Any
+    source: str          # master_cache|master_memory|slave_cache|slave_memory|not_found
+    latency_ms: float
+    cross_node: bool
+
+
+# --------------------------------------------------------------------------- #
+# single-level value cache (the building block for both levels)
+# --------------------------------------------------------------------------- #
+class ValueCache:
+    """Capacity-bounded map with V(p)-driven tiered eviction (Algorithm 4)."""
+
+    def __init__(self, capacity: int, theta_d: float = 10.0) -> None:
+        self.capacity = max(int(capacity), 1)
+        self.theta_d = theta_d
+        self.store: dict[Hashable, Any] = {}
+        self.value: dict[Hashable, float] = {}
+        self.avg_deg: dict[Hashable, float] = {}
+        self.freq: dict[Hashable, int] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -------------------------------------------------------------- #
+    def get(self, key: Hashable) -> Any | None:
+        if key in self.store:
+            self.hits += 1
+            self.freq[key] = self.freq.get(key, 0) + 1
+            return self.store[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: Hashable, data: Any, value: float,
+            avg_deg: float = 1.0, hit_rate: float = 1.0,
+            latency_ms: float = 1.0) -> None:
+        self.store[key] = data
+        self.value[key] = float(value)
+        self.avg_deg[key] = float(avg_deg)
+        self.freq[key] = self.freq.get(key, 0)
+        self.maybe_evict(hit_rate, latency_ms)
+
+    def update_value(self, key: Hashable, value: float) -> None:
+        if key in self.value:
+            self.value[key] = float(value)
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.hits + self.misses
+        return self.hits / t if t else 0.0
+
+    def utilization(self) -> float:
+        return len(self.store) / self.capacity
+
+    # -------------------------------------------------------------- #
+    def maybe_evict(self, hit_rate: float, latency_ms: float) -> int:
+        """Algorithm 4. Returns number of evicted entries."""
+        t_up = dynamic_trigger(hit_rate, latency_ms)
+        if self.utilization() <= t_up:
+            return 0
+        t_low = t_up - 0.1
+        max_v = max(self.value.values(), default=0.0)
+        top50 = set(sorted(self.freq, key=lambda k: -self.freq[k])[:50])
+        protected, normal, evictable = [], [], []
+        for k, v in self.value.items():
+            if v >= 0.5 * max_v and (k in top50
+                                     or self.avg_deg.get(k, 0.0) >= self.theta_d):
+                protected.append(k)
+            elif v >= 0.2 * max_v:
+                normal.append(k)
+            else:
+                evictable.append(k)
+        n_evicted = 0
+        for k in evictable:
+            self._drop(k)
+            n_evicted += 1
+        normal.sort(key=lambda k: self.value.get(k, 0.0))
+        i = 0
+        while self.utilization() > t_low and i < len(normal):
+            self._drop(normal[i])
+            n_evicted += 1
+            i += 1
+        # pathological: everything protected but still over hard capacity
+        while len(self.store) > self.capacity:
+            k = min(self.value, key=self.value.get)
+            self._drop(k)
+            n_evicted += 1
+        self.evictions += n_evicted
+        return n_evicted
+
+    def _drop(self, key: Hashable) -> None:
+        self.store.pop(key, None)
+        self.value.pop(key, None)
+        self.avg_deg.pop(key, None)
+        self.freq.pop(key, None)
+
+
+# --------------------------------------------------------------------------- #
+# two-level master/slave hierarchy (Algorithm 3)
+# --------------------------------------------------------------------------- #
+# modeled access latencies (virtual ms) per storage tier
+LAT_MASTER_CACHE = 0.05
+LAT_MASTER_MEMORY = 0.2
+LAT_SLAVE_CACHE = 0.5     # includes one network hop
+LAT_SLAVE_MEMORY = 2.0
+
+
+class TwoLevelCache:
+    """Master (global Top-500) + per-slave (local Top-100) caches."""
+
+    def __init__(self, n_slaves: int, master_capacity: int = 500,
+                 slave_capacity: int = 100, theta_d: float = 10.0) -> None:
+        self.master = ValueCache(master_capacity, theta_d)
+        self.slaves = [ValueCache(slave_capacity, theta_d)
+                       for _ in range(n_slaves)]
+        # master memory index: key -> slave id owning the path data
+        self.location: dict[Hashable, int] = {}
+        self.cross_node_accesses = 0
+        self.total_accesses = 0
+
+    def register(self, key: Hashable, slave_id: int) -> None:
+        self.location[key] = slave_id
+
+    # -------------------------------------------------------------- #
+    def access(self, key: Hashable, slave_data: dict[int, dict[Hashable, Any]],
+               ) -> AccessResult:
+        """Algorithm 3: strict priority access."""
+        self.total_accesses += 1
+        # Step 1: master cache
+        d = self.master.get(key)
+        if d is not None:
+            return AccessResult(d, "master_cache", LAT_MASTER_CACHE, False)
+        # Step 2: master memory index
+        if key not in self.location:
+            return AccessResult(None, "not_found", LAT_MASTER_MEMORY, False)
+        sid = self.location[key]
+        self.cross_node_accesses += 1
+        # Step 3: slave cache
+        d = self.slaves[sid].get(key)
+        if d is not None:
+            return AccessResult(d, "slave_cache", LAT_SLAVE_CACHE, True)
+        # Step 4: slave memory (full path storage)
+        store = slave_data.get(sid, {})
+        if key in store:
+            return AccessResult(store[key], "slave_memory", LAT_SLAVE_MEMORY,
+                                True)
+        return AccessResult(None, "not_found", LAT_SLAVE_MEMORY, True)
+
+    def admit(self, key: Hashable, data: Any, value: float, avg_deg: float,
+              slave_id: int, hit_rate: float, latency_ms: float,
+              master_threshold: float = 0.0) -> None:
+        """Admission: slave cache always considers; master takes high-V paths."""
+        self.slaves[slave_id].put(key, data, value, avg_deg, hit_rate,
+                                  latency_ms)
+        if value >= master_threshold:
+            self.master.put(key, data, value, avg_deg, hit_rate, latency_ms)
+
+    @property
+    def hit_rate(self) -> float:
+        h = self.master.hits + sum(s.hits for s in self.slaves)
+        m = self.master.misses
+        t = self.total_accesses
+        return h / t if t else 0.0
+
+
+# --------------------------------------------------------------------------- #
+# baselines
+# --------------------------------------------------------------------------- #
+class LRUCache:
+    def __init__(self, capacity: int) -> None:
+        self.capacity = max(int(capacity), 1)
+        self.store: OrderedDict[Hashable, Any] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Hashable) -> Any | None:
+        if key in self.store:
+            self.store.move_to_end(key)
+            self.hits += 1
+            return self.store[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: Hashable, data: Any, **_: Any) -> None:
+        self.store[key] = data
+        self.store.move_to_end(key)
+        while len(self.store) > self.capacity:
+            self.store.popitem(last=False)
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.hits + self.misses
+        return self.hits / t if t else 0.0
+
+
+class LFUCache:
+    def __init__(self, capacity: int) -> None:
+        self.capacity = max(int(capacity), 1)
+        self.store: dict[Hashable, Any] = {}
+        self.freq: dict[Hashable, int] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Hashable) -> Any | None:
+        if key in self.store:
+            self.freq[key] += 1
+            self.hits += 1
+            return self.store[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: Hashable, data: Any, **_: Any) -> None:
+        self.store[key] = data
+        self.freq.setdefault(key, 0)
+        while len(self.store) > self.capacity:
+            k = min(self.freq, key=self.freq.get)
+            self.store.pop(k, None)
+            self.freq.pop(k, None)
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.hits + self.misses
+        return self.hits / t if t else 0.0

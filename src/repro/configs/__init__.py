@@ -1,0 +1,37 @@
+"""Architecture registry: ``--arch <id>`` -> ArchSpec.
+
+One module per assigned architecture (public-literature configs, exact
+numbers from the assignment table) + ``gnnpe`` for the paper's own system.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "yi-6b", "h2o-danube-1.8b", "glm4-9b", "qwen2-moe-a2.7b",
+    "deepseek-v3-671b",
+    "egnn", "gatedgcn", "nequip", "meshgraphnet",
+    "bert4rec",
+]
+
+_MODULES = {
+    "yi-6b": "yi_6b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "glm4-9b": "glm4_9b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "egnn": "egnn",
+    "gatedgcn": "gatedgcn",
+    "nequip": "nequip",
+    "meshgraphnet": "meshgraphnet",
+    "bert4rec": "bert4rec",
+    "gnnpe": "gnnpe",
+}
+
+
+def get_spec(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.spec()

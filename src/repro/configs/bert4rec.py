@@ -1,0 +1,32 @@
+"""bert4rec [arXiv:1904.06690]: bidirectional sequential recommender.
+
+embed_dim=64 n_blocks=2 n_heads=2 seq_len=200; item table 10^6 rows
+(matching the retrieval_cand candidate count) row-sharded over 'model'.
+Encoder-only: no decode shapes exist in this family by construction.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.common import RECSYS_SHAPES, ArchSpec
+from repro.configs.families import build_recsys_cell
+from repro.models.bert4rec import Bert4RecConfig
+
+
+def make_config() -> Bert4RecConfig:
+    return Bert4RecConfig(n_items=1_000_000, embed_dim=64, n_blocks=2,
+                          n_heads=2, seq_len=200, d_ff=256)
+
+
+def make_smoke_config() -> Bert4RecConfig:
+    return Bert4RecConfig(n_items=512, embed_dim=32, n_blocks=2, n_heads=2,
+                          seq_len=16, d_ff=64, dtype=jnp.float32)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(arch_id="bert4rec", family="recsys",
+                    shapes=RECSYS_SHAPES, skip_shapes={},
+                    make_config=make_config,
+                    make_smoke_config=make_smoke_config,
+                    build_cell=build_recsys_cell)

@@ -1,0 +1,172 @@
+"""Shared config machinery: ArchSpec / CellSpec, shape sets, sharding specs.
+
+A *cell* is one (architecture x input shape); `build_cell` returns the jit
+target (step_fn), its abstract inputs (ShapeDtypeStructs — never allocated),
+and in/out shardings for the production mesh.  The same CellSpec backs the
+multi-pod dry-run, the roofline analysis, and the smoke tests (which call
+the cells with tiny real arrays instead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ShapeDef", "ArchSpec", "CellSpec", "LM_SHAPES", "GNN_SHAPES",
+           "RECSYS_SHAPES", "lm_param_specs", "tree_replicated", "sds"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    """One input-shape cell."""
+
+    shape_id: str
+    kind: str                 # train | prefill | decode | serve
+    dims: dict[str, int]
+
+
+LM_SHAPES = {
+    "train_4k": ShapeDef("train_4k", "train",
+                         {"seq_len": 4096, "global_batch": 256}),
+    "prefill_32k": ShapeDef("prefill_32k", "prefill",
+                            {"seq_len": 32768, "global_batch": 32}),
+    "decode_32k": ShapeDef("decode_32k", "decode",
+                           {"seq_len": 32768, "global_batch": 128}),
+    "long_500k": ShapeDef("long_500k", "decode",
+                          {"seq_len": 524288, "global_batch": 1}),
+}
+
+GNN_SHAPES = {
+    "full_graph_sm": ShapeDef("full_graph_sm", "train",
+                              {"n_nodes": 2708, "n_edges": 10556,
+                               "d_feat": 1433, "d_out": 7}),
+    "minibatch_lg": ShapeDef("minibatch_lg", "train",
+                             {"n_nodes": 169_984, "n_edges": 337_920,
+                              "d_feat": 602, "d_out": 41}),
+    "ogb_products": ShapeDef("ogb_products", "train",
+                             {"n_nodes": 2_449_029, "n_edges": 61_859_140,
+                              "d_feat": 100, "d_out": 47}),
+    "molecule": ShapeDef("molecule", "train",
+                         {"n_nodes": 30, "n_edges": 64, "batch": 128,
+                          "d_feat": 16, "d_out": 1}),
+}
+
+RECSYS_SHAPES = {
+    "train_batch": ShapeDef("train_batch", "train", {"batch": 65_536}),
+    "serve_p99": ShapeDef("serve_p99", "serve", {"batch": 512}),
+    "serve_bulk": ShapeDef("serve_bulk", "serve", {"batch": 262_144}),
+    "retrieval_cand": ShapeDef("retrieval_cand", "serve",
+                               {"batch": 1, "n_candidates": 1_000_000}),
+}
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything the dry-run needs for one (arch x shape x mesh) compile."""
+
+    step_fn: Callable
+    abstract_args: tuple          # ShapeDtypeStructs, positional
+    in_shardings: Any             # pytree of PartitionSpec (or None)
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    static_argnums: tuple = ()
+    description: str = ""
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    arch_id: str
+    family: str                                  # lm | gnn | recsys | engine
+    shapes: dict[str, ShapeDef]
+    skip_shapes: dict[str, str]                  # shape_id -> reason
+    make_config: Callable[[], Any]
+    make_smoke_config: Callable[[], Any]
+    build_cell: Callable[[Any, ShapeDef, tuple], CellSpec]
+    # build_cell(config, shape, dp_axes) — dp_axes = ('data',) or
+    # ('pod','data') depending on the mesh.
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def tree_replicated(tree: Any) -> Any:
+    return jax.tree.map(lambda _: P(), tree)
+
+
+# --------------------------------------------------------------------------- #
+# LM parameter sharding (Megatron col/row split + optional FSDP)
+# --------------------------------------------------------------------------- #
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_uq", "w_uk", "w_uv",
+        "shared_gate", "shared_up", "w1"}
+_ROW = {"wo", "w_down", "shared_down", "w2"}
+
+
+def _leaf_spec(path: tuple, leaf, cfg, fsdp: bool, dp: tuple) -> P:
+    """PartitionSpec for one LM param leaf, keyed by its name + rank.
+
+    Stacked layer params carry a leading n_layers dim (from the scan
+    vmap-init), detected by rank vs the name's base rank.
+    """
+    name = None
+    stacked = False
+    for k in reversed(path):
+        if isinstance(k, jax.tree_util.DictKey):
+            name = str(k.key)
+            break
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey) and \
+                str(k.key) in ("dense_stack", "moe_stack"):
+            stacked = True
+    rank = len(leaf.shape)
+    base = rank - 1 if stacked else rank
+    lead = (None,) if stacked else ()
+
+    if name in ("embed",):
+        return P(*lead, "model", dp[-1] if fsdp else None)
+    if name in ("w_out",):
+        return P(*lead, dp[-1] if fsdp else None, "model")
+    if name in ("router", "router_bias", "w_dq", "w_dkv", "w_kpe",
+                "q_norm", "kv_norm", "ln1", "ln2", "final_norm", "pos",
+                "mtp_norm", "mtp_proj", "b", "b1", "b2", "b3"):
+        return P(*lead, *([None] * base))
+    if name in _COL:
+        if base == 3:                     # MoE expert stack [E, d, f]
+            return P(*lead, "model", dp[-1] if fsdp else None, None)
+        return P(*lead, dp[-1] if fsdp else None, "model")
+    if name in _ROW:
+        if base == 3:                     # [E, f, d]
+            return P(*lead, "model", dp[-1] if fsdp else None, None)
+        return P(*lead, "model", dp[-1] if fsdp else None)
+    return P(*lead, *([None] * base))
+
+
+def lm_param_specs(params_shape: Any, cfg: Any, fsdp: bool,
+                   dp: tuple) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _leaf_spec(p, l, cfg, fsdp, dp), params_shape)
+
+
+def opt_state_specs(opt_shape: Any, param_specs: Any) -> Any:
+    """Adam mu/nu mirror the param specs; 8-bit flat codes shard over data.
+
+    Works because AdamState / Adam8bitState are NamedTuples whose first
+    fields mirror the param tree structure.
+    """
+    from repro.train.optimizer import Adam8bitState, AdamState
+
+    if isinstance(opt_shape, AdamState):
+        return AdamState(mu=param_specs, nu=param_specs, step=P())
+    if isinstance(opt_shape, Adam8bitState):
+        # codes are flat multiples of 256 -> always divisible by 'data';
+        # scales (1/256 the size) may be tiny/odd -> replicated.
+        flat = jax.tree.map(lambda _: P("data"), opt_shape.mu_codes)
+        flat_s = jax.tree.map(lambda _: P(), opt_shape.mu_scales)
+        return Adam8bitState(mu_codes=flat, mu_scales=flat_s,
+                             nu_codes=flat, nu_scales=flat_s, step=P())
+    return jax.tree.map(lambda _: P(), opt_shape)

@@ -1,0 +1,22 @@
+"""egnn [arXiv:2102.09844]: E(n)-equivariant GNN, 4L d_hidden=64."""
+
+from __future__ import annotations
+
+from repro.configs.common import GNN_SHAPES, ArchSpec
+from repro.configs.families import build_gnn_cell
+from repro.models.gnn_zoo import GNNConfigZoo
+
+
+def make_config() -> GNNConfigZoo:
+    return GNNConfigZoo(arch="egnn", n_layers=4, d_hidden=64, d_in=16)
+
+
+def make_smoke_config() -> GNNConfigZoo:
+    return GNNConfigZoo(arch="egnn", n_layers=2, d_hidden=16, d_in=8)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(arch_id="egnn", family="gnn", shapes=GNN_SHAPES,
+                    skip_shapes={}, make_config=make_config,
+                    make_smoke_config=make_smoke_config,
+                    build_cell=build_gnn_cell)

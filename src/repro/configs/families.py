@@ -1,0 +1,238 @@
+"""Family-level cell builders: LM / GNN / RecSys -> CellSpec.
+
+Each builder returns the jit target for one (arch x shape): a full train
+step (fwd + bwd + clip + optimizer), a prefill, or a one-token decode step,
+together with abstract inputs and PartitionSpecs for the production mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.common import (CellSpec, ShapeDef, lm_param_specs,
+                                  opt_state_specs, sds)
+from repro.train.optimizer import (adam8bit_init, adam8bit_update, adamw_init,
+                                   adamw_update, clip_by_global_norm)
+
+__all__ = ["build_lm_cell", "build_gnn_cell", "build_recsys_cell"]
+
+
+# --------------------------------------------------------------------------- #
+# LM family
+# --------------------------------------------------------------------------- #
+def _lm_optimizer(cfg):
+    """deepseek-scale models use 8-bit blockwise optimizer states."""
+    if cfg.param_count() > 50e9:
+        return adam8bit_init, functools.partial(adam8bit_update, lr=3e-4,
+                                                weight_decay=0.1)
+    return adamw_init, functools.partial(adamw_update, lr=3e-4)
+
+
+def make_lm_train_step(cfg):
+    from repro.models.transformer import lm_loss
+    _, opt_update = _lm_optimizer(cfg)
+
+    def train_step(params, opt, tokens, labels):
+        loss, grads = jax.value_and_grad(lm_loss)(params, cfg, tokens, labels)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt = opt_update(params, grads, opt)
+        return params, opt, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def build_lm_cell(cfg, shape: ShapeDef, dp: tuple) -> CellSpec:
+    from repro.models import transformer as T
+
+    b = shape.dims["global_batch"]
+    s = shape.dims["seq_len"]
+    fsdp = cfg.param_count() * 2 > 200e9     # bf16 bytes vs ~0.2TB threshold
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: T.init_params(cfg, k), key)
+    pspecs = lm_param_specs(params_shape, cfg, fsdp, dp)
+
+    if shape.kind == "train":
+        opt_init, _ = _lm_optimizer(cfg)
+        opt_shape = jax.eval_shape(opt_init, params_shape)
+        ospecs = opt_state_specs(opt_shape, pspecs)
+        step = make_lm_train_step(cfg)
+        args = (params_shape, opt_shape,
+                sds((b, s), jnp.int32), sds((b, s), jnp.int32))
+        in_sh = (pspecs, ospecs, P(dp, None), P(dp, None))
+        out_sh = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
+        return CellSpec(step, args, in_sh, out_sh, donate_argnums=(0, 1),
+                        description=f"train_step b={b} s={s}")
+
+    if shape.kind == "prefill":
+        def prefill_last(params, tokens):
+            logits = T.prefill(params, cfg, tokens)
+            return logits[:, -1, :]
+        args = (params_shape, sds((b, s), jnp.int32))
+        return CellSpec(prefill_last, args, (pspecs, P(dp, None)),
+                        P(dp, "model"),
+                        description=f"prefill b={b} s={s}")
+
+    # decode: one new token against a seq_len-deep KV cache
+    t_max = s if cfg.sliding_window is None else min(s, cfg.sliding_window)
+    cache_shape = jax.eval_shape(
+        lambda: T.init_cache(cfg, b, t_max))
+    # batch=1 (long_500k) cannot shard over dp — replicate batch, shard KV
+    bdp = dp if b >= 32 else None
+    if cfg.mla is None:
+        cspecs = {"k": P(None, bdp, "model", None, None),
+                  "v": P(None, bdp, "model", None, None),
+                  "slot_pos": P()}
+    else:
+        cspecs = {"ckv": P(None, bdp, "model", None),
+                  "kpe": P(None, bdp, "model", None),
+                  "slot_pos": P()}
+
+    def serve_step(params, cache, tokens, pos):
+        return T.decode_step(params, cfg, cache, tokens, pos)
+
+    args = (params_shape, cache_shape, sds((b, 1), jnp.int32),
+            sds((), jnp.int32))
+    in_sh = (pspecs, cspecs, P(bdp, None), P())
+    out_sh = (P(bdp, None, "model"), cspecs)
+    return CellSpec(serve_step, args, in_sh, out_sh, donate_argnums=(1,),
+                    description=f"decode b={b} kv={t_max} (pos={s - 1})")
+
+
+# --------------------------------------------------------------------------- #
+# GNN family
+# --------------------------------------------------------------------------- #
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _gnn_dims(shape: ShapeDef) -> tuple[int, int]:
+    n = shape.dims["n_nodes"] * shape.dims.get("batch", 1)
+    e = shape.dims["n_edges"] * shape.dims.get("batch", 1)
+    # symmetric message passing (both directions) + pad-to-shard: node and
+    # edge counts round up to a multiple of 8192 so row sharding divides the
+    # production meshes (16 and 2x16); pad rows are dead via the masks.
+    return _round_up(n, 8192), _round_up(2 * e, 8192)
+
+
+def build_gnn_cell(cfg, shape: ShapeDef, dp: tuple) -> CellSpec:
+    from repro.models.gnn_zoo import GNNBatch, gnn_loss, init_gnn
+
+    n, e = _gnn_dims(shape)
+    d_in = shape.dims["d_feat"]
+    d_out = shape.dims["d_out"]
+    import dataclasses as dc
+    cfg = dc.replace(cfg, d_in=d_in, d_out=d_out)
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: init_gnn(cfg, k), key)
+    pspecs = jax.tree.map(lambda _: P(), params_shape)
+    opt_shape = jax.eval_shape(adamw_init, params_shape)
+    ospecs = opt_state_specs(opt_shape, pspecs)
+
+    def train_step(params, opt, nodes, positions, src, dst, nmask, emask,
+                   targets):
+        batch = GNNBatch(nodes=nodes, positions=positions, edge_src=src,
+                         edge_dst=dst,
+                         edge_feats=jnp.zeros((src.shape[0], 0), nodes.dtype),
+                         node_mask=nmask, edge_mask=emask,
+                         graph_ids=jnp.zeros(nodes.shape[0], jnp.int32))
+        loss, grads = jax.value_and_grad(gnn_loss)(params, cfg, batch,
+                                                   targets)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt = adamw_update(params, grads, opt, lr=1e-3)
+        return params, opt, {"loss": loss, "grad_norm": gnorm}
+
+    f32 = jnp.float32
+    args = (params_shape, opt_shape, sds((n, d_in), f32), sds((n, 3), f32),
+            sds((e,), jnp.int32), sds((e,), jnp.int32), sds((n,), jnp.bool_),
+            sds((e,), jnp.bool_), sds((n, d_out), f32))
+    # node/target ROWS shard over dp (feature dims are odd published sizes);
+    # edges shard over dp; gathers/scatters across rows become halo
+    # collectives under GSPMD.
+    in_sh = (pspecs, ospecs, P(dp, None), P(dp, None), P(dp), P(dp), P(dp),
+             P(dp), P(dp, None))
+    out_sh = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
+    return CellSpec(train_step, args, in_sh, out_sh, donate_argnums=(0, 1),
+                    description=f"gnn train n={n} e={e}")
+
+
+# --------------------------------------------------------------------------- #
+# RecSys family (BERT4Rec)
+# --------------------------------------------------------------------------- #
+N_MASKED = 20          # cloze positions per sequence
+N_NEG = 8192           # shared sampled-softmax negatives
+TOPK_BULK = 100
+
+
+def build_recsys_cell(cfg, shape: ShapeDef, dp: tuple) -> CellSpec:
+    from repro.models import bert4rec as B
+
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: B.init_bert4rec(cfg, k), key)
+
+    def pspec_leaf(path, leaf):
+        name = None
+        for k in reversed(path):
+            if isinstance(k, jax.tree_util.DictKey):
+                name = str(k.key)
+                break
+        if name == "items":
+            return P("model", None)
+        return P(*([None] * len(leaf.shape)))
+
+    pspecs = jax.tree_util.tree_map_with_path(pspec_leaf, params_shape)
+    b = shape.dims["batch"]
+    s = cfg.seq_len
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        ospecs = opt_state_specs(opt_shape, pspecs)
+
+        def train_step(params, opt, items, mask_pos, labels, negatives):
+            def loss_fn(p):
+                return B.sampled_cloze_loss(p, cfg, items, mask_pos, labels,
+                                            negatives)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            params, opt = adamw_update(params, grads, opt, lr=1e-3)
+            return params, opt, {"loss": loss, "grad_norm": gnorm}
+
+        args = (params_shape, opt_shape, sds((b, s), jnp.int32),
+                sds((b, N_MASKED), jnp.int32), sds((b, N_MASKED), jnp.int32),
+                sds((N_NEG,), jnp.int32))
+        in_sh = (pspecs, ospecs, P(dp, None), P(dp, None), P(dp, None), P())
+        out_sh = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
+        return CellSpec(train_step, args, in_sh, out_sh,
+                        donate_argnums=(0, 1),
+                        description=f"cloze train b={b} s={s}")
+
+    if shape.shape_id == "retrieval_cand":
+        c = shape.dims["n_candidates"]
+
+        def retrieve(params, items, candidates):
+            return B.retrieval_scores(params, cfg, items, candidates)
+
+        # batch=1: replicate the user sequence; candidates shard over model
+        args = (params_shape, sds((b, s), jnp.int32), sds((c,), jnp.int32))
+        return CellSpec(retrieve, args, (pspecs, P(), P("model")),
+                        P(None, "model"),
+                        description=f"retrieval b={b} cands={c}")
+
+    if shape.shape_id == "serve_bulk":
+        def bulk(params, items):
+            return B.bulk_topk_scores(params, cfg, items, k=TOPK_BULK)
+        args = (params_shape, sds((b, s), jnp.int32))
+        return CellSpec(bulk, args, (pspecs, P(dp, None)),
+                        (P(dp, None), P(dp, None)),
+                        description=f"bulk top-{TOPK_BULK} b={b}")
+
+    def serve(params, items):
+        return B.serve_scores(params, cfg, items)
+
+    args = (params_shape, sds((b, s), jnp.int32))
+    return CellSpec(serve, args, (pspecs, P(dp, None)), P(dp, "model"),
+                    description=f"serve b={b}")

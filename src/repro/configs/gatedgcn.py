@@ -1,0 +1,22 @@
+"""gatedgcn [arXiv:2003.00982]: gated aggregator MPNN, 16L d_hidden=70."""
+
+from __future__ import annotations
+
+from repro.configs.common import GNN_SHAPES, ArchSpec
+from repro.configs.families import build_gnn_cell
+from repro.models.gnn_zoo import GNNConfigZoo
+
+
+def make_config() -> GNNConfigZoo:
+    return GNNConfigZoo(arch="gatedgcn", n_layers=16, d_hidden=70, d_in=16)
+
+
+def make_smoke_config() -> GNNConfigZoo:
+    return GNNConfigZoo(arch="gatedgcn", n_layers=3, d_hidden=16, d_in=8)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(arch_id="gatedgcn", family="gnn", shapes=GNN_SHAPES,
+                    skip_shapes={}, make_config=make_config,
+                    make_smoke_config=make_smoke_config,
+                    build_cell=build_gnn_cell)

@@ -1,0 +1,33 @@
+"""glm4-9b [hf:THUDM/glm-4-9b]: RoPE, GQA kv=2.
+
+40L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=151552, head_dim=128.
+Full attention — long_500k skipped.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.common import LM_SHAPES, ArchSpec
+from repro.configs.families import build_lm_cell
+from repro.models.transformer import LMConfig
+
+
+def make_config() -> LMConfig:
+    return LMConfig(name="glm4-9b", n_layers=40, d_model=4096, n_heads=32,
+                    n_kv_heads=2, head_dim=128, d_ff=13696, vocab=151552,
+                    rope_theta=10000.0)
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(name="glm4-smoke", n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=2, head_dim=16, d_ff=160, vocab=256,
+                    dtype=jnp.float32, remat=False)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="glm4-9b", family="lm", shapes=LM_SHAPES,
+        skip_shapes={"long_500k": "full attention — skipped per DESIGN.md"},
+        make_config=make_config, make_smoke_config=make_smoke_config,
+        build_cell=build_lm_cell)

@@ -1,0 +1,79 @@
+"""gnnpe: the paper's own system as a selectable config.
+
+Wraps the distributed GNN-PE engine (cluster build + workload) the same way
+the arch zoo wraps its models.  The 'cell' lowered for the dry-run is the
+batched dominance-embedding encoder + index probe — the device-side hot path
+of the engine (host-side orchestration stays on CPU by design).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.common import ArchSpec, CellSpec, ShapeDef, sds
+from repro.core.gnn import GNNConfig
+
+GNNPE_SHAPES = {
+    "embed_1m": ShapeDef("embed_1m", "train",
+                         {"n_vertices": 1_000_000, "n_edges": 6_000_000,
+                          "n_paths": 4_000_000, "path_len": 2,
+                          "n_labels": 32}),
+    "probe_64k": ShapeDef("probe_64k", "serve",
+                          {"n_boxes": 65_536, "dim": 12,
+                           "n_queries": 1024}),
+}
+
+
+def make_config() -> GNNConfig:
+    return GNNConfig(n_labels=32, d_embed=2, d_label=2, n_hops=2)
+
+
+def make_smoke_config() -> GNNConfig:
+    return GNNConfig(n_labels=8, d_embed=2, d_label=2, n_hops=2)
+
+
+def build_cell(cfg: GNNConfig, shape: ShapeDef, dp: tuple) -> CellSpec:
+    from repro.core import gnn as gnn_lib
+
+    if shape.shape_id == "probe_64k":
+        n, d, q = (shape.dims[k] for k in ("n_boxes", "dim", "n_queries"))
+
+        def probe(uppers, queries):
+            # batched dominance filter (the aR-tree leaf test)
+            return jnp.all(queries[:, None, :] <= uppers[None, :, :] + 1e-5,
+                           axis=-1)
+
+        args = (sds((n, d), jnp.float32), sds((q, d), jnp.float32))
+        return CellSpec(probe, args, (P(dp, None), P()), P(None, dp),
+                        description=f"dominance probe q={q} n={n}")
+
+    nv = shape.dims["n_vertices"]
+    ne = 2 * shape.dims["n_edges"]
+    npth = shape.dims["n_paths"]
+    lp1 = shape.dims["path_len"] + 1
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: gnn_lib.init_params(cfg, k), key)
+    pspecs = jax.tree.map(lambda _: P(), params_shape)
+
+    def embed(params, labels, degrees, src, dst, paths):
+        return gnn_lib.encode_paths(params, cfg, labels, degrees, src, dst,
+                                    paths)
+
+    args = (params_shape, sds((nv,), jnp.int32), sds((nv,), jnp.int32),
+            sds((ne,), jnp.int32), sds((ne,), jnp.int32),
+            sds((npth, lp1), jnp.int32))
+    in_sh = (pspecs, P(), P(), P(dp), P(dp), P(dp, None))
+    return CellSpec(embed, args, in_sh, P(dp, None),
+                    static_argnums=(),
+                    description=f"embed paths n={npth}")
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(arch_id="gnnpe", family="engine", shapes=GNNPE_SHAPES,
+                    skip_shapes={}, make_config=make_config,
+                    make_smoke_config=make_smoke_config,
+                    build_cell=build_cell)

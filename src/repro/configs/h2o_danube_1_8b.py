@@ -1,0 +1,34 @@
+"""h2o-danube-1.8b [arXiv:2401.16818; hf]: llama+mistral mix with SWA.
+
+24L d_model=2560 32H (GQA kv=8) d_ff=6912 vocab=32000, head_dim=80,
+sliding window 4096 — the one LM arch that RUNS long_500k (KV bounded by
+the window).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.common import LM_SHAPES, ArchSpec
+from repro.configs.families import build_lm_cell
+from repro.models.transformer import LMConfig
+
+
+def make_config() -> LMConfig:
+    return LMConfig(name="h2o-danube-1.8b", n_layers=24, d_model=2560,
+                    n_heads=32, n_kv_heads=8, head_dim=80, d_ff=6912,
+                    vocab=32000, rope_theta=10000.0, sliding_window=4096)
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(name="danube-smoke", n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=2, head_dim=16, d_ff=160, vocab=256,
+                    sliding_window=8, dtype=jnp.float32, remat=False)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="h2o-danube-1.8b", family="lm", shapes=LM_SHAPES,
+        skip_shapes={},
+        make_config=make_config, make_smoke_config=make_smoke_config,
+        build_cell=build_lm_cell)

@@ -1,0 +1,24 @@
+"""meshgraphnet [arXiv:2010.03409]: 15L d_hidden=128 sum aggregator."""
+
+from __future__ import annotations
+
+from repro.configs.common import GNN_SHAPES, ArchSpec
+from repro.configs.families import build_gnn_cell
+from repro.models.gnn_zoo import GNNConfigZoo
+
+
+def make_config() -> GNNConfigZoo:
+    return GNNConfigZoo(arch="meshgraphnet", n_layers=15, d_hidden=128,
+                        d_in=16, mlp_layers=2)
+
+
+def make_smoke_config() -> GNNConfigZoo:
+    return GNNConfigZoo(arch="meshgraphnet", n_layers=3, d_hidden=16, d_in=8,
+                        mlp_layers=2)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(arch_id="meshgraphnet", family="gnn", shapes=GNN_SHAPES,
+                    skip_shapes={}, make_config=make_config,
+                    make_smoke_config=make_smoke_config,
+                    build_cell=build_gnn_cell)

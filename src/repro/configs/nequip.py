@@ -1,0 +1,29 @@
+"""nequip [arXiv:2101.03164]: O(3)-equivariant interatomic potentials.
+
+5L d_hidden=32 l_max=2 n_rbf=8 cutoff=5, E(3) tensor products (real SH +
+Gaunt coupling).  Non-molecular shapes get stub 3-D positions from
+input_specs (the modality frontend rule).
+"""
+
+from __future__ import annotations
+
+from repro.configs.common import GNN_SHAPES, ArchSpec
+from repro.configs.families import build_gnn_cell
+from repro.models.gnn_zoo import GNNConfigZoo
+
+
+def make_config() -> GNNConfigZoo:
+    return GNNConfigZoo(arch="nequip", n_layers=5, d_hidden=32, d_in=16,
+                        l_max=2, n_rbf=8, cutoff=5.0)
+
+
+def make_smoke_config() -> GNNConfigZoo:
+    return GNNConfigZoo(arch="nequip", n_layers=2, d_hidden=8, d_in=8,
+                        l_max=2, n_rbf=4, cutoff=5.0)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(arch_id="nequip", family="gnn", shapes=GNN_SHAPES,
+                    skip_shapes={}, make_config=make_config,
+                    make_smoke_config=make_smoke_config,
+                    build_cell=build_gnn_cell)

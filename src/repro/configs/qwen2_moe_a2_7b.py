@@ -1,0 +1,43 @@
+"""qwen2-moe-a2.7b [hf:Qwen/Qwen1.5-MoE-A2.7B]: 4 shared + 60 routed top-4.
+
+24L d_model=2048 16H (kv=16) d_ff_expert=1408 vocab=151936, MoE 60e top-4.
+60 experts are padded to 64 for clean EP over the 16-way model axis
+(DESIGN.md §6); the 4 pad experts are dead (router columns exist but
+receive no load-balancing pressure and can be pruned at export).
+Full attention — long_500k skipped.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.common import LM_SHAPES, ArchSpec
+from repro.configs.families import build_lm_cell
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+
+def make_config() -> LMConfig:
+    return LMConfig(
+        name="qwen2-moe-a2.7b", n_layers=24, d_model=2048, n_heads=16,
+        n_kv_heads=16, head_dim=128, d_ff=5632, vocab=151936,
+        rope_theta=1_000_000.0,
+        moe=MoEConfig(n_experts=64, top_k=4, d_ff_expert=1408, n_shared=4,
+                      router="softmax"))
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(
+        name="qwen2-moe-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, head_dim=16, d_ff=160, vocab=256, dtype=jnp.float32,
+        remat=False,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, n_shared=1,
+                      capacity_factor=4.0))
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="qwen2-moe-a2.7b", family="lm", shapes=LM_SHAPES,
+        skip_shapes={"long_500k": "full attention — skipped per DESIGN.md"},
+        make_config=make_config, make_smoke_config=make_smoke_config,
+        build_cell=build_lm_cell)

@@ -1,0 +1,36 @@
+"""yi-6b [arXiv:2403.04652; hf]: llama-arch GQA.
+
+32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000, head_dim=128.
+Full attention — long_500k is skipped (sub-quadratic required; see
+DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.common import LM_SHAPES, ArchSpec
+from repro.configs.families import build_lm_cell
+from repro.models.transformer import LMConfig
+
+
+def make_config() -> LMConfig:
+    return LMConfig(name="yi-6b", n_layers=32, d_model=4096, n_heads=32,
+                    n_kv_heads=4, head_dim=128, d_ff=11008, vocab=64000,
+                    rope_theta=5_000_000.0)
+
+
+def make_smoke_config() -> LMConfig:
+    return LMConfig(name="yi-6b-smoke", n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=2, head_dim=16, d_ff=160, vocab=256,
+                    dtype=jnp.float32, remat=False)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="yi-6b", family="lm", shapes=LM_SHAPES,
+        skip_shapes={"long_500k": "full attention (no sub-quadratic path); "
+                                  "524k decode KV would be quadratic-cost "
+                                  "prefill-side — skipped per DESIGN.md"},
+        make_config=make_config, make_smoke_config=make_smoke_config,
+        build_cell=build_lm_cell)

@@ -1,0 +1,179 @@
+"""Array-packed aggregate R-tree (aR-tree) over path dominance embeddings.
+
+Pointer-chasing R-trees are hostile to TPUs, so the index is adapted to a
+*packed, level-order array layout* (DESIGN.md §3):
+
+  * bulk load: points are sorted by a monotone space-filling key (the sum of
+    normalized dims — ideal for dominance probes, which prune on upper
+    bounds), then packed bottom-up with branching factor B; children of node
+    i at level k are exactly nodes [i*B, (i+1)*B) at level k+1.
+  * every node stores its box (lower/upper over descendants) and the
+    aggregate leaf count (the "a" in aR-tree).
+  * a dominance probe o(p_q) descends level-by-level: a subtree survives iff
+    all_j q[j] <= upper[j] (+eps).  Host traversal short-circuits dead
+    subtrees (numpy); the device path evaluates whole levels as dense masked
+    AND-reduces (see repro/kernels/dominance for the Pallas leaf filter).
+
+Zero false dismissals: for a true match, q <= z element-wise, and z <= upper
+for every ancestor box of z, so no ancestor is ever pruned.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["ARTree", "build_artree", "query_dominating", "query_stats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ARTree:
+    """Packed aR-tree.
+
+    Attributes:
+      lowers/uppers: per level (root -> leaf-parents), float32 [M_k, D] boxes.
+      counts:        per level, int64 [M_k] aggregate leaf counts.
+      points:        float32 [N, D] leaf points in packed (sorted) order.
+      perm:          int64 [N] original index of packed point i.
+      branching:     fan-out B.
+    """
+
+    lowers: list[np.ndarray]
+    uppers: list[np.ndarray]
+    counts: list[np.ndarray]
+    points: np.ndarray
+    perm: np.ndarray
+    branching: int
+
+    @property
+    def n_points(self) -> int:
+        return int(self.points.shape[0])
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.lowers)
+
+    @property
+    def dim(self) -> int:
+        return int(self.points.shape[1])
+
+    def nbytes(self) -> int:
+        total = self.points.nbytes + self.perm.nbytes
+        for lo, up, c in zip(self.lowers, self.uppers, self.counts):
+            total += lo.nbytes + up.nbytes + c.nbytes
+        return total
+
+    def mbr_summary(self) -> bytes:
+        """Root MBR summary broadcast by the central node (<1KB metadata)."""
+        if not self.lowers:
+            return b""
+        return (self.lowers[0].tobytes() + self.uppers[0].tobytes()
+                + np.int64(self.n_points).tobytes())
+
+    def serialize(self) -> bytes:
+        """Canonical byte image (migrated verbatim; CRC32'd in Algorithm 1)."""
+        import io
+        buf = io.BytesIO()
+        np.savez(buf, points=self.points, perm=self.perm,
+                 branching=np.int64(self.branching),
+                 n_levels=np.int64(self.n_levels),
+                 **{f"lo{k}": self.lowers[k] for k in range(self.n_levels)},
+                 **{f"up{k}": self.uppers[k] for k in range(self.n_levels)},
+                 **{f"ct{k}": self.counts[k] for k in range(self.n_levels)})
+        return buf.getvalue()
+
+    @staticmethod
+    def deserialize(blob: bytes) -> "ARTree":
+        import io
+        z = np.load(io.BytesIO(blob))
+        n_levels = int(z["n_levels"])
+        return ARTree(
+            lowers=[z[f"lo{k}"] for k in range(n_levels)],
+            uppers=[z[f"up{k}"] for k in range(n_levels)],
+            counts=[z[f"ct{k}"] for k in range(n_levels)],
+            points=z["points"], perm=z["perm"],
+            branching=int(z["branching"]),
+        )
+
+
+def build_artree(points: np.ndarray, branching: int = 16) -> ARTree:
+    """Bulk-load a packed aR-tree from [N, D] float32 points."""
+    points = np.asarray(points, dtype=np.float32)
+    n, d = points.shape
+    if n == 0:
+        return ARTree([], [], [], points, np.zeros(0, np.int64), branching)
+    # monotone space-filling sort key: sum of min-max normalized dims
+    lo, hi = points.min(axis=0), points.max(axis=0)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    key = ((points - lo) / span).sum(axis=1)
+    perm = np.argsort(key, kind="stable").astype(np.int64)
+    pts = points[perm]
+
+    lowers: list[np.ndarray] = []
+    uppers: list[np.ndarray] = []
+    counts: list[np.ndarray] = []
+    cur_lo, cur_up = pts, pts
+    cur_ct = np.ones(n, dtype=np.int64)
+    while cur_lo.shape[0] > 1:
+        m = cur_lo.shape[0]
+        n_parents = (m + branching - 1) // branching
+        pad = n_parents * branching - m
+        lo_p = np.concatenate([cur_lo, np.full((pad, d), np.inf, np.float32)])
+        up_p = np.concatenate([cur_up, np.full((pad, d), -np.inf, np.float32)])
+        ct_p = np.concatenate([cur_ct, np.zeros(pad, np.int64)])
+        cur_lo = lo_p.reshape(n_parents, branching, d).min(axis=1)
+        cur_up = up_p.reshape(n_parents, branching, d).max(axis=1)
+        cur_ct = ct_p.reshape(n_parents, branching).sum(axis=1)
+        lowers.append(cur_lo)
+        uppers.append(cur_up)
+        counts.append(cur_ct)
+    lowers.reverse(); uppers.reverse(); counts.reverse()
+    return ARTree(lowers, uppers, counts, pts, perm, branching)
+
+
+def query_dominating(tree: ARTree, q: np.ndarray, eps: float = 1e-5
+                     ) -> tuple[np.ndarray, dict[str, int]]:
+    """All ORIGINAL point indices z with q <= z element-wise.
+
+    Host short-circuit traversal; returns (indices, stats) where stats counts
+    nodes visited/pruned per level (feeds Prune(S_i) and PE-score labels).
+    """
+    n = tree.n_points
+    stats = {"nodes_visited": 0, "nodes_pruned": 0, "leaves_tested": 0}
+    if n == 0:
+        return np.zeros(0, np.int64), stats
+    q = np.asarray(q, dtype=np.float32)
+    b = tree.branching
+    alive = np.arange(tree.lowers[0].shape[0], dtype=np.int64) if tree.lowers \
+        else np.zeros(0, np.int64)
+    for lvl in range(tree.n_levels):
+        up = tree.uppers[lvl][alive]
+        ok = (q[None, :] <= up + eps).all(axis=1)
+        stats["nodes_visited"] += int(alive.size)
+        stats["nodes_pruned"] += int((~ok).sum())
+        alive = alive[ok]
+        if lvl + 1 < tree.n_levels:
+            nxt = tree.lowers[lvl + 1].shape[0]
+            child = (alive[:, None] * b + np.arange(b)[None, :]).ravel()
+            alive = child[child < nxt]
+        else:
+            child = (alive[:, None] * b + np.arange(b)[None, :]).ravel()
+            alive = child[child < n]
+    if tree.n_levels == 0:  # single point, no internal levels
+        alive = np.arange(n, dtype=np.int64)
+    stats["leaves_tested"] = int(alive.size)
+    ok = (q[None, :] <= tree.points[alive] + eps).all(axis=1)
+    return tree.perm[alive[ok]], stats
+
+
+def query_stats(tree: ARTree, q: np.ndarray, eps: float = 1e-5) -> dict[str, float]:
+    """Pruning statistics of one probe (pruning rate vs brute force)."""
+    idx, stats = query_dominating(tree, q, eps)
+    n = max(tree.n_points, 1)
+    return {
+        "n_candidates": float(idx.size),
+        "pruning_rate": 1.0 - stats["leaves_tested"] / n,
+        "selectivity": 1.0 - idx.size / n,
+        **{k: float(v) for k, v in stats.items()},
+    }

@@ -1,0 +1,190 @@
+"""Training of dominance embeddings + embedded path tables.
+
+The certified-monotone GNN (repro/core/gnn.py) guarantees that every TRUE
+match satisfies o(p_q) <= o(p_z).  Training therefore has a single job:
+**maximize pruning power** — make non-matching (negative) pairs violate
+dominance in at least one dimension, by as wide a margin as possible.
+
+Negative pairs are mined from the shard itself: pairs of same-length paths
+whose label sequences differ, or whose label sequences agree but whose local
+structures differ (different degrees / neighbor label multisets).
+
+The trainer is plain JAX (Adam implemented in repro/train/optimizer.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gnn as gnn_lib
+from repro.core.graph import LabeledGraph
+from repro.core.paths import PathTable, enumerate_paths
+
+__all__ = ["EmbeddedPaths", "embed_shard_paths", "train_dominance_gnn",
+           "dominates", "mine_negative_pairs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddedPaths:
+    """Embedded path table of a single length within one shard.
+
+    Attributes:
+      vertices:   int32 [P, l+1] path vertex ids (shard-local).
+      embeddings: float32 [P, D] dominance embeddings, D=(l+1)*(d_e+d_l).
+      length:     path length l (edges).
+    """
+
+    vertices: np.ndarray
+    embeddings: np.ndarray
+    length: int
+
+    @property
+    def n_paths(self) -> int:
+        return int(self.vertices.shape[0])
+
+
+def dominates(q: jnp.ndarray, z: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Element-wise dominance test q <= z (+eps slack), batched over z.
+
+    q: [D], z: [N, D]  ->  bool [N].  eps absorbs float roundoff so true
+    matches (which satisfy <= exactly in exact arithmetic) are never lost.
+    """
+    return jnp.all(q[None, :] <= z + eps, axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# negative-pair mining
+# --------------------------------------------------------------------------- #
+def mine_negative_pairs(graph: LabeledGraph, table: PathTable,
+                        n_pairs: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Sample (a, b) index pairs where path a is NOT a position-wise match of b.
+
+    A pair is negative if the label sequences differ in some position in both
+    orientations, or labels agree but a has a strictly larger degree
+    somewhere (then a cannot embed into b at that position).
+    """
+    rng = np.random.default_rng(seed)
+    p = table.n_paths
+    if p < 2:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    a = rng.integers(0, p, size=3 * n_pairs)
+    b = rng.integers(0, p, size=3 * n_pairs)
+    la = graph.labels[table.vertices[a]]
+    lb = graph.labels[table.vertices[b]]
+    deg = np.diff(graph.indptr).astype(np.int64)
+    da = deg[table.vertices[a]]
+    db = deg[table.vertices[b]]
+    lab_mismatch = (la != lb).any(axis=1) & (la != lb[:, ::-1]).any(axis=1)
+    deg_excess = (da > db).any(axis=1) & (da > db[:, ::-1]).any(axis=1)
+    neg = lab_mismatch | deg_excess
+    a, b = a[neg][:n_pairs], b[neg][:n_pairs]
+    return a.astype(np.int64), b.astype(np.int64)
+
+
+# --------------------------------------------------------------------------- #
+# training
+# --------------------------------------------------------------------------- #
+def _pruning_loss(params: dict[str, Any], cfg: gnn_lib.GNNConfig,
+                  labels: jnp.ndarray, degrees: jnp.ndarray,
+                  edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
+                  paths: jnp.ndarray, neg_a: jnp.ndarray, neg_b: jnp.ndarray,
+                  margin: float = 0.1) -> jnp.ndarray:
+    """Hinge loss: negative pair (a,b) should violate dominance a<=b.
+
+    violation amount = max_j (o_a[j] - o_b[j]); want it >= margin.
+    Also a small weight-decay-like tightness term keeps embeddings bounded.
+    """
+    vemb = gnn_lib.vertex_embeddings(params, cfg, labels, degrees,
+                                     edge_src, edge_dst)
+    struct = gnn_lib.path_embeddings(vemb, paths)
+    oa, ob = struct[neg_a], struct[neg_b]
+    viol_fwd = jnp.max(oa - ob, axis=-1)
+    lp1 = paths.shape[1]
+    d = vemb.shape[1]
+    ob_rev = ob.reshape(-1, lp1, d)[:, ::-1, :].reshape(ob.shape)
+    viol_rev = jnp.max(oa - ob_rev, axis=-1)
+    # must violate in BOTH orientations to be prunable
+    viol = jnp.minimum(viol_fwd, viol_rev)
+    hinge = jax.nn.relu(margin - viol).mean()
+    tight = 1e-4 * (struct ** 2).mean()
+    return hinge + tight
+
+
+def train_dominance_gnn(graph: LabeledGraph, cfg: gnn_lib.GNNConfig,
+                        path_length: int = 2, n_steps: int = 200,
+                        n_pairs: int = 2048, lr: float = 3e-2,
+                        seed: int = 0) -> dict[str, Any]:
+    """Train one shard's GNN to maximize pruning power. Returns params."""
+    from repro.train.optimizer import adam_init, adam_update
+
+    key = jax.random.PRNGKey(seed)
+    params = gnn_lib.init_params(cfg, key)
+    table = enumerate_paths(graph, path_length, max_paths=4096, seed=seed)
+    if table.n_paths < 2:
+        return params
+    neg_a, neg_b = mine_negative_pairs(graph, table, n_pairs, seed=seed)
+    if neg_a.size == 0:  # graph too uniform to mine negatives; nothing to do
+        return params
+
+    src = jnp.asarray(np.repeat(np.arange(graph.n_vertices),
+                                np.diff(graph.indptr)))
+    dst = jnp.asarray(graph.indices.astype(np.int64))
+    labels = jnp.asarray(graph.labels)
+    degrees = jnp.asarray(graph.degrees)
+    paths = jnp.asarray(table.vertices)
+    na, nb = jnp.asarray(neg_a), jnp.asarray(neg_b)
+
+    loss_fn = lambda p: _pruning_loss(p, cfg, labels, degrees, src, dst,
+                                      paths, na, nb)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt):
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, g, opt, lr=lr)
+        return params, opt, loss
+
+    for _ in range(n_steps):
+        params, opt, loss = step(params, opt)
+    return params
+
+
+def embed_shard_paths(graph: LabeledGraph, params: dict[str, Any],
+                      cfg: gnn_lib.GNNConfig, max_length: int = 3,
+                      max_paths_per_length: int | None = 200_000,
+                      seed: int = 0) -> dict[int, EmbeddedPaths]:
+    """Enumerate + embed all paths of length 1..max_length of one shard."""
+    src = jnp.asarray(np.repeat(np.arange(graph.n_vertices),
+                                np.diff(graph.indptr)))
+    dst = jnp.asarray(graph.indices.astype(np.int64))
+    labels = jnp.asarray(graph.labels)
+    degrees = jnp.asarray(graph.degrees)
+    out: dict[int, EmbeddedPaths] = {}
+    for l in range(1, max_length + 1):
+        table = enumerate_paths(graph, l, max_paths=max_paths_per_length,
+                                seed=seed)
+        if table.n_paths == 0:
+            continue
+        emb = gnn_lib.encode_paths(params, cfg, labels, degrees, src, dst,
+                                   jnp.asarray(table.vertices))
+        out[l] = EmbeddedPaths(vertices=table.vertices,
+                               embeddings=np.asarray(emb), length=l)
+    return out
+
+
+def embed_query_paths(query: LabeledGraph, params: dict[str, Any],
+                      cfg: gnn_lib.GNNConfig, table: PathTable) -> np.ndarray:
+    """Embed query paths with the SAME encoder (query stars are sub-stars)."""
+    src = jnp.asarray(np.repeat(np.arange(query.n_vertices),
+                                np.diff(query.indptr)))
+    dst = jnp.asarray(query.indices.astype(np.int64))
+    emb = gnn_lib.encode_paths(params, cfg, jnp.asarray(query.labels),
+                               jnp.asarray(query.degrees), src, dst,
+                               jnp.asarray(table.vertices))
+    return np.asarray(emb)

@@ -1,0 +1,168 @@
+"""Certified-monotone GNN encoder for GNN-PE path dominance embeddings.
+
+GNN-PE (Ye/Lian/Chen, VLDB'24) trains a GNN so that the embedding o(p) of a
+query path p_q *dominates* (element-wise <=) the embedding of every data path
+p_z it matches, enabling index pruning with no false dismissals.  The
+original paper trains a GAT and drives dominance violations to zero on
+enumerated sub-star pairs; exactness then rests on the trained net.
+
+We adapt this to a **certified monotone GNN** whose dominance guarantee holds
+*by construction* for every true match (see DESIGN.md §3):
+
+  o^(0)(v) = f_theta(label(v))                       (free, learned)
+  o^(t)(v) = o^(t-1)(v)
+           + sum_{u in N(v)} [ g_t(label(u)) + A_t · o^(t-1)(u) ]
+
+with g_t >= 0 (softplus-parameterized) and A_t >= 0 element-wise.  Under any
+subgraph isomorphism F: q -> G, star_q(v) is a sub-star of star_G(F(v)) with
+equal center labels, so by induction over t:  o^(t)(v) <= o^(t)(F(v)).
+A path embedding is the *per-position concatenation* of vertex embeddings, so
+dominance transfers position-wise to whole paths.  Training (embedding.py)
+maximizes pruning power: it pushes NON-matching pairs to violate dominance.
+
+Everything is a plain pytree of jnp arrays — no flax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "GNNConfig", "init_params", "vertex_embeddings", "path_embeddings",
+    "label_embeddings", "encode_paths", "encode_graph",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    """Per-shard dominance-embedding GNN configuration.
+
+    Attributes:
+      n_labels: label vocabulary size (global — shared across shards so that
+                cross-shard paths embed consistently).
+      d_embed:  structural embedding dims per vertex (paper default d=2).
+      d_label:  label-embedding dims per vertex (o_0 in the paper).
+      n_hops:   monotone message-passing layers.
+      max_degree: degree normalization cap for the degree feature.
+    """
+
+    n_labels: int
+    d_embed: int = 2
+    d_label: int = 2
+    n_hops: int = 2
+    max_degree: int = 64
+
+    @property
+    def d_vertex(self) -> int:
+        return self.d_embed + self.d_label
+
+
+def init_params(cfg: GNNConfig, key: jax.Array) -> dict[str, Any]:
+    """Parameter pytree.
+
+    raw_g / raw_a are unconstrained; the forward pass maps them through
+    softplus to enforce non-negativity (the dominance certificate).
+    """
+    ks = jax.random.split(key, 2 + 2 * cfg.n_hops)
+    params: dict[str, Any] = {
+        # free center-label embedding table [n_labels, d_embed]
+        "f_center": 0.5 + 0.1 * jax.random.normal(
+            ks[0], (cfg.n_labels, cfg.d_embed), dtype=jnp.float32),
+        # non-negative degree coefficient (degree is monotone under matching)
+        "raw_deg": jnp.full((cfg.d_embed,), -2.0, dtype=jnp.float32),
+    }
+    for t in range(cfg.n_hops):
+        params[f"raw_g{t}"] = -1.0 + 0.3 * jax.random.normal(
+            ks[1 + 2 * t], (cfg.n_labels, cfg.d_embed), dtype=jnp.float32)
+        params[f"raw_a{t}"] = -2.0 + 0.3 * jax.random.normal(
+            ks[2 + 2 * t], (cfg.d_embed, cfg.d_embed), dtype=jnp.float32)
+    return params
+
+
+def _nonneg(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.softplus(x)
+
+
+def vertex_embeddings(params: dict[str, Any], cfg: GNNConfig,
+                      labels: jnp.ndarray, degrees: jnp.ndarray,
+                      edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
+                      n_vertices: int | None = None) -> jnp.ndarray:
+    """Monotone message passing -> [n, d_embed] certified embeddings.
+
+    edge_src/edge_dst: symmetric directed edge list (both directions present).
+    """
+    n = n_vertices if n_vertices is not None else labels.shape[0]
+    deg = jnp.minimum(degrees.astype(jnp.float32), cfg.max_degree)
+    o = params["f_center"][labels] + deg[:, None] * _nonneg(params["raw_deg"])
+    for t in range(cfg.n_hops):
+        g = _nonneg(params[f"raw_g{t}"])[labels]            # [n, d]
+        a = _nonneg(params[f"raw_a{t}"])                    # [d, d]
+        msg = g[edge_src] + o[edge_src] @ a                 # [E, d]
+        o = o + jax.ops.segment_sum(msg, edge_dst, num_segments=n)
+    return o
+
+
+def path_embeddings(vemb: jnp.ndarray, path_vertices: jnp.ndarray) -> jnp.ndarray:
+    """Per-position concatenation: [P, l+1] ids -> [P, (l+1)*d].
+
+    Query path position i aligns with data path position i (or reversed — the
+    matcher probes both orientations), so dominance holds position-wise.
+    """
+    p, lp1 = path_vertices.shape
+    return vemb[path_vertices].reshape(p, lp1 * vemb.shape[1])
+
+
+def label_embeddings(labels: jnp.ndarray, path_vertices: jnp.ndarray,
+                     n_labels: int, d_label: int = 2) -> jnp.ndarray:
+    """o_0(p): per-position label projection, concatenated.
+
+    Uses a fixed strictly-positive random projection of the one-hot label:
+    equal labels => equal values (dominance holds with equality for true
+    matches); different labels almost surely violate dominance in some dim,
+    which is exactly the paper's label-based pruning.
+    """
+    rng = np.random.default_rng(0xC0FFEE)
+    proj = jnp.asarray(rng.uniform(0.1, 1.0, size=(n_labels, d_label)),
+                       dtype=jnp.float32)
+    pl = proj[labels[path_vertices]]                 # [P, l+1, d_label]
+    p, lp1 = path_vertices.shape
+    return pl.reshape(p, lp1 * d_label)
+
+
+def interleave_path_embedding(struct: jnp.ndarray, lab: jnp.ndarray,
+                              lp1: int) -> jnp.ndarray:
+    """Combine per-position structural + label dims into one vector.
+
+    Layout: [pos0_struct, pos0_label, pos1_struct, pos1_label, ...] so a
+    length-l path embeds into (l+1)*(d_embed+d_label) dims.
+    """
+    p = struct.shape[0]
+    s = struct.reshape(p, lp1, -1)
+    l = lab.reshape(p, lp1, -1)
+    return jnp.concatenate([s, l], axis=2).reshape(p, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def encode_graph(params: dict[str, Any], cfg: GNNConfig,
+                 labels: jnp.ndarray, degrees: jnp.ndarray,
+                 edge_src: jnp.ndarray, edge_dst: jnp.ndarray) -> jnp.ndarray:
+    """All vertex embeddings of a (shard) graph."""
+    return vertex_embeddings(params, cfg, labels, degrees, edge_src, edge_dst)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def encode_paths(params: dict[str, Any], cfg: GNNConfig,
+                 labels: jnp.ndarray, degrees: jnp.ndarray,
+                 edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
+                 path_vertices: jnp.ndarray) -> jnp.ndarray:
+    """Full path embedding o(p) (structural + label dims interleaved)."""
+    vemb = vertex_embeddings(params, cfg, labels, degrees, edge_src, edge_dst)
+    struct = path_embeddings(vemb, path_vertices)
+    lab = label_embeddings(labels, path_vertices, cfg.n_labels, cfg.d_label)
+    return interleave_path_embedding(struct, lab, path_vertices.shape[1])

@@ -1,0 +1,193 @@
+"""Labeled graph substrate.
+
+Static undirected vertex-labeled graphs stored in CSR form (numpy on host,
+convertible to JAX arrays for device compute).  This is the data model shared
+by the GNN-PE engine (paper), the partitioner, and the GNN architecture zoo.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+__all__ = ["LabeledGraph", "degree_stats", "power_law_exponent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LabeledGraph:
+    """Undirected vertex-labeled graph, CSR adjacency (both directions stored).
+
+    Attributes:
+      labels:    int32 [n]      vertex label ids.
+      indptr:    int64 [n+1]    CSR row pointers.
+      indices:   int32 [2*m]    CSR column indices (symmetric).
+      edge_list: int32 [m, 2]   unique undirected edges with u < v.
+    """
+
+    labels: np.ndarray
+    indptr: np.ndarray
+    indices: np.ndarray
+    edge_list: np.ndarray
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def from_edges(
+        n_vertices: int,
+        edges: np.ndarray | Sequence[tuple[int, int]],
+        labels: np.ndarray | Sequence[int],
+    ) -> "LabeledGraph":
+        edges = np.asarray(edges, dtype=np.int32).reshape(-1, 2)
+        labels = np.asarray(labels, dtype=np.int32)
+        if labels.shape[0] != n_vertices:
+            raise ValueError("labels length must equal n_vertices")
+        # canonicalize: undirected, no self loops, dedup, u < v
+        u = np.minimum(edges[:, 0], edges[:, 1])
+        v = np.maximum(edges[:, 0], edges[:, 1])
+        keep = u != v
+        u, v = u[keep], v[keep]
+        uniq = np.unique(np.stack([u, v], axis=1), axis=0)
+        if uniq.size and (uniq.min() < 0 or uniq.max() >= n_vertices):
+            raise ValueError("edge endpoint out of range")
+        # symmetric CSR
+        src = np.concatenate([uniq[:, 0], uniq[:, 1]])
+        dst = np.concatenate([uniq[:, 1], uniq[:, 0]])
+        order = np.argsort(src, kind="stable")
+        src, dst = src[order], dst[order]
+        indptr = np.zeros(n_vertices + 1, dtype=np.int64)
+        np.add.at(indptr, src + 1, 1)
+        indptr = np.cumsum(indptr)
+        return LabeledGraph(
+            labels=labels,
+            indptr=indptr,
+            indices=dst.astype(np.int32),
+            edge_list=uniq.astype(np.int32),
+        )
+
+    @staticmethod
+    def from_networkx(g, labels: np.ndarray | None = None) -> "LabeledGraph":
+        import networkx as nx  # local import: optional dependency path
+
+        g = nx.convert_node_labels_to_integers(g, ordering="sorted")
+        n = g.number_of_nodes()
+        edges = np.asarray(list(g.edges()), dtype=np.int32).reshape(-1, 2)
+        if labels is None:
+            labels = np.asarray(
+                [g.nodes[i].get("label", 0) for i in range(n)], dtype=np.int32
+            )
+        return LabeledGraph.from_edges(n, edges, labels)
+
+    # ------------------------------------------------------------------ #
+    # basic properties
+    # ------------------------------------------------------------------ #
+    @property
+    def n_vertices(self) -> int:
+        return int(self.labels.shape[0])
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.edge_list.shape[0])
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int32)
+
+    @property
+    def n_labels(self) -> int:
+        return int(self.labels.max()) + 1 if self.n_vertices else 0
+
+    def avg_degree(self) -> float:
+        return float(self.degrees.mean()) if self.n_vertices else 0.0
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v] : self.indptr[v + 1]]
+
+    def has_edge(self, u: int, v: int) -> bool:
+        return bool(np.isin(v, self.neighbors(u)).any())
+
+    def label_set(self) -> np.ndarray:
+        return np.unique(self.labels)
+
+    # ------------------------------------------------------------------ #
+    # views
+    # ------------------------------------------------------------------ #
+    def induced_subgraph(
+        self, vertex_ids: np.ndarray | Iterable[int]
+    ) -> tuple["LabeledGraph", np.ndarray]:
+        """Induced subgraph; returns (subgraph, old_vertex_ids)."""
+        vids = np.unique(np.asarray(list(vertex_ids), dtype=np.int32))
+        remap = -np.ones(self.n_vertices, dtype=np.int64)
+        remap[vids] = np.arange(vids.shape[0])
+        e = self.edge_list
+        keep = (remap[e[:, 0]] >= 0) & (remap[e[:, 1]] >= 0)
+        sub_edges = remap[e[keep]].astype(np.int32)
+        return (
+            LabeledGraph.from_edges(vids.shape[0], sub_edges, self.labels[vids]),
+            vids,
+        )
+
+    def adjacency_sets(self) -> list[set[int]]:
+        """Python adjacency sets (used by the backtracking verifier)."""
+        return [
+            set(self.indices[self.indptr[v] : self.indptr[v + 1]].tolist())
+            for v in range(self.n_vertices)
+        ]
+
+    def to_networkx(self):
+        import networkx as nx
+
+        g = nx.Graph()
+        for v in range(self.n_vertices):
+            g.add_node(v, label=int(self.labels[v]))
+        g.add_edges_from(self.edge_list.tolist())
+        return g
+
+    def serialize(self) -> bytes:
+        """Canonical byte image (used for CRC32 integrity in migration)."""
+        head = np.asarray(
+            [self.n_vertices, self.n_edges], dtype=np.int64
+        ).tobytes()
+        return (
+            head
+            + self.labels.astype(np.int32).tobytes()
+            + self.edge_list.astype(np.int32).tobytes()
+        )
+
+    @staticmethod
+    def deserialize(blob: bytes) -> "LabeledGraph":
+        n, m = np.frombuffer(blob[:16], dtype=np.int64)
+        off = 16
+        labels = np.frombuffer(blob[off : off + 4 * n], dtype=np.int32).copy()
+        off += 4 * int(n)
+        edges = np.frombuffer(blob[off : off + 8 * m], dtype=np.int32).reshape(
+            int(m), 2
+        ).copy()
+        return LabeledGraph.from_edges(int(n), edges, labels)
+
+
+def degree_stats(graph: LabeledGraph) -> dict[str, float]:
+    d = graph.degrees
+    return {
+        "avg_degree": float(d.mean()) if d.size else 0.0,
+        "max_degree": float(d.max()) if d.size else 0.0,
+        "power_law_gamma": power_law_exponent(d),
+    }
+
+
+def power_law_exponent(degrees: np.ndarray, d_min: int = 1) -> float:
+    """MLE estimate of the power-law exponent gamma, P(d) ~ d^-gamma.
+
+    Clauset-Shalizi-Newman continuous MLE restricted to d >= d_min.  Used as a
+    shard-level feature for the PE-score model (paper section 6.2.1).
+    """
+    d = degrees[degrees >= max(d_min, 1)].astype(np.float64)
+    if d.size < 2:
+        return 0.0
+    logs = np.log(d / (max(d_min, 1) - 0.5 + 0.5))  # continuous correction
+    s = logs.sum()
+    if s <= 0:
+        return 0.0
+    return float(1.0 + d.size / s)

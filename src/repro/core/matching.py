@@ -1,0 +1,247 @@
+"""Exact subgraph matching: dominance-index pruning + backtracking join.
+
+Pipeline (single shard / single graph; the distributed orchestration lives in
+repro/dist/cluster.py):
+
+  1. decompose the query into simple paths covering all edges (paths.py);
+  2. embed each query path and probe the shard's aR-tree for *dominating*
+     data paths (both orientations) — candidates are a guaranteed superset
+     of all true matches (no false dismissals);
+  3. intersect per-position path candidates into per-query-vertex candidate
+     sets (plus label + degree filters);
+  4. ordered backtracking join with exact edge/label verification.
+
+Step 4 only ever *confirms* candidates, so the end-to-end matcher is exact:
+100% precision by verification, 100% recall by the dominance certificate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Iterable
+
+import numpy as np
+
+from repro.core import gnn as gnn_lib
+from repro.core.artree import ARTree, query_dominating
+from repro.core.embedding import EmbeddedPaths, embed_query_paths
+from repro.core.graph import LabeledGraph
+from repro.core.paths import PathTable, paths_of_query
+
+__all__ = ["MatchStats", "ShardIndex", "build_shard_index",
+           "vertex_candidates", "backtrack_join", "exact_match"]
+
+
+@dataclasses.dataclass
+class MatchStats:
+    """Telemetry of one query execution (feeds PE-score + load metrics)."""
+
+    n_matches: int = 0
+    candidates_before: int = 0
+    candidates_after: int = 0
+    leaves_tested: int = 0
+    nodes_pruned: int = 0
+    filter_time_ms: float = 0.0
+    join_time_ms: float = 0.0
+    per_path: list[dict[str, Any]] = dataclasses.field(default_factory=list)
+
+    @property
+    def pruning_rate(self) -> float:
+        if self.candidates_before == 0:
+            return 0.0
+        return 1.0 - self.candidates_after / self.candidates_before
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardIndex:
+    """Per-shard index: embedded path tables + one aR-tree per path length."""
+
+    embedded: dict[int, EmbeddedPaths]
+    trees: dict[int, ARTree]
+
+    def nbytes(self) -> int:
+        total = 0
+        for ep in self.embedded.values():
+            total += ep.vertices.nbytes + ep.embeddings.nbytes
+        for t in self.trees.values():
+            total += t.nbytes()
+        return total
+
+
+def build_shard_index(graph: LabeledGraph, params: dict[str, Any],
+                      cfg: gnn_lib.GNNConfig, max_length: int = 2,
+                      branching: int = 16,
+                      max_paths_per_length: int | None = 200_000
+                      ) -> ShardIndex:
+    from repro.core.embedding import embed_shard_paths
+    from repro.core.artree import build_artree
+
+    embedded = embed_shard_paths(graph, params, cfg, max_length,
+                                 max_paths_per_length)
+    trees = {l: build_artree(ep.embeddings, branching)
+             for l, ep in embedded.items()}
+    return ShardIndex(embedded=embedded, trees=trees)
+
+
+def _reverse_embedding(emb: np.ndarray, lp1: int) -> np.ndarray:
+    """Reverse the per-position blocks of a path embedding [P, lp1*d]."""
+    p, d_total = emb.shape
+    d = d_total // lp1
+    return emb.reshape(p, lp1, d)[:, ::-1, :].reshape(p, d_total)
+
+
+def path_candidates(index: ShardIndex, q_emb: np.ndarray, length: int,
+                    stats: MatchStats | None = None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Probe one query path embedding -> (cand_vertices [C, l+1], orient [C]).
+
+    orient[c] = 0 if the data path matches the query orientation as stored,
+    1 if it matches reversed.  Both orientations are probed because a path
+    and its reverse describe the same subgraph.
+    """
+    if length not in index.trees:
+        return np.zeros((0, length + 1), np.int32), np.zeros(0, np.int8)
+    tree = index.trees[length]
+    ep = index.embedded[length]
+    idx_f, st_f = query_dominating(tree, q_emb)
+    q_rev = _reverse_embedding(q_emb[None, :], length + 1)[0]
+    idx_r, st_r = query_dominating(tree, q_rev)
+    if stats is not None:
+        stats.leaves_tested += st_f["leaves_tested"] + st_r["leaves_tested"]
+        stats.nodes_pruned += st_f["nodes_pruned"] + st_r["nodes_pruned"]
+    verts = np.concatenate([ep.vertices[idx_f], ep.vertices[idx_r][:, ::-1]])
+    orient = np.concatenate([np.zeros(idx_f.size, np.int8),
+                             np.ones(idx_r.size, np.int8)])
+    return verts, orient
+
+
+def vertex_candidates(query: LabeledGraph, data: LabeledGraph,
+                      q_tables: list[PathTable],
+                      cand_per_path: list[np.ndarray]) -> list[np.ndarray]:
+    """Per-query-vertex candidate sets (bool masks over data vertices).
+
+    Starts from the label + degree filter, then intersects the projection of
+    every path's candidates at every position.
+    """
+    n_q, n_d = query.n_vertices, data.n_vertices
+    deg_q, deg_d = query.degrees, data.degrees
+    cands = []
+    for v in range(n_q):
+        mask = (data.labels == query.labels[v]) & (deg_d >= deg_q[v])
+        cands.append(mask)
+    pos = 0
+    for table, cand in zip(q_tables, cand_per_path):
+        for r in range(table.n_paths):
+            cv = cand[r] if isinstance(cand, list) else cand
+            # cand for row r: [C, l+1] data vertices aligned to query path row r
+            qv = table.vertices[r]
+            mask_any = np.zeros((qv.shape[0], n_d), dtype=bool)
+            if cv.shape[0]:
+                for i in range(qv.shape[0]):
+                    mask_any[i, cv[:, i]] = True
+                for i, qvi in enumerate(qv):
+                    cands[qvi] &= mask_any[i]
+    return cands
+
+
+def backtrack_join(query: LabeledGraph, data: LabeledGraph,
+                   cands: list[np.ndarray], max_matches: int | None = None
+                   ) -> list[tuple[int, ...]]:
+    """Ordered backtracking with exact verification (injective, adjacency).
+
+    Query vertices are matched in ascending candidate-set size, preferring
+    vertices adjacent to already-matched ones (connected expansion).
+    """
+    n_q = query.n_vertices
+    adj_q = [set(query.neighbors(v).tolist()) for v in range(n_q)]
+    adj_d = data.adjacency_sets()
+    sizes = [int(c.sum()) for c in cands]
+    if any(s == 0 for s in sizes):
+        return []
+
+    order: list[int] = []
+    placed = set()
+    while len(order) < n_q:
+        frontier = [v for v in range(n_q) if v not in placed and
+                    (not order or adj_q[v] & placed)]
+        if not frontier:
+            frontier = [v for v in range(n_q) if v not in placed]
+        v = min(frontier, key=lambda x: sizes[x])
+        order.append(v)
+        placed.add(v)
+
+    cand_lists = [np.flatnonzero(c) for c in cands]
+    matches: list[tuple[int, ...]] = []
+    mapping = np.full(n_q, -1, dtype=np.int64)
+    used: set[int] = set()
+
+    def rec(depth: int) -> bool:
+        if depth == n_q:
+            matches.append(tuple(int(x) for x in mapping))
+            return max_matches is not None and len(matches) >= max_matches
+        v = order[depth]
+        back_nbrs = [u for u in adj_q[v] if mapping[u] >= 0]
+        for u_d in cand_lists[v]:
+            u_d = int(u_d)
+            if u_d in used:
+                continue
+            if any(u_d not in adj_d[mapping[b]] for b in back_nbrs):
+                continue
+            mapping[v] = u_d
+            used.add(u_d)
+            if rec(depth + 1):
+                return True
+            used.discard(u_d)
+            mapping[v] = -1
+        return False
+
+    rec(0)
+    return matches
+
+
+def exact_match(query: LabeledGraph, data: LabeledGraph, index: ShardIndex,
+                params: dict[str, Any], cfg: gnn_lib.GNNConfig,
+                plan: list[tuple[int, int]] | None = None,
+                max_matches: int | None = None,
+                max_path_length: int = 2) -> tuple[list[tuple[int, ...]], MatchStats]:
+    """End-to-end exact matching of `query` inside `data` via `index`.
+
+    plan: optional ordered list of (table_idx, row_idx) path execution order
+    (from repro/core/plan.py Algorithm 6); default order is as enumerated.
+    Returns (matches, stats); matches are tuples m with m[q_vertex]=d_vertex.
+    """
+    stats = MatchStats()
+    t0 = time.perf_counter()
+    q_tables = paths_of_query(query, max_path_length)
+    q_embs = [embed_query_paths(query, params, cfg, t) for t in q_tables]
+
+    # per-path candidate arrays, executed in plan order
+    exec_order: list[tuple[int, int]] = plan if plan is not None else [
+        (ti, r) for ti, t in enumerate(q_tables) for r in range(t.n_paths)]
+    cand_rows: dict[tuple[int, int], np.ndarray] = {}
+    for ti, r in exec_order:
+        table = q_tables[ti]
+        verts, _ = path_candidates(index, q_embs[ti][r], table.length, stats)
+        cand_rows[(ti, r)] = verts
+        stats.per_path.append({
+            "table": ti, "row": r, "length": table.length,
+            "n_candidates": int(verts.shape[0]),
+        })
+    stats.filter_time_ms = (time.perf_counter() - t0) * 1e3
+
+    cand_per_path = [
+        [cand_rows.get((ti, r), np.zeros((0, t.length + 1), np.int32))
+         for r in range(t.n_paths)]
+        for ti, t in enumerate(q_tables)
+    ]
+    n_total = sum(index.embedded[l].n_paths for l in index.embedded)
+    stats.candidates_before = max(n_total, 1) * max(len(exec_order), 1)
+    stats.candidates_after = sum(v.shape[0] for v in cand_rows.values())
+
+    t1 = time.perf_counter()
+    cands = vertex_candidates(query, data, q_tables, cand_per_path)
+    matches = backtrack_join(query, data, cands, max_matches)
+    stats.join_time_ms = (time.perf_counter() - t1) * 1e3
+    stats.n_matches = len(matches)
+    return matches, stats

@@ -1,0 +1,304 @@
+"""Innovation 3 — PE-score model: histogram GBDT + distributed features.
+
+PE-score(p) = PruningRate(p) × 1 / FilterTime(p)            (§6.2.1)
+PruningRate(p) = 1 − N_valid(p) / N_total(p)
+
+No XGBoost offline, so the framework carries its own histogram gradient
+boosted trees (squared loss, depth-wise complete trees).  Fitting is numpy;
+**inference is compiled JAX** — trees are packed into dense arrays
+[n_trees, n_nodes] and evaluated as a vectorized gather walk, so a whole
+query's paths are scored in one device call (paper: < 1 ms/path).
+
+Adaptive tree count (§6.2.1): num_trees = min(50 + N_sample/1000, 300).
+
+Shard-level features (§6.2.1-1): path-length ratios R_l, label-sequence
+diversity D_t, degree stats (avg, max, power-law gamma), aggregated
+path-count-weighted into global features.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import LabeledGraph, power_law_exponent
+from repro.core.paths import PathTable
+
+__all__ = ["GBDT", "fit_gbdt", "adaptive_tree_count", "ShardFeatures",
+           "shard_features", "aggregate_global_features", "path_feature_vector",
+           "PEScoreModel", "N_PATH_FEATURES"]
+
+MAX_PATH_LEN = 5
+
+
+def adaptive_tree_count(n_samples: int) -> int:
+    return int(min(50 + n_samples / 1000, 300))
+
+
+# --------------------------------------------------------------------------- #
+# histogram GBDT (numpy fit, JAX inference)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class GBDT:
+    """Complete binary trees in dense layout.
+
+    node i children are 2i+1 / 2i+2; leaves carry values; internal nodes
+    carry (feature, threshold).  feature = -1 marks "pass-through" nodes
+    (act as leaves early).
+    """
+
+    feature: np.ndarray    # int32 [T, n_nodes]
+    threshold: np.ndarray  # f32   [T, n_nodes]
+    value: np.ndarray      # f32   [T, n_nodes]
+    depth: int
+    base: float
+    lr: float
+
+    @property
+    def n_trees(self) -> int:
+        return int(self.feature.shape[0])
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(_gbdt_predict_jax(
+            jnp.asarray(self.feature), jnp.asarray(self.threshold),
+            jnp.asarray(self.value), self.depth, self.base, self.lr,
+            jnp.asarray(x, jnp.float32)))
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _gbdt_predict_jax(feature, threshold, value, depth: int, base, lr, x):
+    """Vectorized gather-walk over all trees at once.  x: [N, F] -> [N]."""
+    n = x.shape[0]
+    t = feature.shape[0]
+    node = jnp.zeros((n, t), dtype=jnp.int32)
+    for _ in range(depth):
+        feat = feature[jnp.arange(t)[None, :], node]          # [N, T]
+        thr = threshold[jnp.arange(t)[None, :], node]
+        xv = jnp.take_along_axis(x, jnp.maximum(feat, 0), axis=1)
+        go_right = (xv > thr) & (feat >= 0)
+        is_leaf = feat < 0
+        nxt = jnp.where(go_right, 2 * node + 2, 2 * node + 1)
+        node = jnp.where(is_leaf, node, nxt)
+    vals = value[jnp.arange(t)[None, :], node]                # [N, T]
+    return base + lr * vals.sum(axis=1)
+
+
+def _fit_tree(x: np.ndarray, g: np.ndarray, w: np.ndarray, depth: int,
+              n_bins: int, min_child: int
+              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One regression tree on residuals g with sample weights w."""
+    n, f = x.shape
+    n_nodes = 2 ** (depth + 1) - 1
+    feature = -np.ones(n_nodes, dtype=np.int32)
+    threshold = np.zeros(n_nodes, dtype=np.float32)
+    value = np.zeros(n_nodes, dtype=np.float32)
+    node_of = np.zeros(n, dtype=np.int64)
+
+    # precompute per-feature bin edges (quantile bins)
+    edges = []
+    for j in range(f):
+        qs = np.quantile(x[:, j], np.linspace(0, 1, n_bins + 1)[1:-1])
+        edges.append(np.unique(qs))
+
+    for node in range(2 ** depth - 1):       # internal nodes, level order
+        mask = node_of == node
+        if mask.sum() < 2 * min_child:
+            value[node] = (np.average(g[mask], weights=w[mask])
+                           if mask.any() else 0.0)
+            continue
+        gm, wm, xm = g[mask], w[mask], x[mask]
+        sum_g, sum_w = (gm * wm).sum(), wm.sum()
+        parent_score = (sum_g ** 2) / (sum_w + 1e-9)
+        best = (0.0, -1, 0.0)                # (gain, feat, thr)
+        for j in range(f):
+            for thr in edges[j]:
+                left = xm[:, j] <= thr
+                wl = wm[left].sum()
+                if wl < min_child or (sum_w - wl) < min_child:
+                    continue
+                gl = (gm[left] * wm[left]).sum()
+                score = (gl ** 2) / (wl + 1e-9) + \
+                        ((sum_g - gl) ** 2) / (sum_w - wl + 1e-9)
+                gain = score - parent_score
+                if gain > best[0]:
+                    best = (gain, j, float(thr))
+        if best[1] < 0:
+            value[node] = float(sum_g / (sum_w + 1e-9))
+            continue
+        feature[node] = best[1]
+        threshold[node] = best[2]
+        go_right = x[:, best[1]] > best[2]
+        node_of = np.where(mask & go_right, 2 * node + 2,
+                           np.where(mask & ~go_right, 2 * node + 1, node_of))
+    # leaf values (bottom level + early leaves already handled)
+    for node in range(2 ** depth - 1, n_nodes):
+        mask = node_of == node
+        if mask.any():
+            value[node] = float(np.average(g[mask], weights=w[mask]))
+    return feature, threshold, value
+
+
+def fit_gbdt(x: np.ndarray, y: np.ndarray, n_trees: int | None = None,
+             depth: int = 3, lr: float = 0.2, n_bins: int = 16,
+             min_child: int = 4, sample_weight: np.ndarray | None = None
+             ) -> GBDT:
+    """MSE gradient boosting, optionally frequency-weighted (§6.2.1-2)."""
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y, np.float64)
+    n = x.shape[0]
+    if n_trees is None:
+        n_trees = adaptive_tree_count(n)
+    w = (np.ones(n) if sample_weight is None
+         else np.asarray(sample_weight, np.float64))
+    base = float(np.average(y, weights=w)) if n else 0.0
+    pred = np.full(n, base)
+    feats, thrs, vals = [], [], []
+    for _ in range(n_trees):
+        resid = y - pred
+        f_, t_, v_ = _fit_tree(x, resid, w, depth, n_bins, min_child)
+        feats.append(f_), thrs.append(t_), vals.append(v_)
+        # apply tree
+        node = np.zeros(n, dtype=np.int64)
+        for _ in range(depth):
+            fn = f_[node]
+            go_right = np.take_along_axis(
+                x, np.maximum(fn, 0)[:, None], axis=1)[:, 0] > t_[node]
+            nxt = np.where(go_right, 2 * node + 2, 2 * node + 1)
+            node = np.where(fn < 0, node, nxt)
+        pred = pred + lr * v_[node]
+    return GBDT(np.stack(feats), np.stack(thrs), np.stack(vals),
+                depth, base, lr)
+
+
+# --------------------------------------------------------------------------- #
+# distributed shard-level features
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ShardFeatures:
+    """Per-shard features (§6.2.1-1)."""
+
+    path_len_ratio: np.ndarray    # [MAX_PATH_LEN] R_l
+    label_diversity: np.ndarray   # [MAX_PATH_LEN] D_t (normalized)
+    avg_degree: float
+    max_degree: float
+    gamma: float
+    n_paths: np.ndarray           # [MAX_PATH_LEN] N_l (for weighting)
+
+
+def shard_features(graph: LabeledGraph,
+                   path_tables: dict[int, PathTable]) -> ShardFeatures:
+    n_l = np.zeros(MAX_PATH_LEN)
+    div = np.zeros(MAX_PATH_LEN)
+    for l, t in path_tables.items():
+        if l > MAX_PATH_LEN:
+            continue
+        n_l[l - 1] = t.n_paths
+        seqs = graph.labels[t.vertices]
+        div[l - 1] = len({tuple(s) for s in seqs.tolist()}) / max(t.n_paths, 1)
+    total = max(n_l.sum(), 1)
+    d = graph.degrees
+    return ShardFeatures(
+        path_len_ratio=n_l / total,
+        label_diversity=div,
+        avg_degree=float(d.mean()) if d.size else 0.0,
+        max_degree=float(d.max()) if d.size else 0.0,
+        gamma=power_law_exponent(d),
+        n_paths=n_l,
+    )
+
+
+def aggregate_global_features(per_shard: list[ShardFeatures]) -> np.ndarray:
+    """Path-count-weighted aggregation (§6.2.1-1) -> global feature vector."""
+    if not per_shard:
+        return np.zeros(2 * MAX_PATH_LEN + 3, np.float32)
+    w = np.stack([s.n_paths for s in per_shard])          # [m, L]
+    wsum = np.maximum(w.sum(axis=0), 1.0)
+    r_g = (w * np.stack([s.path_len_ratio for s in per_shard])).sum(0) / wsum
+    d_g = (w * np.stack([s.label_diversity for s in per_shard])).sum(0) / wsum
+    tot = np.maximum(w.sum(1, keepdims=True), 1.0)
+    wk = (w.sum(1) / tot.sum()).ravel()
+    avg_d = float((wk * np.array([s.avg_degree for s in per_shard])).sum())
+    max_d = float(max(s.max_degree for s in per_shard))
+    gam = float((wk * np.array([s.gamma for s in per_shard])).sum())
+    return np.concatenate(
+        [r_g, d_g, [avg_d, max_d, gam]]).astype(np.float32)
+
+
+N_GLOBAL_FEATURES = 2 * MAX_PATH_LEN + 3
+N_PATH_FEATURES = N_GLOBAL_FEATURES + 10
+
+
+def path_feature_vector(query: LabeledGraph, path_vertices: np.ndarray,
+                        cross_shard: bool, global_features: np.ndarray,
+                        label_freq: np.ndarray | None = None) -> np.ndarray:
+    """X_qi: global features + path-specific features (Algorithm 6 step 2).
+
+    label_freq: normalized label histogram of the DATA graph — paths built
+    from rare labels have few candidates and prune hard, which is the main
+    signal the ranker can exploit before executing anything.
+    """
+    deg = query.degrees[path_vertices].astype(np.float64)
+    labels = query.labels[path_vertices]
+    length = path_vertices.shape[0] - 1
+    if label_freq is not None and label_freq.size:
+        lf = label_freq[np.clip(labels, 0, label_freq.size - 1)]
+        rare_mean = float(-np.log(lf + 1e-9).mean())
+        rare_max = float(-np.log(lf + 1e-9).max())
+    else:
+        rare_mean = rare_max = 0.0
+    own = np.array([
+        length,
+        float(cross_shard),
+        deg.mean(), deg.max(), deg.min(), deg.std(),
+        len(set(labels.tolist())) / max(len(labels), 1),
+        float(labels.mean()),
+        rare_mean, rare_max,
+    ], dtype=np.float32)
+    return np.concatenate([global_features, own])
+
+
+# --------------------------------------------------------------------------- #
+# PE-score model
+# --------------------------------------------------------------------------- #
+class PEScoreModel:
+    """Fit on offline samples; predict per-query-path online."""
+
+    def __init__(self) -> None:
+        self.gbdt: GBDT | None = None
+        self.global_features = np.zeros(N_GLOBAL_FEATURES, np.float32)
+        self.label_freq = np.zeros(0, np.float32)   # data-graph label hist
+
+    @staticmethod
+    def label_pe_score(n_valid: float, n_total: float,
+                       filter_time_ms: float) -> float:
+        pruning_rate = 1.0 - n_valid / max(n_total, 1.0)
+        return pruning_rate / max(filter_time_ms, 1e-3)
+
+    def fit(self, x: np.ndarray, y: np.ndarray,
+            freq_weight: np.ndarray | None = None) -> None:
+        self.gbdt = fit_gbdt(x, y, sample_weight=freq_weight)
+
+    def incremental_fit(self, x_new: np.ndarray, y_new: np.ndarray) -> None:
+        """Append trees for new shards (<= 2 min per paper — here: cheap)."""
+        if self.gbdt is None:
+            self.fit(x_new, y_new)
+            return
+        resid = y_new - self.gbdt.predict(x_new)
+        extra = fit_gbdt(x_new, resid, n_trees=10, lr=self.gbdt.lr)
+        if self.gbdt.n_trees + extra.n_trees > 300:   # cap per paper
+            return
+        self.gbdt = GBDT(
+            feature=np.concatenate([self.gbdt.feature, extra.feature]),
+            threshold=np.concatenate([self.gbdt.threshold, extra.threshold]),
+            value=np.concatenate([self.gbdt.value, extra.value]),
+            depth=self.gbdt.depth, base=self.gbdt.base, lr=self.gbdt.lr)
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        if self.gbdt is None:
+            return np.zeros(np.atleast_2d(x).shape[0], np.float32)
+        return self.gbdt.predict(np.atleast_2d(x))

@@ -1,0 +1,108 @@
+"""Algorithm 6 — PE-score driven query plan ranking.
+
+Steps: extract query paths (1..5 edges, covering all edges) -> per-path
+feature vectors -> batch PE-score inference -> sort descending -> resolve
+shared-vertex dependencies (shorter first) -> group by main shard.
+
+The returned plan is a list of (table_idx, row_idx) into the query's
+PathTable list, consumed by repro.core.matching.exact_match and the
+distributed executor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import LabeledGraph
+from repro.core.paths import PathTable, paths_of_query
+from repro.core.pescore import PEScoreModel, path_feature_vector
+
+__all__ = ["RankedPlan", "rank_query_plan", "degree_based_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RankedPlan:
+    order: list[tuple[int, int]]          # (table_idx, row_idx), exec order
+    scores: dict[tuple[int, int], float]  # predicted PE-score per path
+    groups: list[list[tuple[int, int]]]   # shard-grouped execution
+
+
+def _main_shard(path_vertices: np.ndarray, shard_of: np.ndarray | None) -> int:
+    if shard_of is None:
+        return 0
+    shards = shard_of[path_vertices]
+    vals, counts = np.unique(shards, return_counts=True)
+    return int(vals[np.argmax(counts)])
+
+
+def rank_query_plan(query: LabeledGraph, model: PEScoreModel,
+                    shard_of: np.ndarray | None = None,
+                    max_path_length: int = 3,
+                    tables: list[PathTable] | None = None) -> RankedPlan:
+    """Algorithm 6 end-to-end."""
+    tables = tables if tables is not None else \
+        paths_of_query(query, max_path_length)
+
+    # Steps 1-2: features
+    rows: list[tuple[int, int]] = []
+    feats: list[np.ndarray] = []
+    for ti, t in enumerate(tables):
+        for r in range(t.n_paths):
+            pv = t.vertices[r]
+            cross = bool(shard_of is not None
+                         and len(set(shard_of[pv].tolist())) > 1)
+            feats.append(path_feature_vector(query, pv, cross,
+                                             model.global_features,
+                                             model.label_freq))
+            rows.append((ti, r))
+    if not rows:
+        return RankedPlan([], {}, [])
+
+    # Step 3: batch inference
+    scores = model.predict(np.stack(feats))
+    score_of = {rows[i]: float(scores[i]) for i in range(len(rows))}
+
+    # Step 4: sort by PE-score desc, then dependency resolution:
+    # paths sharing >= 1 vertex execute in increasing length order.
+    order = sorted(rows, key=lambda rc: -score_of[rc])
+    changed = True
+    while changed:
+        changed = False
+        for i in range(len(order)):
+            for j in range(i + 1, len(order)):
+                a, b = order[i], order[j]
+                va = set(tables[a[0]].vertices[a[1]].tolist())
+                vb = set(tables[b[0]].vertices[b[1]].tolist())
+                la, lb = tables[a[0]].length, tables[b[0]].length
+                if va & vb and la > lb:
+                    order[i], order[j] = order[j], order[i]
+                    changed = True
+        # the bubble pass above converges (finite inversions)
+
+    # Step 5: group by main shard, keep sorted order inside groups
+    group_map: dict[int, list[tuple[int, int]]] = {}
+    for rc in order:
+        ms = _main_shard(tables[rc[0]].vertices[rc[1]], shard_of)
+        group_map.setdefault(ms, []).append(rc)
+    groups = [group_map[k] for k in sorted(
+        group_map, key=lambda g: -max(score_of[rc] for rc in group_map[g]))]
+    flat = [rc for g in groups for rc in g]
+    return RankedPlan(order=flat, scores=score_of, groups=groups)
+
+
+def degree_based_plan(query: LabeledGraph,
+                      tables: list[PathTable] | None = None,
+                      max_path_length: int = 3) -> RankedPlan:
+    """Baseline: GNN-PE's original degree-based ordering (high degree first)."""
+    tables = tables if tables is not None else \
+        paths_of_query(query, max_path_length)
+    rows, key = [], {}
+    for ti, t in enumerate(tables):
+        for r in range(t.n_paths):
+            deg = query.degrees[t.vertices[r]].astype(np.float64)
+            rows.append((ti, r))
+            key[(ti, r)] = float(deg.mean())
+    order = sorted(rows, key=lambda rc: -key[rc])
+    return RankedPlan(order=order, scores=key, groups=[order])

@@ -1,0 +1,4 @@
+from repro.kernels.dominance.ops import dominance_mask
+from repro.kernels.dominance.ref import dominance_mask_ref
+
+__all__ = ["dominance_mask", "dominance_mask_ref"]

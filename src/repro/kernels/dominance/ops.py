@@ -1,0 +1,27 @@
+"""Public wrapper: Pallas on TPU, interpret-mode Pallas elsewhere.
+
+The aR-tree device path (repro/core/artree batched traversal) calls this
+for leaf-level filtering when `use_pallas` is on; the CPU dry-run lowers
+the pure-jnp reference instead (Mosaic kernels do not compile on the CPU
+backend).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dominance.kernel import dominance_pallas
+from repro.kernels.dominance.ref import dominance_mask_ref
+
+
+def dominance_mask(queries: jnp.ndarray, boxes: jnp.ndarray,
+                   eps: float = 1e-5, use_pallas: bool | None = None
+                   ) -> jnp.ndarray:
+    """queries [Q, D], boxes [N, D] -> int8 [Q, N] dominance mask."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return dominance_pallas(queries, boxes, eps,
+                                interpret=jax.default_backend() != "tpu")
+    return dominance_mask_ref(queries, boxes, eps)

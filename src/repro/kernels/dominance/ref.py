@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the dominance kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def dominance_mask_ref(queries: jnp.ndarray, boxes: jnp.ndarray,
+                       eps: float = 1e-5) -> jnp.ndarray:
+    """queries [Q, D], boxes [N, D] -> int8 [Q, N]."""
+    ok = jnp.all(queries[:, None, :] <= boxes[None, :, :] + eps, axis=-1)
+    return ok.astype(jnp.int8)

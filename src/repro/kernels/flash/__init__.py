@@ -1,0 +1,4 @@
+from repro.kernels.flash.ops import flash_attention
+from repro.kernels.flash.ref import flash_attention_ref
+
+__all__ = ["flash_attention", "flash_attention_ref"]

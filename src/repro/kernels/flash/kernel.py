@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: tiled causal attention with online softmax (GQA).
+
+FlashAttention re-thought for the TPU memory hierarchy (DESIGN.md §3):
+grid = (batch*q_heads, n_q_blocks, n_kv_blocks) with the kv axis marked
+'arbitrary' (sequential); running max / sum / output accumulators live in
+VMEM scratch and persist across kv iterations of the same (bh, q) cell.
+Q/K/V tiles are MXU-aligned: BLOCK_Q x D and BLOCK_K x D with D padded to
+128 lanes.  GQA is expressed through the K/V index_map (q-head h reads
+kv-head h // group_size) — no KV duplication in HBM.
+
+Causal + sliding-window masking is positional (block-diagonal skip is an
+optimization left to the scheduler; masked lanes compute zeros).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  block_q: int, block_k: int, n_kv_blocks: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # [BQ, D]
+    k = k_ref[0]                                   # [BK, D]
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    ok = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # [BQ, 1]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                         # [BQ, BK]
+    l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           scale: float | None = None, causal: bool = True,
+                           window: int | None = None,
+                           block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q [B, S, H, D], k/v [B, S, KV, D] -> [B, S, H, D].  H % KV == 0."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    s_pad = pl.cdiv(s, max(block_q, block_k)) * max(block_q, block_k)
+    qp = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    # layout: [B*H, S, D] for q/o; [B*KV, S, D] for k/v
+    qb = qp.transpose(0, 2, 1, 3).reshape(b * h, s_pad, d)
+    kb = kp.transpose(0, 2, 1, 3).reshape(b * kv, s_pad, d)
+    vb = vp.transpose(0, 2, 1, 3).reshape(b * kv, s_pad, d)
+    n_q = s_pad // block_q
+    n_k = s_pad // block_k
+    grid = (b * h, n_q, n_k)
+
+    def q_map(bh, i, j):
+        return (bh, i, 0)
+
+    def kv_map(bh, i, j):
+        return ((bh // g), j, 0)           # GQA: share kv head across group
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          n_kv_blocks=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, s_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),     # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),     # running sum l
+            pltpu.VMEM((block_q, d), jnp.float32),     # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qb, kb, vb)
+    return out.reshape(b, h, s_pad, d).transpose(0, 2, 1, 3)[:, :s]

@@ -1,0 +1,22 @@
+"""Public wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash.kernel import flash_attention_pallas
+from repro.kernels.flash.ref import flash_attention_ref
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    scale: float | None = None, causal: bool = True,
+                    window: int | None = None,
+                    use_pallas: bool | None = None) -> jnp.ndarray:
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return flash_attention_pallas(
+            q, k, v, scale, causal, window,
+            interpret=jax.default_backend() != "tpu")
+    return flash_attention_ref(q, k, v, scale, causal, window)

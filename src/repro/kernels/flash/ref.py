@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash kernel: dense GQA attention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        scale: float | None = None, causal: bool = True,
+                        window: int | None = None) -> jnp.ndarray:
+    """q [B, S, H, D], k/v [B, S, KV, D] -> [B, S, H, D]."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, s, kv, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * scale
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= kj <= qi
+    if window is not None:
+        ok &= (qi - kj) < window
+    scores = jnp.where(ok, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, d)

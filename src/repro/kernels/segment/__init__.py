@@ -1,0 +1,4 @@
+from repro.kernels.segment.ops import csr_gather_sum
+from repro.kernels.segment.ref import csr_gather_sum_ref
+
+__all__ = ["csr_gather_sum", "csr_gather_sum_ref"]

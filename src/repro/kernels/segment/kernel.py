@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: padded-CSR neighbor gather-sum (MPNN primitive).
+
+The message-passing hot loop shared by GNN-PE's encoder and the GNN zoo:
+out[n] = sum_k w[n, k] * feat[nbr[n, k]] over each node's (padded) neighbor
+list.  The edge-list `segment_sum` formulation is re-blocked into padded
+CSR (rows = destination nodes, K_max neighbor slots) so each grid cell owns
+one contiguous node block — scatter-free accumulation, the TPU-native
+shape of the op (DESIGN.md §3: gather/scatter regime).
+
+VMEM strategy: neighbor ids [BLOCK_N, K] live in VMEM; the feature table
+stays un-blocked (memory_space=ANY on real TPU with per-row DMA; the
+interpret-mode build loads it whole, which is also the correct CPU
+fallback).  The inner loop walks K neighbor slots with a masked gather.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 256
+
+
+def _gather_sum_kernel(nbr_ref, wgt_ref, feat_ref, out_ref):
+    nbr = nbr_ref[...]                    # [BN, K] int32 (-1 = pad)
+    wgt = wgt_ref[...]                    # [BN, K]
+    feat = feat_ref[...]                  # [V, F] (whole table)
+    bn, k = nbr.shape
+    acc = jnp.zeros((bn, feat.shape[1]), jnp.float32)
+    for i in range(k):
+        ids = nbr[:, i]
+        valid = ids >= 0
+        rows = feat[jnp.maximum(ids, 0)]
+        acc = acc + jnp.where(valid[:, None],
+                              rows * wgt[:, i][:, None], 0.0)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def csr_gather_sum_pallas(neighbors: jnp.ndarray, weights: jnp.ndarray,
+                          feats: jnp.ndarray, block_n: int = BLOCK_N,
+                          interpret: bool = True) -> jnp.ndarray:
+    """neighbors [N, K] int32 (pad -1), weights [N, K], feats [V, F] ->
+    [N, F] weighted neighbor sums."""
+    n, k = neighbors.shape
+    v, f = feats.shape
+    n_pad = pl.cdiv(n, block_n) * block_n
+    nb = jnp.pad(neighbors, ((0, n_pad - n), (0, 0)), constant_values=-1)
+    wg = jnp.pad(weights, ((0, n_pad - n), (0, 0)))
+    grid = (n_pad // block_n,)
+    out = pl.pallas_call(
+        _gather_sum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((v, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, f), feats.dtype),
+        interpret=interpret,
+    )(nb, wg, feats)
+    return out[:n]

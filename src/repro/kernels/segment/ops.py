@@ -1,0 +1,21 @@
+"""Public wrapper for the CSR gather-sum kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment.kernel import csr_gather_sum_pallas
+from repro.kernels.segment.ref import csr_gather_sum_ref
+
+
+def csr_gather_sum(neighbors: jnp.ndarray, weights: jnp.ndarray,
+                   feats: jnp.ndarray, use_pallas: bool | None = None
+                   ) -> jnp.ndarray:
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return csr_gather_sum_pallas(
+            neighbors, weights, feats,
+            interpret=jax.default_backend() != "tpu")
+    return csr_gather_sum_ref(neighbors, weights, feats)

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count="
+                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
+# NOTE: the env var above MUST precede every other import (jax locks the
+# device count at first init), which is why __future__ imports are absent.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent without real
+hardware: jit(step).lower(<ShapeDtypeStructs>).compile() on the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh, then records
+memory_analysis(), cost_analysis() and the collective-byte census parsed
+from the post-SPMD HLO — the inputs of the §Roofline analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  DRYRUN_DEVICES=32 python -m repro.launch.dryrun --all --scale 4   # debug
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_spec
+from repro.dist.sharding import (GNN_RULES, LM_RULES, RECSYS_RULES,
+                                 clear_rules, set_mesh, set_rules)
+from repro.launch.mesh import dp_axes_of, make_production_mesh
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes of every collective op in post-SPMD HLO (per device).
+
+    Counts plain and ``-start`` forms once; ``-done`` is skipped.  Result
+    bytes approximate the receive volume per device per op.
+    """
+    out: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        m = re.search(r"= *(.*?) (" + "|".join(_COLLECTIVES) +
+                      r")(?:-start)?\(", line)
+        if not m:
+            continue
+        if re.search(r"(" + "|".join(_COLLECTIVES) + r")-done\(", line):
+            continue
+        type_str, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in shape_re.findall(type_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] += nbytes
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def _rules_for(family: str, dp: tuple) -> dict:
+    base = {"lm": LM_RULES, "gnn": GNN_RULES, "recsys": RECSYS_RULES,
+            "engine": GNN_RULES}[family]
+    rules = dict(base)
+    for k, v in rules.items():
+        if v == ("pod", "data"):
+            rules[k] = dp if len(dp) > 1 else dp[0]
+    if family == "lm":
+        rules["batch"] = dp if len(dp) > 1 else dp[0]
+    return rules
+
+
+def run_cell(arch_id: str, shape_id: str, multi_pod: bool, scale: int = 16,
+             verbose: bool = True) -> dict[str, Any]:
+    spec = get_spec(arch_id)
+    shape = spec.shapes[shape_id]
+    rec: dict[str, Any] = {"arch": arch_id, "shape": shape_id,
+                           "mesh": "multi" if multi_pod else "single"}
+    if shape_id in spec.skip_shapes:
+        rec["status"] = "skipped"
+        rec["reason"] = spec.skip_shapes[shape_id]
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod, scale=scale)
+    dp = dp_axes_of(mesh)
+    set_rules(_rules_for(spec.family, dp))
+    set_mesh(mesh)
+    try:
+        cfg = spec.make_config()
+        cell = spec.build_cell(cfg, shape, dp)
+        to_ns = lambda s: jax.tree.map(
+            lambda x: NamedSharding(mesh, x) if isinstance(x, P) else x,
+            s, is_leaf=lambda x: isinstance(x, P))
+        with mesh:
+            jitted = jax.jit(cell.step_fn,
+                             in_shardings=to_ns(cell.in_shardings),
+                             out_shardings=to_ns(cell.out_shardings),
+                             donate_argnums=cell.donate_argnums)
+            lowered = jitted.lower(*cell.abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        rec.update({
+            "status": "ok",
+            "description": cell.description,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops_per_device": float(cost.get("flops", -1.0)),
+            "bytes_accessed_per_device": float(
+                cost.get("bytes accessed", -1.0)),
+            "memory": _mem_dict(mem),
+            "collectives": collective_bytes(compiled.as_text()),
+            "n_devices": mesh.devices.size,
+        })
+        if verbose:
+            print(f"[{arch_id} x {shape_id} x {rec['mesh']}] OK "
+                  f"compile={t_compile:.0f}s "
+                  f"flops/dev={rec['flops_per_device']:.3g} "
+                  f"coll={rec['collectives']['total']:.3g}B "
+                  f"argbytes={rec['memory'].get('argument_size_in_bytes', 0):.3g}")
+    except Exception as e:  # noqa: BLE001 — dry-run reports failures
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{arch_id} x {shape_id} x {rec['mesh']}] FAILED: "
+                  f"{rec['error']}")
+    finally:
+        clear_rules()
+    return rec
+
+
+def _mem_dict(mem) -> dict[str, float]:
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes"):
+        try:
+            out[k] = float(getattr(mem, k))
+        except Exception:  # noqa: BLE001
+            pass
+    if not out:
+        out["repr"] = str(mem)[:500]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--scale", type=int, default=16,
+                    help="mesh edge (16 = production; smaller for debug; "
+                         "set DRYRUN_DEVICES to 2*scale^2)")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for aid in ARCH_IDS:
+            for sid in get_spec(aid).shapes:
+                cells.append((aid, sid))
+    else:
+        aid = args.arch or "yi-6b"
+        sids = [args.shape] if args.shape else list(get_spec(aid).shapes)
+        cells = [(aid, s) for s in sids]
+
+    results = []
+    for aid, sid in cells:
+        for mp in meshes:
+            results.append(run_cell(aid, sid, mp, scale=args.scale))
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "failed" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_fail} failed "
+          f"/ {len(results)} cells")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

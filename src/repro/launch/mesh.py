@@ -1,0 +1,36 @@
+"""Production mesh definition (TPU v5e pod slices).
+
+Functions, not module-level constants — importing this module never touches
+jax device state.  Hardware constants for the roofline live here too.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "dp_axes_of", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False, scale: int = 16):
+    """16 x 16 ('data','model') single-pod; 2 x 16 x 16 + 'pod' multi-pod.
+
+    `scale` shrinks the mesh for debug runs (scale=4 -> 4x4 / 2x4x4); the
+    production value is 16.
+    """
+    shape = (2, scale, scale) if multi_pod else (scale, scale)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes_of(mesh) -> tuple:
+    """The data-parallel mesh axes for batch sharding."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# TPU v5e per-chip hardware model (roofline constants per the assignment)
+HW = {
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bw": 819e9,               # B/s
+    "ici_bw": 50e9,                # B/s per link
+    "hbm_bytes": 16 * 2 ** 30,
+}

@@ -1,0 +1,164 @@
+"""Shared model blocks: RMSNorm, RoPE, SwiGLU, blockwise attention.
+
+Everything is pure-functional (params as pytrees) and dtype-polymorphic:
+compute in `cfg.dtype` (bf16 on TPU), accumulate softmax/norms in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+__all__ = ["rms_norm", "rope_freqs", "apply_rope", "swiglu",
+           "dense_attention", "blockwise_attention", "causal_mask_bias",
+           "init_dense", "cross_entropy_loss"]
+
+
+def init_dense(key: jax.Array, shape: tuple[int, ...],
+               dtype=jnp.float32, scale: float | None = None) -> jax.Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * s).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def rope_freqs(head_dim: int, max_pos: int, theta: float = 10000.0
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(cos, sin) tables [max_pos, head_dim//2], fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                      dtype=jnp.float32) / head_dim))
+    t = jnp.arange(max_pos, dtype=jnp.float32)
+    ang = jnp.outer(t, inv)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding computed on the fly (no table — works at 500k pos).
+
+    x: [B, S, H, D]; positions: [B, S] int32.
+    """
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions.astype(jnp.float32)[:, :, None] * inv[None, None, :]
+    c = jnp.cos(ang)[:, :, None, :]              # [B, S, 1, D/2]
+    s = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rot = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = constrain(x @ w_gate, "batch", "seq", "d_ff")
+    u = constrain(x @ w_up, "batch", "seq", "d_ff")
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return constrain(h @ w_down, "batch", "seq", "embed")
+
+
+def causal_mask_bias(s_q: int, s_kv: int, q_offset: jnp.ndarray | int = 0,
+                     window: int | None = None) -> jnp.ndarray:
+    """[s_q, s_kv] additive bias: 0 where attendable, -inf elsewhere."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_kv)[None, :]
+    ok = kj <= qi
+    if window is not None:
+        ok &= (qi - kj) < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def dense_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    bias: jnp.ndarray | None, scale: float) -> jnp.ndarray:
+    """Grouped-query attention.  q: [B,S,H,D], k/v: [B,T,Kv,D] -> [B,S,H,D].
+
+    H must be a multiple of Kv; head groups share one KV head.
+    """
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    dv = v.shape[3]                               # may differ from d (MLA)
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores *= scale
+    if bias is not None:
+        scores = scores + bias                    # [s, t] broadcast
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dv)
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        scale: float, q_offset: int = 0,
+                        window: int | None = None,
+                        block_kv: int = 1024,
+                        unroll: bool = False) -> jnp.ndarray:
+    """Online-softmax attention, scanned over KV blocks (flash-style).
+
+    Bounds the score working set to [B,Kv,G,S,block_kv] — the jnp reference
+    of the Pallas flash kernel, and the long-sequence XLA path.
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    dv = v.shape[3]                               # may differ from d (MLA)
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d)
+    n_blocks = (t + block_kv - 1) // block_kv
+    t_pad = n_blocks * block_kv
+    k = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    kb = k.reshape(b, n_blocks, block_kv, kv, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, n_blocks, block_kv, kv, dv).transpose(1, 0, 2, 3, 4)
+
+    qi = jnp.arange(s) + q_offset                 # absolute query positions
+
+    def step(carry, xs):
+        m, l, acc, blk = carry[0], carry[1], carry[2], carry[3]
+        kblk, vblk = xs
+        kj = blk * block_kv + jnp.arange(block_kv)
+        ok = (kj[None, :] <= qi[:, None]) & (kj[None, :] < t)
+        if window is not None:
+            ok &= (qi[:, None] - kj[None, :]) < window
+        bias = jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, kblk
+                            ).astype(jnp.float32) * scale + bias
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bskgd", p.astype(q.dtype), vblk
+                        ).astype(jnp.float32)
+        acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new, blk + 1), None
+
+    # -1e30 (not -inf): a fully-masked block then yields p=exp(-inf+1e30)=0
+    # instead of exp(-inf - -inf)=nan.
+    m0 = jnp.full((b, kv, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, s, kv, g, dv), jnp.float32)   # f32 accumulator
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, acc0, 0), (kb, vb),
+                                     unroll=unroll)
+    out = (acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+           ).astype(q.dtype)
+    return out.reshape(b, s, h, dv)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token CE in fp32.  logits [B,S,V], labels [B,S] int32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

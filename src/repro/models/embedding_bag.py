@@ -1,0 +1,68 @@
+"""EmbeddingBag for JAX: ragged multi-hot gather + segment-reduce.
+
+JAX has no native nn.EmbeddingBag and no CSR sparse — this module IS the
+system's sparse embedding layer (kernel_taxonomy §RecSys).  Bags are given
+as (indices [NNZ], offsets [B+1]) pairs (torch layout) or as padded
+[B, max_per_bag] index matrices with a padding id.
+
+Tables are row-sharded over the 'rows' logical axis ('model' mesh axis);
+the gather keeps indices replicated and rows local, the combine is a
+segment-sum — GSPMD emits one all-reduce over 'model'.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+__all__ = ["embedding_bag_padded", "embedding_bag_ragged", "init_table"]
+
+
+def init_table(key: jax.Array, n_rows: int, dim: int,
+               dtype=jnp.float32) -> jnp.ndarray:
+    scale = 1.0 / jnp.sqrt(dim)
+    t = jax.random.normal(key, (n_rows, dim), jnp.float32) * scale
+    return t.astype(dtype)
+
+
+def embedding_bag_padded(table: jnp.ndarray, idx: jnp.ndarray,
+                         pad_id: int, mode: str = "sum") -> jnp.ndarray:
+    """idx: [B, K] with pad_id marking empty slots -> [B, dim]."""
+    table = constrain(table, "rows", None)
+    valid = (idx != pad_id)
+    safe = jnp.where(valid, idx, 0)
+    emb = table[safe]                                  # [B, K, dim]
+    emb = emb * valid[..., None].astype(emb.dtype)
+    if mode == "sum":
+        return emb.sum(axis=1)
+    if mode == "mean":
+        return emb.sum(axis=1) / jnp.maximum(
+            valid.sum(axis=1, keepdims=True).astype(emb.dtype), 1.0)
+    if mode == "max":
+        neg = jnp.where(valid[..., None], emb, -jnp.inf)
+        out = neg.max(axis=1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(f"unknown mode {mode}")
+
+
+def embedding_bag_ragged(table: jnp.ndarray, indices: jnp.ndarray,
+                         offsets: jnp.ndarray, n_bags: int,
+                         mode: str = "sum") -> jnp.ndarray:
+    """torch-layout bags: indices [NNZ], offsets [B+1] -> [B, dim].
+
+    Implemented as gather + jax.ops.segment_sum over bag ids.
+    """
+    table = constrain(table, "rows", None)
+    nnz = indices.shape[0]
+    bag_of = jnp.searchsorted(offsets, jnp.arange(nnz), side="right") - 1
+    emb = table[indices]                               # [NNZ, dim]
+    s = jax.ops.segment_sum(emb, bag_of, num_segments=n_bags)
+    if mode == "sum":
+        return s
+    counts = jax.ops.segment_sum(jnp.ones(nnz, emb.dtype), bag_of,
+                                 num_segments=n_bags)
+    if mode == "mean":
+        return s / jnp.maximum(counts[:, None], 1.0)
+    raise ValueError(f"unknown mode {mode}")

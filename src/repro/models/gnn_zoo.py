@@ -1,0 +1,411 @@
+"""GNN architecture zoo: EGNN, GatedGCN, NequIP, MeshGraphNet.
+
+All four are built on the same message-passing primitive — edge gather ->
+message MLP -> `jax.ops.segment_sum` scatter (JAX has no CSR SpMM; the
+segment-sum formulation IS the system's sparse layer, mirrored by the
+Pallas kernel in repro/kernels/segment).
+
+Regimes (kernel_taxonomy §GNN):
+  * GatedGCN / MeshGraphNet — edge-featured MPNN (SpMM-like);
+  * EGNN — cheap E(n) equivariance (scalar distances, coordinate updates);
+  * NequIP — E(3) tensor-product equivariance: real spherical harmonics
+    (l <= 2) x radial Bessel basis, Gaunt-coefficient tensor products
+    (the unique invariant coupling, CG up to per-channel normalization),
+    gate nonlinearity.  The Gaunt tensor is computed once by exact
+    Gauss-Legendre quadrature (products of l<=2 SH are band-limited).
+
+Batch layout: GraphsTuple-style flat arrays with masks (static shapes for
+jit/pjit): nodes [N, F], edges (src/dst [E]), positions [N, 3] for the
+equivariant models, graph_ids [N] for batched small graphs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import constrain
+from repro.models.common import init_dense
+
+__all__ = ["GNNBatch", "GNNConfigZoo", "init_gnn", "apply_gnn", "gnn_loss",
+           "real_sph_harm_l2", "gaunt_tensor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNBatch:
+    """Flat padded graph batch.
+
+    nodes:     [N, F] float input features.
+    positions: [N, 3] float (equivariant models; zeros otherwise).
+    edge_src:  [E] int32.
+    edge_dst:  [E] int32.
+    edge_feats:[E, Fe] float (zeros if unused).
+    node_mask: [N] bool.
+    edge_mask: [E] bool.
+    graph_ids: [N] int32 (for batched molecule graphs; zeros = single graph).
+    n_graphs:  int (static).
+    """
+
+    nodes: jnp.ndarray
+    positions: jnp.ndarray
+    edge_src: jnp.ndarray
+    edge_dst: jnp.ndarray
+    edge_feats: jnp.ndarray
+    node_mask: jnp.ndarray
+    edge_mask: jnp.ndarray
+    graph_ids: jnp.ndarray
+    n_graphs: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfigZoo:
+    arch: str                    # egnn | gatedgcn | nequip | meshgraphnet
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    d_edge_in: int = 0
+    d_out: int = 1
+    # nequip-specific
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    # meshgraphnet-specific
+    mlp_layers: int = 2
+    dtype: Any = jnp.float32
+
+
+# --------------------------------------------------------------------------- #
+# shared helpers
+# --------------------------------------------------------------------------- #
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": init_dense(ks[i], (dims[i], dims[i + 1]), dtype),
+             "b": jnp.zeros(dims[i + 1], dtype)} for i in range(len(dims) - 1)]
+
+
+def _mlp_apply(layers, x, act=jax.nn.silu, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i + 1 < len(layers) or final_act:
+            x = act(x)
+    return x
+
+
+def _scatter_sum(msgs: jnp.ndarray, dst: jnp.ndarray, n: int,
+                 mask: jnp.ndarray) -> jnp.ndarray:
+    msgs = jnp.where(mask[:, None], msgs, 0.0)
+    return jax.ops.segment_sum(msgs, dst, num_segments=n)
+
+
+# --------------------------------------------------------------------------- #
+# EGNN  [arXiv:2102.09844]
+# --------------------------------------------------------------------------- #
+def _init_egnn(key, cfg: GNNConfigZoo):
+    ks = jax.random.split(key, 2 + 4 * cfg.n_layers)
+    d = cfg.d_hidden
+    p = {"embed": _mlp_init(ks[0], [cfg.d_in, d], cfg.dtype),
+         "out": _mlp_init(ks[1], [d, d, cfg.d_out], cfg.dtype),
+         "layers": []}
+    for i in range(cfg.n_layers):
+        p["layers"].append({
+            "phi_e": _mlp_init(ks[2 + 4 * i], [2 * d + 1 + cfg.d_edge_in,
+                                               d, d], cfg.dtype),
+            "phi_x": _mlp_init(ks[3 + 4 * i], [d, d, 1], cfg.dtype),
+            "phi_h": _mlp_init(ks[4 + 4 * i], [2 * d, d, d], cfg.dtype),
+            "phi_inf": _mlp_init(ks[5 + 4 * i], [d, 1], cfg.dtype),
+        })
+    return p
+
+
+def _apply_egnn(params, cfg: GNNConfigZoo, batch: GNNBatch):
+    n = batch.nodes.shape[0]
+    src, dst = batch.edge_src, batch.edge_dst
+    h = _mlp_apply(params["embed"], batch.nodes)
+    x = batch.positions
+    d = cfg.d_hidden
+    for lp in params["layers"]:
+        rel = x[src] - x[dst]
+        d2 = jnp.sum(rel * rel, axis=-1, keepdims=True)
+        # first phi_e layer decomposed node-wise (matmul-before-gather):
+        # W [2d+1+fe, d] rows split into src / dst / scalar blocks — the
+        # node-side products run on N rows instead of E.
+        w0 = lp["phi_e"][0]
+        pre_src = h @ w0["w"][:d]
+        pre_dst = h @ w0["w"][d:2 * d]
+        z = pre_src[src] + pre_dst[dst] + d2 @ w0["w"][2 * d:2 * d + 1] \
+            + w0["b"]
+        if cfg.d_edge_in:
+            z = z + batch.edge_feats @ w0["w"][2 * d + 1:]
+        m = _mlp_apply(lp["phi_e"][1:], jax.nn.silu(z), final_act=True)
+        gate = jax.nn.sigmoid(_mlp_apply(lp["phi_inf"], m))
+        m = m * gate
+        # coordinate update (E(n)-equivariant): x_i += mean_j rel * phi_x(m)
+        coef = _mlp_apply(lp["phi_x"], m)
+        upd = _scatter_sum(rel * coef, dst, n, batch.edge_mask)
+        deg = _scatter_sum(jnp.ones_like(d2), dst, n, batch.edge_mask)
+        x = x + upd / jnp.maximum(deg, 1.0)
+        agg = _scatter_sum(m, dst, n, batch.edge_mask)
+        h = h + _mlp_apply(lp["phi_h"], jnp.concatenate([h, agg], -1))
+    return _mlp_apply(params["out"], h), x
+
+
+# --------------------------------------------------------------------------- #
+# GatedGCN  [arXiv:2003.00982 / 1711.07553]
+# --------------------------------------------------------------------------- #
+def _init_gatedgcn(key, cfg: GNNConfigZoo):
+    ks = jax.random.split(key, 3 + 5 * cfg.n_layers)
+    d = cfg.d_hidden
+    p = {"embed": _mlp_init(ks[0], [cfg.d_in, d], cfg.dtype),
+         "embed_e": _mlp_init(ks[1], [max(cfg.d_edge_in, 1), d], cfg.dtype),
+         "out": _mlp_init(ks[2], [d, d, cfg.d_out], cfg.dtype),
+         "layers": []}
+    for i in range(cfg.n_layers):
+        b = 3 + 5 * i
+        p["layers"].append({
+            "U": init_dense(ks[b], (d, d), cfg.dtype),
+            "V": init_dense(ks[b + 1], (d, d), cfg.dtype),
+            "A": init_dense(ks[b + 2], (d, d), cfg.dtype),
+            "B": init_dense(ks[b + 3], (d, d), cfg.dtype),
+            "C": init_dense(ks[b + 4], (d, d), cfg.dtype),
+            "ln_h": jnp.ones(d, cfg.dtype),
+            "ln_e": jnp.ones(d, cfg.dtype),
+        })
+    return p
+
+
+def _layernorm(x, g):
+    m = x.mean(-1, keepdims=True)
+    v = ((x - m) ** 2).mean(-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-6) * g
+
+
+def _apply_gatedgcn(params, cfg: GNNConfigZoo, batch: GNNBatch):
+    n = batch.nodes.shape[0]
+    src, dst = batch.edge_src, batch.edge_dst
+    h = _mlp_apply(params["embed"], batch.nodes)
+    ef = batch.edge_feats if cfg.d_edge_in else \
+        jnp.ones((src.shape[0], 1), cfg.dtype)
+    e = _mlp_apply(params["embed_e"], ef)
+    for lp in params["layers"]:
+        # matmul-before-gather: the node-side projections run in the NODE
+        # domain (N rows) and are then gathered to edges — identical math,
+        # E/N x fewer dot FLOPs (~12x on ogb_products).  See EXPERIMENTS
+        # §Perf hillclimb 1.
+        h_a = h @ lp["A"]
+        h_b = h @ lp["B"]
+        h_v = h @ lp["V"]
+        e_new = h_a[src] + h_b[dst] + e @ lp["C"]
+        eta = jax.nn.sigmoid(e_new)
+        msg = eta * h_v[src]
+        num = _scatter_sum(msg, dst, n, batch.edge_mask)
+        den = _scatter_sum(eta, dst, n, batch.edge_mask)
+        h_new = h @ lp["U"] + num / (den + 1e-6)
+        h = h + jax.nn.relu(_layernorm(h_new, lp["ln_h"]))
+        e = e + jax.nn.relu(_layernorm(e_new, lp["ln_e"]))
+    return _mlp_apply(params["out"], h), batch.positions
+
+
+# --------------------------------------------------------------------------- #
+# NequIP  [arXiv:2101.03164] — E(3) tensor-product message passing
+# --------------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=1)
+def _sph_quadrature(n_theta: int = 12, n_phi: int = 24):
+    """Gauss-Legendre x uniform-phi sphere quadrature (exact to band 2l)."""
+    x, w = np.polynomial.legendre.leggauss(n_theta)     # x = cos(theta)
+    phi = 2 * np.pi * (np.arange(n_phi) + 0.5) / n_phi
+    ct, ph = np.meshgrid(x, phi, indexing="ij")
+    st = np.sqrt(1 - ct ** 2)
+    pts = np.stack([st * np.cos(ph), st * np.sin(ph), ct], -1).reshape(-1, 3)
+    wts = (np.repeat(w, n_phi) * (2 * np.pi / n_phi)).reshape(-1)
+    return pts, wts
+
+
+def real_sph_harm_l2(r: np.ndarray | jnp.ndarray) -> jnp.ndarray:
+    """Real spherical harmonics l=0,1,2 of unit vectors r [.., 3] -> [.., 9].
+
+    Component order: (l=0) 1; (l=1) y, z, x; (l=2) xy, yz, 3z^2-1, xz,
+    x^2-y^2 — the standard e3nn ordering, orthonormalized on the sphere.
+    """
+    xp = jnp if isinstance(r, jnp.ndarray) else np
+    x, y, z = r[..., 0], r[..., 1], r[..., 2]
+    c0 = 0.5 * np.sqrt(1 / np.pi)
+    c1 = np.sqrt(3 / (4 * np.pi))
+    out = [
+        xp.full(x.shape, c0) if xp is np else jnp.full(x.shape, c0),
+        c1 * y, c1 * z, c1 * x,
+        0.5 * np.sqrt(15 / np.pi) * x * y,
+        0.5 * np.sqrt(15 / np.pi) * y * z,
+        0.25 * np.sqrt(5 / np.pi) * (3 * z * z - 1.0),
+        0.5 * np.sqrt(15 / np.pi) * x * z,
+        0.25 * np.sqrt(15 / np.pi) * (x * x - y * y),
+    ]
+    return xp.stack(out, axis=-1)
+
+
+@functools.lru_cache(maxsize=1)
+def gaunt_tensor() -> np.ndarray:
+    """G[a, b, c] = ∫ Y_a Y_b Y_c dΩ over the 9 real SH (l <= 2).
+
+    The unique (up to normalization) E(3)-invariant 3-tensor coupling —
+    the CG coefficients of the real basis up to per-(l1,l2,l3) scale.
+    """
+    pts, wts = _sph_quadrature()
+    ysh = np.asarray(real_sph_harm_l2(pts))            # [Q, 9]
+    g = np.einsum("qa,qb,qc,q->abc", ysh, ysh, ysh, wts)
+    g[np.abs(g) < 1e-10] = 0.0
+    return g.astype(np.float32)
+
+
+def _bessel_rbf(r: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """NequIP radial basis: sin(n pi r / rc) / r with cosine cutoff."""
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    rr = jnp.maximum(r, 1e-6)[..., None]
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * rr / cutoff) / rr
+    fc = 0.5 * (jnp.cos(jnp.pi * jnp.clip(r / cutoff, 0, 1)) + 1.0)
+    return basis * fc[..., None]
+
+
+def _init_nequip(key, cfg: GNNConfigZoo):
+    ks = jax.random.split(key, 3 + 3 * cfg.n_layers)
+    c = cfg.d_hidden                    # channels per irrep component
+    p = {"embed": _mlp_init(ks[0], [cfg.d_in, c], cfg.dtype),
+         "out": _mlp_init(ks[1], [c, c, cfg.d_out], cfg.dtype),
+         "layers": []}
+    for i in range(cfg.n_layers):
+        b = 2 + 3 * i
+        p["layers"].append({
+            # radial net: rbf -> per-l path weights (shared across the m
+            # components of each irrep — the NequIP radial-weight structure;
+            # per-component weights would break equivariance)
+            "radial": _mlp_init(ks[b], [cfg.n_rbf, 2 * c, 3 * c], cfg.dtype),
+            # channel mixing per l (shared across the m components of each
+            # irrep — anything finer breaks rotation equivariance)
+            "mix": init_dense(ks[b + 1], (3, c, c), cfg.dtype, scale=0.3),
+            "gate": _mlp_init(ks[b + 2], [c, c], cfg.dtype),
+        })
+    return p
+
+
+def _apply_nequip(params, cfg: GNNConfigZoo, batch: GNNBatch):
+    """Features: [N, 9, C] (9 = SH components l<=2, C channels)."""
+    n = batch.nodes.shape[0]
+    src, dst = batch.edge_src, batch.edge_dst
+    c = cfg.d_hidden
+    g = jnp.asarray(gaunt_tensor())                     # [9, 9, 9]
+    scalars = _mlp_apply(params["embed"], batch.nodes)  # [N, C]
+    feats = jnp.zeros((n, 9, c), cfg.dtype).at[:, 0, :].set(scalars)
+
+    rel = batch.positions[src] - batch.positions[dst]
+    r = jnp.sqrt(jnp.sum(rel * rel, -1) + 1e-12)
+    rhat = rel / r[:, None]
+    ysh = real_sph_harm_l2(rhat)                        # [E, 9]
+    # degenerate edges (self-loops / zero padding, r ~ 0) have no direction:
+    # Y(0) carries a non-rotating constant in the l=2 channel that silently
+    # breaks equivariance — zero those messages entirely.
+    ok = (r > 1e-5)[:, None]      # note: r >= 1e-6 by the eps under the sqrt
+    ysh = ysh * ok
+    rbf = _bessel_rbf(r, cfg.n_rbf, cfg.cutoff) * ok    # [E, n_rbf]
+
+    l_of = jnp.asarray([0, 1, 1, 1, 2, 2, 2, 2, 2])
+    for lp in params["layers"]:
+        w = _mlp_apply(lp["radial"], rbf).reshape(-1, 3, c)[:, l_of, :]
+        # tensor product: msg[e, c_out_sh, ch] =
+        #   sum_{a,b} G[a, b, c_out] * feat_src[e, a, ch] * (w*Y)[e, b, ch]
+        edge_sh = ysh[:, :, None] * w                   # [E, 9, C]
+        fsrc = feats[src]                               # [E, 9, C]
+        msg = jnp.einsum("abc,eah,ebh->ech", g, fsrc, edge_sh)
+        agg = _scatter_sum(msg.reshape(-1, 9 * c), dst, n,
+                           batch.edge_mask).reshape(n, 9, c)
+        mix = lp["mix"][l_of]                           # [9, C, C], per-l
+        upd = jnp.einsum("sji,nsj->nsi", mix, agg)
+        # gate nonlinearity: scalars pass through silu; l>0 gated by scalars
+        gate = jax.nn.sigmoid(_mlp_apply(lp["gate"], upd[:, 0, :]))
+        upd = upd.at[:, 0, :].set(jax.nn.silu(upd[:, 0, :]))
+        upd = upd.at[:, 1:, :].multiply(gate[:, None, :])
+        feats = feats + upd
+    return _mlp_apply(params["out"], feats[:, 0, :]), batch.positions
+
+
+# --------------------------------------------------------------------------- #
+# MeshGraphNet  [arXiv:2010.03409]
+# --------------------------------------------------------------------------- #
+def _init_mgn(key, cfg: GNNConfigZoo):
+    ks = jax.random.split(key, 3 + 2 * cfg.n_layers)
+    d = cfg.d_hidden
+    hidden = [d] * cfg.mlp_layers
+    p = {"enc_n": _mlp_init(ks[0], [cfg.d_in] + hidden, cfg.dtype),
+         "enc_e": _mlp_init(ks[1], [max(cfg.d_edge_in, 1) + 4] + hidden,
+                            cfg.dtype),
+         "dec": _mlp_init(ks[2], hidden + [cfg.d_out], cfg.dtype),
+         "layers": []}
+    for i in range(cfg.n_layers):
+        p["layers"].append({
+            "edge_mlp": _mlp_init(ks[3 + 2 * i], [3 * d] + hidden, cfg.dtype),
+            "node_mlp": _mlp_init(ks[4 + 2 * i], [2 * d] + hidden, cfg.dtype),
+        })
+    return p
+
+
+def _apply_mgn(params, cfg: GNNConfigZoo, batch: GNNBatch):
+    n = batch.nodes.shape[0]
+    src, dst = batch.edge_src, batch.edge_dst
+    rel = batch.positions[src] - batch.positions[dst]
+    rn = jnp.sqrt(jnp.sum(rel * rel, -1, keepdims=True) + 1e-12)
+    ef = batch.edge_feats if cfg.d_edge_in else \
+        jnp.ones((src.shape[0], 1), cfg.dtype)
+    h = _mlp_apply(params["enc_n"], batch.nodes, final_act=True)
+    e = _mlp_apply(params["enc_e"], jnp.concatenate([ef, rel, rn], -1),
+                   final_act=True)
+    d = cfg.d_hidden
+    for lp in params["layers"]:
+        # first edge_mlp layer decomposed: src/dst blocks run node-side
+        w0 = lp["edge_mlp"][0]
+        pre_s = h @ w0["w"][d:2 * d]
+        pre_d = h @ w0["w"][2 * d:]
+        z = e @ w0["w"][:d] + pre_s[src] + pre_d[dst] + w0["b"]
+        e = e + _mlp_apply(lp["edge_mlp"][1:], jax.nn.silu(z),
+                           final_act=True)
+        agg = _scatter_sum(e, dst, n, batch.edge_mask)
+        h = h + _mlp_apply(lp["node_mlp"], jnp.concatenate([h, agg], -1),
+                           final_act=True)
+    return _mlp_apply(params["dec"], h), batch.positions
+
+
+# --------------------------------------------------------------------------- #
+# dispatcher
+# --------------------------------------------------------------------------- #
+_INIT = {"egnn": _init_egnn, "gatedgcn": _init_gatedgcn,
+         "nequip": _init_nequip, "meshgraphnet": _init_mgn}
+_APPLY = {"egnn": _apply_egnn, "gatedgcn": _apply_gatedgcn,
+          "nequip": _apply_nequip, "meshgraphnet": _apply_mgn}
+
+
+def init_gnn(cfg: GNNConfigZoo, key: jax.Array) -> dict[str, Any]:
+    return _INIT[cfg.arch](key, cfg)
+
+
+def apply_gnn(params: dict[str, Any], cfg: GNNConfigZoo, batch: GNNBatch
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (node outputs [N, d_out], final positions [N, 3])."""
+    nodes = constrain(batch.nodes, "nodes", None)
+    batch = dataclasses.replace(
+        batch, nodes=nodes,
+        edge_src=constrain(batch.edge_src, "edges"),
+        edge_dst=constrain(batch.edge_dst, "edges"))
+    out, pos = _APPLY[cfg.arch](params, cfg, batch)
+    return constrain(out, "nodes", None), pos
+
+
+def gnn_loss(params: dict[str, Any], cfg: GNNConfigZoo, batch: GNNBatch,
+             targets: jnp.ndarray) -> jnp.ndarray:
+    """Masked MSE on node outputs (regression form; classification uses CE
+    in the task head — benchmarks use MSE throughout for uniformity)."""
+    out, _ = apply_gnn(params, cfg, batch)
+    err = ((out - targets) ** 2).mean(-1)
+    m = batch.node_mask.astype(jnp.float32)
+    return (err * m).sum() / jnp.maximum(m.sum(), 1.0)

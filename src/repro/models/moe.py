@@ -1,0 +1,276 @@
+"""Mixture-of-Experts FFN: sort-based capacity dispatch, EP-shardable.
+
+Design (DESIGN.md §6, hardware adaptation): tokens are routed with a
+sort + rank + capacity-bounded gather into per-expert buffers, computed
+**per batch row** (the batch dim doubles as the dispatch group), so the
+whole layer is expressed with batched gathers/scatter-adds and three
+grouped einsums:
+
+    buffer[g, e, c, :] = tokens[g, token_for[g, e, c], :]      (gather)
+    h = einsum('gecd,edf->gecf', buffer, w_gate/w_up)          (expert GEMM)
+    out[g, t, :] += w_slot * y[g, e, c, :]                     (scatter-add)
+
+Why not the GShard one-hot dispatch einsum: its [T, E, C] x d contraction
+inflates HLO FLOPs by ~E/k x over the useful expert GEMMs, wrecking the
+MODEL_FLOPS/HLO_FLOPS ratio; gathers move the same bytes with zero FLOPs.
+
+Sharding: experts over 'model' (EP), batch groups over ('pod','data') (DP),
+expert weights additionally FSDP-sharded over 'data'.  The gather/scatter
+indices are tiny int arrays; GSPMD keeps them replicated and the heavy
+tensors fully local, with one all-reduce over 'model' at the combine.
+
+Routers: 'softmax' (Qwen-style top-k) and 'sigmoid' (DeepSeek-V3 style,
+aux-loss-free bias correction applied to selection only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.common import init_dense
+
+__all__ = ["MoEConfig", "init_moe_params", "moe_ffn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router: str = "softmax"           # softmax | sigmoid
+    router_scale: float = 1.0         # routed_scaling_factor (deepseek 2.5)
+    aux_coeff: float = 0.001
+    first_dense: int = 0              # leading dense-FFN layers
+    # expert weights additionally FSDP-sharded over 'data' (deepseek scale);
+    # the shard_map EP path then all-gathers them explicitly per layer.
+    fsdp_experts: bool = False
+
+
+def init_moe_params(key: jax.Array, d_model: int, cfg: MoEConfig,
+                    dtype=jnp.bfloat16) -> dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": init_dense(ks[0], (d_model, e), jnp.float32),
+        "w_gate": init_dense(ks[1], (e, d_model, f), dtype),
+        "w_up": init_dense(ks[2], (e, d_model, f), dtype),
+        "w_down": init_dense(ks[3], (e, f, d_model), dtype),
+    }
+    if cfg.router == "sigmoid":
+        p["router_bias"] = jnp.zeros((e,), jnp.float32)
+    if cfg.n_shared:
+        fs = cfg.n_shared * f
+        p["shared_gate"] = init_dense(ks[4], (d_model, fs), dtype)
+        p["shared_up"] = init_dense(ks[5], (d_model, fs), dtype)
+        p["shared_down"] = init_dense(ks[4], (fs, d_model), dtype)
+    return p
+
+
+def _route(x32: jnp.ndarray, params: dict[str, Any], cfg: MoEConfig
+           ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    return _route_arrays(x32, params["router"],
+                         params.get("router_bias"), cfg)
+
+
+def _route_arrays(x32: jnp.ndarray, router: jnp.ndarray,
+                  router_bias: jnp.ndarray | None, cfg: MoEConfig
+                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x32: [T, d] fp32 -> (weights [T,k], experts [T,k], aux_loss scalar)."""
+    logits = x32 @ router                                 # [T, E]
+    if cfg.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + router_bias[None, :]               # bias: selection only
+        _, idx = jax.lax.top_k(sel, cfg.top_k)
+        w = jnp.take_along_axis(scores, idx, axis=1)
+        w = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+        w = w * cfg.router_scale
+        aux = jnp.zeros((), jnp.float32)                  # aux-loss-free
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, cfg.top_k)
+        w = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+        # Switch-style load-balance aux loss
+        e = cfg.n_experts
+        frac_tokens = jnp.zeros(e).at[idx.reshape(-1)].add(1.0) / \
+            (idx.size + 1e-9)
+        frac_probs = probs.mean(axis=0)
+        aux = cfg.aux_coeff * e * jnp.sum(frac_tokens * frac_probs)
+    return w, idx, aux
+
+
+def _dispatch_indices(experts: jnp.ndarray, weights: jnp.ndarray,
+                      n_experts: int, capacity: int
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """[T, k] routing -> (token_for [E*C] (sentinel=T), weight_for [E*C]).
+
+    Slot (e, c) holds the c-th token-slot routed to expert e, in token order
+    (deterministic tie-break); overflow beyond `capacity` is dropped.
+    """
+    t, k = experts.shape
+    flat_e = experts.reshape(-1)                          # [T*k]
+    token_id = jnp.repeat(jnp.arange(t), k)
+    flat_w = weights.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], token_id[order], flat_w[order]
+    counts = jnp.zeros(n_experts, jnp.int32).at[se].add(1)
+    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                               jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * k) - offsets[se]
+    keep = rank < capacity
+    pos = jnp.where(keep, se * capacity + rank, n_experts * capacity)
+    token_for = jnp.full(n_experts * capacity + 1, t, jnp.int32) \
+        .at[pos].set(st.astype(jnp.int32))[:-1]
+    weight_for = jnp.zeros(n_experts * capacity + 1, jnp.float32) \
+        .at[pos].set(sw)[:-1]
+    return token_for, weight_for
+
+
+def moe_ffn(x: jnp.ndarray, params: dict[str, Any], cfg: MoEConfig
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar).
+
+    Dispatches to the shard_map EP path when a mesh with a 'model' axis is
+    ambient (production), else the single-device/GSPMD path below.  The
+    shard_map path exists because GSPMD cannot partition the batched
+    combine scatter: it falls back to replicating the full global
+    activation (30 GB+ all-gathers per layer at deepseek scale) — see
+    EXPERIMENTS.md §Perf hillclimb 3.
+    """
+    from repro.dist.sharding import current_mesh
+    mesh = current_mesh()
+    # single-token decode stays on the GSPMD path: per-step FSDP weight
+    # all-gathers (1.4 GB/layer) would dwarf the one-token compute.
+    if mesh is not None and "model" in mesh.axis_names \
+            and cfg.n_experts % mesh.shape["model"] == 0 \
+            and x.shape[1] > 1:
+        return _moe_ffn_shardmap(x, params, cfg, mesh)
+    return _moe_ffn_local(x, params, cfg)
+
+
+def _moe_ffn_local(x: jnp.ndarray, params: dict[str, Any], cfg: MoEConfig
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-device / pure-GSPMD reference path."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(s * k / e * cfg.capacity_factor), 1)
+    x32 = x.astype(jnp.float32)
+
+    def route_row(xr32):
+        w, idx, aux = _route(xr32, params, cfg)
+        token_for, weight_for = _dispatch_indices(idx, w, e, cap)
+        return token_for, weight_for, aux
+
+    token_for, weight_for, aux = jax.vmap(route_row)(x32)   # [B, E*C], ...
+    aux = aux.mean()
+    token_for = constrain(token_for.reshape(b, e, cap), "batch", "experts",
+                          None).reshape(b, e * cap)
+
+    # dispatch gather (zero-FLOP): pad a sentinel row per batch group
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    buf = jnp.take_along_axis(
+        x_pad, token_for[:, :, None].astype(jnp.int32), axis=1)
+    buf = constrain(buf.reshape(b, e, cap, d), "batch", "experts", None, None)
+
+    # expert GEMMs (the useful FLOPs)
+    h_g = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+    h_u = jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(x.dtype) * h_u
+    h = constrain(h, "batch", "experts", None, None)
+    y = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    y = y * weight_for.reshape(b, e, cap, 1).astype(y.dtype)
+
+    # combine scatter-add back to token order (psum over 'model' by GSPMD)
+    out = jnp.zeros((b, s + 1, d), x.dtype)
+    out = out.at[jnp.arange(b)[:, None], token_for, :].add(
+        y.reshape(b, e * cap, d))[:, :s, :]
+    out = constrain(out, "batch", "seq", "embed")
+
+    if cfg.n_shared:
+        out = out + _shared_experts(x, params)
+    return out, aux
+
+
+def _shared_experts(x: jnp.ndarray, params: dict[str, Any]) -> jnp.ndarray:
+    g = x @ params["shared_gate"]
+    u = x @ params["shared_up"]
+    hs = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return constrain(hs @ params["shared_down"], "batch", "seq", "embed")
+
+
+def _moe_ffn_shardmap(x: jnp.ndarray, params: dict[str, Any], cfg: MoEConfig,
+                      mesh) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Expert-parallel path under shard_map (production meshes).
+
+    Along 'model' the activations are replicated, so every device already
+    holds all tokens of its batch shard: each device routes locally (the
+    routing computation is identical on all model-peers), gathers the
+    capacity buffers of ITS local experts, runs the grouped GEMMs, does a
+    LOCAL combine scatter, and the only collective is one bf16 psum of
+    [b_loc, S, d] partial outputs over 'model' (+ explicit FSDP
+    all-gathers of expert weights when cfg.fsdp_experts).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import spec_for
+
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n_model = mesh.shape["model"]
+    e_loc = e // n_model
+    cap = max(int(s * k / e * cfg.capacity_factor), 1)
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    bias = params.get("router_bias")
+    has_bias = bias is not None
+    if not has_bias:
+        bias = jnp.zeros((e,), jnp.float32)
+
+    def local_fn(x_loc, router, router_bias, w_g, w_u, w_d):
+        if cfg.fsdp_experts:
+            w_g = jax.lax.all_gather(w_g, "data", axis=1, tiled=True)
+            w_u = jax.lax.all_gather(w_u, "data", axis=1, tiled=True)
+            w_d = jax.lax.all_gather(w_d, "data", axis=1, tiled=True)
+        my_e0 = jax.lax.axis_index("model") * e_loc
+
+        def row(xr):
+            w, idx, aux = _route_arrays(xr.astype(jnp.float32), router,
+                                        router_bias if has_bias else None,
+                                        cfg)
+            token_for, weight_for = _dispatch_indices(idx, w, e, cap)
+            tf = jax.lax.dynamic_slice_in_dim(token_for, my_e0 * cap,
+                                              e_loc * cap)
+            wf = jax.lax.dynamic_slice_in_dim(weight_for, my_e0 * cap,
+                                              e_loc * cap)
+            x_pad = jnp.concatenate([xr, jnp.zeros((1, d), xr.dtype)], 0)
+            buf = x_pad[tf].reshape(e_loc, cap, d)
+            h_g = jnp.einsum("ecd,edf->ecf", buf, w_g)
+            h_u = jnp.einsum("ecd,edf->ecf", buf, w_u)
+            h = jax.nn.silu(h_g.astype(jnp.float32)).astype(xr.dtype) * h_u
+            y = jnp.einsum("ecf,efd->ecd", h, w_d)
+            y = y * wf.reshape(e_loc, cap, 1).astype(y.dtype)
+            out = jnp.zeros((s + 1, d), xr.dtype) \
+                .at[tf].add(y.reshape(-1, d))[:s]
+            return out, aux
+
+        out, aux = jax.vmap(row)(x_loc)
+        out = jax.lax.psum(out, "model")
+        aux = jax.lax.pmean(aux.mean(), mesh.axis_names)
+        return out, aux
+
+    wspec = P("model", "data" if cfg.fsdp_experts else None, None)
+    routed, aux = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp, None, None), P(), P(), wspec, wspec, wspec),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,
+    )(x, params["router"], bias, params["w_gate"], params["w_up"],
+      params["w_down"])
+    if cfg.n_shared:
+        routed = routed + _shared_experts(x, params)
+    return routed, aux

@@ -1,0 +1,530 @@
+"""Unified decoder LM: GQA / sliding-window / MLA attention, dense / MoE FFN.
+
+One model covers the five assigned LM architectures via LMConfig:
+  yi-6b            GQA (32H/4KV), RoPE, SwiGLU
+  h2o-danube-1.8b  GQA (32H/8KV) + sliding-window attention
+  glm4-9b          GQA (32H/2KV), RoPE
+  qwen2-moe-a2.7b  GQA + MoE (4 shared + 60 routed top-4)
+  deepseek-v3-671b MLA + MoE (1 shared + 256 routed top-8, sigmoid router,
+                   3 leading dense layers) + optional MTP head
+
+Structure: scan-over-layers (homogeneous stacks; DeepSeek uses two stacks —
+dense-FFN prefix, then MoE), remat per layer, logical-axis sharding
+annotations throughout (repro.dist.sharding).
+
+Public entry points:
+  init_params(cfg, key)                              parameter pytree
+  lm_loss(params, cfg, tokens, labels)               training loss
+  prefill(params, cfg, tokens)                       logits (inference)
+  init_cache(cfg, batch, t_max)                      KV cache pytree
+  decode_step(params, cfg, cache, tokens, pos)       one-token serve step
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import moe as moe_lib
+from repro.models.common import (apply_rope, blockwise_attention,
+                                 causal_mask_bias, cross_entropy_loss,
+                                 dense_attention, init_dense, rms_norm,
+                                 swiglu)
+
+__all__ = ["MLAConfig", "LMConfig", "init_params", "lm_loss", "prefill",
+           "init_cache", "decode_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10000.0
+    sliding_window: int | None = None
+    mla: MLAConfig | None = None
+    moe: moe_lib.MoEConfig | None = None
+    mtp: bool = False
+    mtp_weight: float = 0.3
+    dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    remat: bool = True
+    blockwise_from: int = 8192       # use online-softmax attention at S >= this
+    block_kv: int = 1024
+    # unroll=True replaces scan-over-layers with a Python loop: XLA's
+    # cost_analysis counts a scan body ONCE, so roofline calibration lowers
+    # small unrolled depths and extrapolates (benchmarks/flops_calib.py).
+    unroll: bool = False
+
+    @property
+    def qk_dim(self) -> int:
+        if self.mla is not None:
+            return self.mla.nope_head_dim + self.mla.rope_head_dim
+        return self.head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (drives 6·N·D roofline MODEL_FLOPS)."""
+        d, v = self.d_model, self.vocab
+        n = 2 * v * d                                   # embed + head
+        if self.mla is None:
+            attn = d * (self.n_heads * self.head_dim) * 2 \
+                + d * (self.n_kv_heads * self.head_dim) * 2
+        else:
+            m = self.mla
+            attn = (d * m.q_lora_rank
+                    + m.q_lora_rank * self.n_heads * self.qk_dim
+                    + d * (m.kv_lora_rank + m.rope_head_dim)
+                    + m.kv_lora_rank * self.n_heads
+                    * (m.nope_head_dim + m.v_head_dim)
+                    + self.n_heads * m.v_head_dim * d)
+        dense_ffn = 3 * d * self.d_ff
+        n += self.n_layers * attn + self.n_layers * 2 * d
+        if self.moe is None:
+            n += self.n_layers * dense_ffn
+        else:
+            mo = self.moe
+            expert = 3 * d * mo.d_ff_expert
+            moe_layers = self.n_layers - mo.first_dense
+            n += mo.first_dense * dense_ffn
+            n += moe_layers * (mo.n_experts * expert
+                               + mo.n_shared * expert + d * mo.n_experts)
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k + shared only)."""
+        if self.moe is None:
+            return self.param_count()
+        mo = self.moe
+        expert = 3 * self.d_model * mo.d_ff_expert
+        moe_layers = self.n_layers - mo.first_dense
+        total = self.param_count()
+        inactive = moe_layers * (mo.n_experts - mo.top_k) * expert
+        return int(total - inactive)
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+def _init_attn(key: jax.Array, cfg: LMConfig) -> dict[str, Any]:
+    dt = cfg.dtype
+    d = cfg.d_model
+    if cfg.mla is None:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "wq": init_dense(k1, (d, cfg.n_heads * cfg.head_dim), dt),
+            "wk": init_dense(k2, (d, cfg.n_kv_heads * cfg.head_dim), dt),
+            "wv": init_dense(k3, (d, cfg.n_kv_heads * cfg.head_dim), dt),
+            "wo": init_dense(k4, (cfg.n_heads * cfg.head_dim, d), dt),
+        }
+    m = cfg.mla
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": init_dense(ks[0], (d, m.q_lora_rank), dt),
+        "q_norm": jnp.ones(m.q_lora_rank, dt),
+        "w_uq": init_dense(ks[1], (m.q_lora_rank,
+                                   cfg.n_heads * cfg.qk_dim), dt),
+        "w_dkv": init_dense(ks[2], (d, m.kv_lora_rank), dt),
+        "kv_norm": jnp.ones(m.kv_lora_rank, dt),
+        "w_kpe": init_dense(ks[3], (d, m.rope_head_dim), dt),
+        "w_uk": init_dense(ks[4], (m.kv_lora_rank,
+                                   cfg.n_heads * m.nope_head_dim), dt),
+        "w_uv": init_dense(ks[5], (m.kv_lora_rank,
+                                   cfg.n_heads * m.v_head_dim), dt),
+        "wo": init_dense(ks[6], (cfg.n_heads * m.v_head_dim, d), dt),
+    }
+
+
+def _init_layer(key: jax.Array, cfg: LMConfig, use_moe: bool
+                ) -> dict[str, Any]:
+    dt = cfg.dtype
+    d = cfg.d_model
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "ln1": jnp.ones(d, dt),
+        "ln2": jnp.ones(d, dt),
+        "attn": _init_attn(k1, cfg),
+    }
+    if use_moe:
+        p["moe"] = moe_lib.init_moe_params(k2, d, cfg.moe, dt)
+    else:
+        p["ffn"] = {
+            "w_gate": init_dense(k3, (d, cfg.d_ff), dt),
+            "w_up": init_dense(k4, (d, cfg.d_ff), dt),
+            "w_down": init_dense(k5, (cfg.d_ff, d), dt),
+        }
+    return p
+
+
+def init_params(cfg: LMConfig, key: jax.Array) -> dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    dt = cfg.dtype
+    first_dense = cfg.moe.first_dense if cfg.moe is not None else cfg.n_layers
+    n_dense = min(first_dense, cfg.n_layers)
+    n_moe = cfg.n_layers - n_dense
+    params: dict[str, Any] = {
+        "embed": init_dense(ks[0], (cfg.vocab, cfg.d_model), dt),
+        "final_norm": jnp.ones(cfg.d_model, dt),
+        "w_out": init_dense(ks[1], (cfg.d_model, cfg.vocab), dt),
+    }
+    if n_dense:
+        lk = jax.random.split(ks[2], n_dense)
+        params["dense_stack"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, use_moe=False))(lk)
+    if n_moe:
+        lk = jax.random.split(ks[3], n_moe)
+        params["moe_stack"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, use_moe=True))(lk)
+    if cfg.mtp:
+        params["mtp_layer"] = _init_layer(ks[4], cfg, use_moe=False)
+        params["mtp_proj"] = init_dense(ks[5], (2 * cfg.d_model, cfg.d_model),
+                                        dt)
+        params["mtp_norm"] = jnp.ones(cfg.d_model, dt)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------------- #
+def _kv_heads_shardable(cfg: LMConfig) -> bool:
+    from repro.dist.sharding import current_mesh
+    mesh = current_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return True
+    return cfg.n_kv_heads % mesh.shape["model"] == 0
+
+
+def _gqa_attention(h: jnp.ndarray, ap: dict[str, Any], cfg: LMConfig,
+                   positions: jnp.ndarray) -> jnp.ndarray:
+    b, s, _ = h.shape
+    q = (h @ ap["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (h @ ap["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ ap["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    # K/V head-axis sharding only when the KV heads divide the axis —
+    # otherwise GSPMD falls into involuntary full-remat f32 copies every
+    # layer (EXPERIMENTS §Perf hillclimb 2: -11% HBM bytes, -34% ICI).
+    kv_ok = _kv_heads_shardable(cfg)
+    k = constrain(k, "batch", "seq", "heads" if kv_ok else None, None)
+    v = constrain(v, "batch", "seq", "heads" if kv_ok else None, None)
+    scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+    if s >= cfg.blockwise_from:
+        out = blockwise_attention(q, k, v, scale, 0, cfg.sliding_window,
+                                  cfg.block_kv, unroll=cfg.unroll)
+    else:
+        bias = causal_mask_bias(s, s, 0, cfg.sliding_window)
+        out = dense_attention(q, k, v, bias, scale)
+    out = constrain(out, "batch", "seq", "heads", None)
+    return out.reshape(b, s, -1) @ ap["wo"]
+
+
+def _mla_attention(h: jnp.ndarray, ap: dict[str, Any], cfg: LMConfig,
+                   positions: jnp.ndarray) -> jnp.ndarray:
+    """Training/prefill MLA (non-absorbed)."""
+    m = cfg.mla
+    b, s, _ = h.shape
+    hh = cfg.n_heads
+    cq = rms_norm(h @ ap["w_dq"], ap["q_norm"], cfg.norm_eps)
+    q = (cq @ ap["w_uq"]).reshape(b, s, hh, cfg.qk_dim)
+    q_nope, q_pe = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    ckv = rms_norm(h @ ap["w_dkv"], ap["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope((h @ ap["w_kpe"])[:, :, None, :], positions,
+                      cfg.rope_theta)                      # [B,S,1,rope]
+    k_nope = (ckv @ ap["w_uk"]).reshape(b, s, hh, m.nope_head_dim)
+    v = (ckv @ ap["w_uv"]).reshape(b, s, hh, m.v_head_dim)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_pe, (b, s, hh, m.rope_head_dim))],
+                        axis=-1)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "heads", None)
+    v = constrain(v, "batch", "seq", "heads", None)
+    scale = 1.0 / jnp.sqrt(cfg.qk_dim).astype(jnp.float32)
+    if s >= cfg.blockwise_from:
+        out = blockwise_attention(q, k, v, scale, 0, None, cfg.block_kv,
+                                  unroll=cfg.unroll)
+    else:
+        bias = causal_mask_bias(s, s)
+        out = dense_attention(q, k, v, bias, scale)
+    out = constrain(out, "batch", "seq", "heads", None)
+    return out.reshape(b, s, -1) @ ap["wo"]
+
+
+# --------------------------------------------------------------------------- #
+# layer + full forward
+# --------------------------------------------------------------------------- #
+def _layer_fwd(x: jnp.ndarray, lp: dict[str, Any], cfg: LMConfig,
+               positions: jnp.ndarray, use_moe: bool
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn = _mla_attention(h, lp["attn"], cfg, positions) if cfg.mla \
+        else _gqa_attention(h, lp["attn"], cfg, positions)
+    x = constrain(x + attn, "batch", "seq", "embed")
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if use_moe:
+        f, aux = moe_lib.moe_ffn(h, lp["moe"], cfg.moe)
+    else:
+        f = swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                   lp["ffn"]["w_down"])
+        aux = jnp.zeros((), jnp.float32)
+    return constrain(x + f, "batch", "seq", "embed"), aux
+
+
+def _run_stack(x: jnp.ndarray, stack: dict[str, Any], cfg: LMConfig,
+               positions: jnp.ndarray, use_moe: bool
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    body = functools.partial(_layer_fwd, cfg=cfg, positions=positions,
+                             use_moe=use_moe)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    if cfg.unroll:
+        aux = jnp.zeros((), jnp.float32)
+        n_layers = jax.tree.leaves(stack)[0].shape[0]
+        for i in range(n_layers):
+            lp = jax.tree.map(lambda p: p[i], stack)
+            x, a = body(x, lp)
+            aux = aux + a
+        return x, aux
+
+    def scan_fn(carry, lp):
+        x, aux = carry
+        x, a = body(x, lp)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)),
+                               stack)
+    return x, aux
+
+
+def _backbone(params: dict[str, Any], cfg: LMConfig, tokens: jnp.ndarray
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = constrain(x, "batch", "seq", "embed")
+    aux = jnp.zeros((), jnp.float32)
+    if "dense_stack" in params:
+        x, a = _run_stack(x, params["dense_stack"], cfg, positions, False)
+        aux += a
+    if "moe_stack" in params:
+        x, a = _run_stack(x, params["moe_stack"], cfg, positions, True)
+        aux += a
+    return x, aux
+
+
+def prefill(params: dict[str, Any], cfg: LMConfig,
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    """[B, S] -> logits [B, S, V] (also the training forward)."""
+    x, _ = _backbone(params, cfg, tokens)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return constrain(x @ params["w_out"], "batch", "seq", "vocab")
+
+
+def lm_loss(params: dict[str, Any], cfg: LMConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray) -> jnp.ndarray:
+    x, aux = _backbone(params, cfg, tokens)
+    xn = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = constrain(xn @ params["w_out"], "batch", "seq", "vocab")
+    loss = cross_entropy_loss(logits, labels) + aux
+    if cfg.mtp:
+        # MTP: predict t+2 from (h_t, embed(token_{t+1})) through one layer
+        b, s = tokens.shape
+        emb_next = params["embed"][labels].astype(cfg.dtype)
+        merged = jnp.concatenate(
+            [rms_norm(x, params["mtp_norm"], cfg.norm_eps), emb_next],
+            axis=-1) @ params["mtp_proj"]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+        h_mtp, _ = _layer_fwd(merged, params["mtp_layer"], cfg, positions,
+                              use_moe=False)
+        logits2 = rms_norm(h_mtp, params["final_norm"],
+                           cfg.norm_eps) @ params["w_out"]
+        # labels shifted one beyond: token_{t+2} = labels shifted left by 1
+        l2 = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+        mask = jnp.ones_like(l2, jnp.float32).at[:, -1].set(0.0)
+        loss = loss + cfg.mtp_weight * cross_entropy_loss(logits2, l2, mask)
+    return loss
+
+
+# --------------------------------------------------------------------------- #
+# decode (serving)
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: LMConfig, batch: int, t_max: int) -> dict[str, Any]:
+    """KV cache pytree.  GQA: (k, v); MLA: compressed (ckv, kpe).
+
+    `t_max` should be min(seq_len, sliding_window) for SWA models — the
+    cache is a ring buffer indexed by pos % t_max with per-slot positions.
+    """
+    l = cfg.n_layers
+    dt = cfg.dtype
+    if cfg.mla is None:
+        shape = (l, batch, t_max, cfg.n_kv_heads, cfg.head_dim)
+        cache = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    else:
+        m = cfg.mla
+        cache = {
+            "ckv": jnp.zeros((l, batch, t_max, m.kv_lora_rank), dt),
+            "kpe": jnp.zeros((l, batch, t_max, m.rope_head_dim), dt),
+        }
+    cache["slot_pos"] = jnp.full((t_max,), -1, jnp.int32)
+    return cache
+
+
+def _decode_layer_gqa(x, lp, kc, vc, slot_pos, pos, slot, cfg):
+    b = x.shape[0]
+    t_max = kc.shape[1]
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    ppos = jnp.full((b, 1), pos, jnp.int32)
+    q = (h @ lp["attn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = (h @ lp["attn"]["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ lp["attn"]["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, ppos, cfg.rope_theta)
+    k = apply_rope(k, ppos, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+    kc = constrain(kc, "batch", "kv_len", None, None)
+    vc = constrain(vc, "batch", "kv_len", None, None)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if cfg.sliding_window is not None:
+        valid &= (pos - slot_pos) < cfg.sliding_window
+    bias = jnp.where(valid, 0.0, -jnp.inf).astype(jnp.float32)[None, :]
+    scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+    out = dense_attention(q, kc, vc, bias, scale)
+    x = x + out.reshape(b, 1, -1) @ lp["attn"]["wo"]
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        f, _ = moe_lib.moe_ffn(h, lp["moe"], cfg.moe)
+    else:
+        f = swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                   lp["ffn"]["w_down"])
+    return x + f, kc, vc
+
+
+def _decode_layer_mla(x, lp, ckv_c, kpe_c, slot_pos, pos, slot, cfg):
+    """Absorbed MLA decode: scores via compressed cache, no K/V expansion."""
+    m = cfg.mla
+    b = x.shape[0]
+    hh = cfg.n_heads
+    ap = lp["attn"]
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    ppos = jnp.full((b, 1), pos, jnp.int32)
+    cq = rms_norm(h @ ap["w_dq"], ap["q_norm"], cfg.norm_eps)
+    q = (cq @ ap["w_uq"]).reshape(b, 1, hh, cfg.qk_dim)
+    q_nope, q_pe = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_pe = apply_rope(q_pe, ppos, cfg.rope_theta)
+    ckv = rms_norm(h @ ap["w_dkv"], ap["kv_norm"], cfg.norm_eps)[:, :, :]
+    kpe = apply_rope((h @ ap["w_kpe"])[:, :, None, :], ppos,
+                     cfg.rope_theta)[:, :, 0, :]
+    ckv_c = jax.lax.dynamic_update_slice(ckv_c, ckv, (0, slot, 0))
+    kpe_c = jax.lax.dynamic_update_slice(kpe_c, kpe, (0, slot, 0))
+    ckv_c = constrain(ckv_c, "batch", "kv_len", None)
+    kpe_c = constrain(kpe_c, "batch", "kv_len", None)
+    # absorb W_UK into q:  q_c[b,h,c] = sum_d q_nope[b,h,d] * w_uk[c,h,d]
+    w_uk = ap["w_uk"].reshape(m.kv_lora_rank, hh, m.nope_head_dim)
+    q_c = jnp.einsum("bhd,chd->bhc", q_nope[:, 0], w_uk)
+    scores = (jnp.einsum("bhc,btc->bht", q_c, ckv_c)
+              + jnp.einsum("bhr,btr->bht", q_pe[:, 0], kpe_c)
+              ).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(cfg.qk_dim).astype(jnp.float32)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    scores = scores * scale + jnp.where(valid, 0.0, -jnp.inf)[None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bht,btc->bhc", probs, ckv_c)
+    w_uv = ap["w_uv"].reshape(m.kv_lora_rank, hh, m.v_head_dim)
+    v_ctx = jnp.einsum("bhc,chd->bhd", ctx, w_uv)
+    x = x + (v_ctx.reshape(b, 1 * hh * m.v_head_dim)[:, None, :]
+             @ ap["wo"])
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        f, _ = moe_lib.moe_ffn(h, lp["moe"], cfg.moe)
+    else:
+        f = swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                   lp["ffn"]["w_down"])
+    return x + f, ckv_c, kpe_c
+
+
+def decode_step(params: dict[str, Any], cfg: LMConfig, cache: dict[str, Any],
+                tokens: jnp.ndarray, pos: jnp.ndarray
+                ) -> tuple[jnp.ndarray, dict[str, Any]]:
+    """One serve step: tokens [B, 1] at absolute position `pos` (scalar).
+
+    Returns (logits [B, 1, V], updated cache).  Ring-buffer slot = pos % t_max
+    handles both full caches (t_max = seq_len) and SWA-bounded caches.
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    first_dense = cfg.moe.first_dense if cfg.moe is not None else cfg.n_layers
+    n_dense = min(first_dense, cfg.n_layers)
+    if cfg.mla is None:
+        t_max = cache["k"].shape[2]
+    else:
+        t_max = cache["ckv"].shape[2]
+    slot = (pos % t_max).astype(jnp.int32)
+    # mark the current slot valid BEFORE the layers run (it holds this step's
+    # key); layers read slot_pos for masking.
+    slot_pos = cache["slot_pos"].at[slot].set(pos.astype(jnp.int32))
+
+    def run(x, stack, cache_sl, use_moe, kind):
+        fn = _decode_layer_mla if kind == "mla" else _decode_layer_gqa
+
+        def scan_fn(x, xs):
+            lp, c1, c2 = xs
+            x, n1, n2 = fn(x, lp, c1, c2, slot_pos, pos, slot, cfg)
+            return x, (n1, n2)
+
+        if cfg.unroll:
+            n_layers = jax.tree.leaves(stack)[0].shape[0]
+            outs1, outs2 = [], []
+            for i in range(n_layers):
+                lp = jax.tree.map(lambda p: p[i], stack)
+                x, n1, n2 = fn(x, lp, cache_sl[0][i], cache_sl[1][i],
+                               slot_pos, pos, slot, cfg)
+                outs1.append(n1), outs2.append(n2)
+            return x, (jnp.stack(outs1), jnp.stack(outs2))
+        return jax.lax.scan(scan_fn, x, (stack, *cache_sl))
+
+    kind = "mla" if cfg.mla is not None else "gqa"
+    c_names = ("ckv", "kpe") if kind == "mla" else ("k", "v")
+    new1, new2 = [], []
+    off = 0
+    if "dense_stack" in params:
+        nl = n_dense
+        sl = tuple(cache[n][off:off + nl] for n in c_names)
+        x, (u1, u2) = run(x, params["dense_stack"], sl, False, kind)
+        new1.append(u1), new2.append(u2)
+        off += nl
+    if "moe_stack" in params:
+        nl = cfg.n_layers - n_dense
+        sl = tuple(cache[n][off:off + nl] for n in c_names)
+        x, (u1, u2) = run(x, params["moe_stack"], sl, True, kind)
+        new1.append(u1), new2.append(u2)
+    new_cache = {
+        c_names[0]: jnp.concatenate(new1, axis=0),
+        c_names[1]: jnp.concatenate(new2, axis=0),
+        "slot_pos": slot_pos,
+    }
+    xn = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = constrain(xn @ params["w_out"], "batch", "seq", "vocab")
+    return logits, new_cache

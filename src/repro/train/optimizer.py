@@ -1,0 +1,177 @@
+"""Optimizers: Adam / AdamW (pytree-native) + 8-bit blockwise state variant.
+
+No optax in this environment, so the framework carries its own optimizers.
+The 8-bit blockwise quantized Adam (Dettmers-style dynamic blockwise
+quantization, block=256) is the distributed-optimization trick that makes
+deepseek-v3-scale optimizer state fit the per-device HBM budget (see
+DESIGN.md §6): m and v are stored int8 + one fp32 scale per 256-block,
+dequantized on the fly inside the update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "adam_init", "adam_update",
+    "adamw_init", "adamw_update",
+    "Adam8bitState", "adam8bit_init", "adam8bit_update",
+    "global_norm", "clip_by_global_norm",
+]
+
+Pytree = Any
+
+
+# --------------------------------------------------------------------------- #
+# fp32 Adam / AdamW
+# --------------------------------------------------------------------------- #
+class AdamState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+    step: jnp.ndarray
+
+
+def adam_init(params: Pytree) -> AdamState:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return AdamState(mu=z, nu=jax.tree.map(jnp.zeros_like, params),
+                     step=jnp.zeros((), jnp.int32))
+
+
+def adam_update(params: Pytree, grads: Pytree, state: AdamState, *,
+                lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+                eps: float = 1e-8, weight_decay: float = 0.0
+                ) -> tuple[Pytree, AdamState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        new_p = p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+        return new_p, m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamState(new_mu, new_nu, step)
+
+
+def adamw_init(params: Pytree) -> AdamState:
+    return adam_init(params)
+
+
+def adamw_update(params, grads, state, *, lr=1e-3, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    return adam_update(params, grads, state, lr=lr, b1=b1, b2=b2, eps=eps,
+                       weight_decay=weight_decay)
+
+
+# --------------------------------------------------------------------------- #
+# 8-bit blockwise Adam
+# --------------------------------------------------------------------------- #
+_BLOCK = 256
+
+
+class Adam8bitState(NamedTuple):
+    """m/v stored as parallel trees of int8 codes + per-block fp32 scales.
+
+    Four trees, each mirroring the param tree exactly (array leaves only),
+    so every jax.tree.map over (params, grads, state...) is structure-safe.
+    """
+    mu_codes: Pytree        # int8  [ceil(n/256)*256]
+    mu_scales: Pytree       # f32   [ceil(n/256)]
+    nu_codes: Pytree
+    nu_scales: Pytree
+    step: jnp.ndarray
+
+
+def _quantize(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    n_pad = ((n + _BLOCK - 1) // _BLOCK) * _BLOCK
+    flat = jnp.pad(flat, (0, n_pad - n))
+    blocks = flat.reshape(-1, _BLOCK)
+    scales = jnp.max(jnp.abs(blocks), axis=1) + 1e-12
+    codes = jnp.clip(jnp.round(blocks / scales[:, None] * 127.0),
+                     -127, 127).astype(jnp.int8)
+    return codes.reshape(-1), scales
+
+
+def _dequantize(codes: jnp.ndarray, scales: jnp.ndarray,
+                shape: tuple) -> jnp.ndarray:
+    blocks = codes.reshape(-1, _BLOCK).astype(jnp.float32)
+    flat = (blocks * (scales[:, None] / 127.0)).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def adam8bit_init(params: Pytree) -> Adam8bitState:
+    qz = jax.tree.map(lambda p: _quantize(jnp.zeros(p.shape, jnp.float32)),
+                      params)
+    codes = jax.tree.map(lambda q: q[0], qz,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree.map(lambda q: q[1], qz,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return Adam8bitState(mu_codes=codes, mu_scales=scales,
+                         nu_codes=jax.tree.map(jnp.copy, codes),
+                         nu_scales=jax.tree.map(jnp.copy, scales),
+                         step=jnp.zeros((), jnp.int32))
+
+
+def adam8bit_update(params: Pytree, grads: Pytree, state: Adam8bitState, *,
+                    lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+                    eps: float = 1e-8, weight_decay: float = 0.0
+                    ) -> tuple[Pytree, Adam8bitState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, mc, ms, vc, vs):
+        g = g.astype(jnp.float32)
+        m = b1 * _dequantize(mc, ms, p.shape) + (1 - b1) * g
+        v = b2 * _dequantize(vc, vs, p.shape) + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        new_p = (p.astype(jnp.float32)
+                 - lr * (mh / (jnp.sqrt(vh) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+                 ).astype(p.dtype)
+        nmc, nms = _quantize(m)
+        nvc, nvs = _quantize(v)
+        return new_p, nmc, nms, nvc, nvs
+
+    out = jax.tree.map(upd, params, grads, state.mu_codes, state.mu_scales,
+                       state.nu_codes, state.nu_scales)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), Adam8bitState(pick(1), pick(2), pick(3), pick(4), step)
+
+
+# --------------------------------------------------------------------------- #
+# gradient utilities
+# --------------------------------------------------------------------------- #
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float) -> tuple[Pytree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), norm

@@ -1,0 +1,111 @@
+"""Generic training loop: microbatch accumulation, clip, checkpoint, logs.
+
+Works for any (params, opt, batch)->(params, opt, metrics) step — the LM,
+GNN, and recsys families all build their steps through this module when
+trained for real (examples/, launch/train.py); the dry-run lowers the same
+step functions without executing them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.checkpoint import restore_latest, save_checkpoint
+from repro.train.optimizer import (adamw_init, adamw_update,
+                                   clip_by_global_norm)
+
+__all__ = ["TrainConfig", "Trainer", "make_accum_step"]
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    n_steps: int = 200
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    accum_steps: int = 1
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    log_every: int = 10
+
+
+def make_accum_step(loss_fn: Callable, opt_update: Callable,
+                    clip_norm: float = 1.0, accum_steps: int = 1):
+    """(params, opt, batch) step with gradient accumulation over microbatches.
+
+    batch leaves must have a leading dim divisible by accum_steps.
+    """
+
+    def step(params, opt, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(i, carry):
+                gsum, lsum = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // accum_steps),
+                        x.shape[0] // accum_steps), batch)
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l)
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            grads, loss = jax.lax.fori_loop(
+                0, accum_steps, micro, (zeros, jnp.zeros((), jnp.float32)))
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        params, opt = opt_update(params, grads, opt)
+        return params, opt, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+class Trainer:
+    """Checkpointed training loop with restart-from-latest-valid."""
+
+    def __init__(self, loss_fn: Callable, params: Any,
+                 cfg: TrainConfig = TrainConfig(),
+                 opt_init=adamw_init, opt_update=None) -> None:
+        self.cfg = cfg
+        ou = opt_update or (lambda p, g, o: adamw_update(
+            p, g, o, lr=cfg.lr, weight_decay=cfg.weight_decay))
+        self.step_fn = jax.jit(make_accum_step(
+            loss_fn, ou, cfg.clip_norm, cfg.accum_steps))
+        self.params = params
+        self.opt = opt_init(params)
+        self.step = 0
+        self.history: list[dict[str, float]] = []
+        if cfg.ckpt_dir:
+            restored = restore_latest(cfg.ckpt_dir,
+                                      (self.params, self.opt))
+            if restored is not None:
+                (self.params, self.opt), manifest = restored
+                self.step = int(manifest["step"])
+
+    def fit(self, batches: Iterator[Any], n_steps: int | None = None
+            ) -> list[dict[str, float]]:
+        n = n_steps or self.cfg.n_steps
+        t0 = time.time()
+        while self.step < n:
+            batch = next(batches)
+            batch = jax.tree.map(jnp.asarray, batch)
+            self.params, self.opt, metrics = self.step_fn(
+                self.params, self.opt, batch)
+            self.step += 1
+            if self.step % self.cfg.log_every == 0 or self.step == n:
+                rec = {k: float(v) for k, v in metrics.items()}
+                rec["step"] = self.step
+                rec["wall_s"] = time.time() - t0
+                self.history.append(rec)
+            if (self.cfg.ckpt_dir and
+                    (self.step % self.cfg.ckpt_every == 0
+                     or self.step == n)):
+                save_checkpoint(self.cfg.ckpt_dir, self.step,
+                                (self.params, self.opt))
+        return self.history

@@ -1,0 +1,33 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests see 1 device."""
+
+import numpy as np
+import pytest
+
+from repro.core.graph import LabeledGraph
+
+
+@pytest.fixture(scope="session")
+def small_graph() -> LabeledGraph:
+    rng = np.random.default_rng(0)
+    n, m = 150, 450
+    edges = rng.integers(0, n, size=(m, 2))
+    labels = rng.integers(0, 5, size=n)
+    return LabeledGraph.from_edges(n, edges, labels)
+
+
+@pytest.fixture(scope="session")
+def nws_small():
+    from repro.data.synthetic import nws_graph
+    return nws_graph(400, 6, 0.1, 6, seed=0)
+
+
+def vf2_oracle(data: LabeledGraph, query: LabeledGraph) -> set:
+    from networkx.algorithms import isomorphism
+    gm = isomorphism.GraphMatcher(
+        data.to_networkx(), query.to_networkx(),
+        node_match=lambda a, b: a["label"] == b["label"])
+    out = set()
+    for mp in gm.subgraph_monomorphisms_iter():
+        inv = {v: k for k, v in mp.items()}
+        out.add(tuple(inv[i] for i in range(query.n_vertices)))
+    return out

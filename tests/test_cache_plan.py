@@ -1,0 +1,219 @@
+"""Innovations 2 & 3: caching subsystem + PE-score plan ranking."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cache.awresnet import AWResNet, initial_weights_from_warmup
+from repro.cache.features import FeatureTracker, dynamic_window
+from repro.cache.policy import (LFUCache, LRUCache, TwoLevelCache, ValueCache,
+                                dynamic_trigger, protected_degree_threshold)
+from repro.core.pescore import (GBDT, PEScoreModel, adaptive_tree_count,
+                                fit_gbdt)
+
+
+# --------------------------------------------------------------------------- #
+# features
+# --------------------------------------------------------------------------- #
+def test_dynamic_window_tiers():
+    assert dynamic_window(25) == 30.0
+    assert dynamic_window(10) == 60.0
+    assert dynamic_window(2) == 120.0
+
+
+def test_feature_tracker_ranges():
+    tr = FeatureTracker()
+    for t in range(50):
+        # p0 accessed every step (genuinely hot); others round-robin
+        sigs = ["p0", f"p{1 + t % 4}"]
+        tr.record_query(float(t), sigs, {s: t % 2 == 0 for s in sigs})
+    for s in [f"p{i}" for i in range(5)]:
+        f = tr.features(s)
+        assert all(0.0 <= x <= 1.0 for x in f), f
+    f_hot = tr.features("p0")
+    assert f_hot[0] >= max(tr.features(f"p{i}")[0] for i in range(1, 5)) - 1e-9
+
+
+def test_feature_decay_monotone():
+    tr = FeatureTracker()
+    tr.record_query(0.0, ["x"], {"x": True})
+    f0 = tr.features("x")
+    tr.now = 600.0         # 2*tau later
+    f1 = tr.features("x")
+    assert f1[0] < f0[0] and f1[3] <= f0[3]
+
+
+# --------------------------------------------------------------------------- #
+# AW-ResNet (Algorithms 2 & 5)
+# --------------------------------------------------------------------------- #
+def test_algorithm2_initial_weights():
+    rng = np.random.default_rng(0)
+    f = rng.uniform(0, 1, (100, 4))
+    f[:, 2] *= 10          # high-variance feature
+    w = initial_weights_from_warmup(f)
+    assert w.shape == (4,) and abs(w.sum() - 1.0) < 1e-9
+    assert w[2] == w.max()
+    # zero variance -> equal weights
+    w0 = initial_weights_from_warmup(np.ones((10, 4)))
+    assert np.allclose(w0, 0.25)
+
+
+def test_awresnet_weights_sum_to_one():
+    m = AWResNet(seed=0)
+    w = m.weights(np.random.default_rng(0).uniform(0, 1, (7, 4)))
+    assert w.shape == (7, 4)
+    assert np.allclose(w.sum(axis=1), 1.0, atol=1e-5)
+
+
+def test_algorithm5_rollback_gate():
+    m = AWResNet(seed=0)
+    rng = np.random.default_rng(0)
+    for i in range(120):
+        f = rng.uniform(0, 1, 4)
+        m.observe(f, float(f[0] > 0.5))        # hits correlate with f1
+    assert m.should_train(hit_rate=0.5)
+    m.train_once(hit_rate=0.5, latency_ms=5.0)
+    assert m.n_updates + m.n_rollbacks == 1    # decision recorded either way
+
+
+# --------------------------------------------------------------------------- #
+# eviction policy (Algorithm 4)
+# --------------------------------------------------------------------------- #
+def test_dynamic_trigger_tiers():
+    assert dynamic_trigger(0.9, 5.0) == 0.95
+    assert dynamic_trigger(0.7, 15.0) == 0.90
+    assert dynamic_trigger(0.4, 30.0) == 0.80
+
+
+def test_protected_degree_threshold():
+    assert protected_degree_threshold(np.array([1, 2, 3])) == 10.0
+    d = np.concatenate([np.full(95, 10), np.full(5, 100)])
+    assert protected_degree_threshold(d) >= 10.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(cap=st.integers(4, 50), n=st.integers(1, 200), seed=st.integers(0, 9))
+def test_value_cache_capacity_invariant(cap, n, seed):
+    rng = np.random.default_rng(seed)
+    c = ValueCache(capacity=cap)
+    for i in range(n):
+        c.put(i, i, float(rng.uniform()), avg_deg=float(rng.uniform(0, 20)),
+              hit_rate=0.5, latency_ms=30.0)
+        assert len(c.store) <= cap
+
+
+def test_value_cache_beats_lru_on_skewed_workload():
+    """The paper's claim: value-aware caching beats LRU on skewed access."""
+    rng = np.random.default_rng(0)
+    n_paths, cap = 400, 40
+    # zipf popularity + scan pollution (LRU's weakness)
+    hot = rng.zipf(1.5, 4000) % 50
+    scan = np.arange(4000) % n_paths
+    stream = np.where(rng.random(4000) < 0.5, hot, scan)
+    vc = ValueCache(capacity=cap)
+    lru = LRUCache(capacity=cap)
+    freq = np.zeros(n_paths)
+    for k in stream:
+        k = int(k)
+        freq[k] += 1
+        lru.get(k)
+        lru.put(k, k)
+        if vc.get(k) is None:
+            vc.put(k, k, value=float(freq[k]), avg_deg=1.0,
+                   hit_rate=vc.hit_rate, latency_ms=30.0)
+    assert vc.hit_rate > lru.hit_rate, (vc.hit_rate, lru.hit_rate)
+
+
+def test_two_level_access_priority():
+    tl = TwoLevelCache(n_slaves=2, master_capacity=4, slave_capacity=2)
+    tl.register("a", 0)
+    slave_data = {0: {"a": 123}}
+    r = tl.access("a", slave_data)
+    assert r.source == "slave_memory" and r.data == 123 and r.cross_node
+    tl.admit("a", 123, value=1.0, avg_deg=1.0, slave_id=0, hit_rate=0.5,
+             latency_ms=5.0)
+    r2 = tl.access("a", slave_data)
+    assert r2.source == "master_cache" and not r2.cross_node
+    assert r2.latency_ms < r.latency_ms
+    r3 = tl.access("zzz", {})
+    assert r3.source == "not_found"
+
+
+def test_lfu_cache():
+    c = LFUCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    c.get("a")
+    c.put("c", 3)          # evicts b (least frequent)
+    assert c.get("a") is not None
+    assert c.get("b") is None
+
+
+# --------------------------------------------------------------------------- #
+# PE-score (Innovation 3)
+# --------------------------------------------------------------------------- #
+def test_adaptive_tree_count():
+    assert adaptive_tree_count(0) == 50
+    assert adaptive_tree_count(100_000) == 150
+    assert adaptive_tree_count(10_000_000) == 300
+
+
+def test_gbdt_fits_nonlinear():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, (500, 4)).astype(np.float32)
+    y = np.where(x[:, 0] > 0, 2.0, -1.0) + 0.5 * x[:, 1]
+    m = fit_gbdt(x, y, n_trees=40, depth=3)
+    pred = m.predict(x)
+    base = np.mean((y - y.mean()) ** 2)
+    assert np.mean((y - pred) ** 2) < 0.2 * base
+
+
+def test_gbdt_jax_matches_numpy_walk():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 1, (200, 3)).astype(np.float32)
+    y = x[:, 0] * 3 + x[:, 1]
+    m = fit_gbdt(x, y, n_trees=10, depth=2)
+    p1 = m.predict(x)
+    p2 = m.predict(x)       # determinism
+    assert np.allclose(p1, p2)
+
+
+def test_pescore_label():
+    s = PEScoreModel.label_pe_score(n_valid=10, n_total=100,
+                                    filter_time_ms=2.0)
+    assert s == pytest.approx(0.9 / 2.0)
+
+
+def test_plan_ranking_reduces_cross_shard_bytes(nws_small):
+    """Algorithm 6 vs degree-order: fewer cross-shard candidate rows."""
+    from repro.data.synthetic import make_workload
+    from repro.dist.cluster import DistributedGNNPE
+    eng = DistributedGNNPE.build(nws_small, 3, shards_per_machine=3,
+                                 gnn_train_steps=15, seed=0)
+    qs = make_workload(nws_small, 6, seed=11)
+    eng.use_cache = False
+    bytes_pe = sum(eng.query(q, plan_mode="pescore")[1].comm_bytes
+                   for q in qs)
+    bytes_deg = sum(eng.query(q, plan_mode="degree")[1].comm_bytes
+                    for q in qs)
+    assert bytes_pe <= bytes_deg * 1.05, (bytes_pe, bytes_deg)
+
+
+def test_plan_dependency_resolution(nws_small):
+    """Paths sharing vertices must run shorter-first (Algorithm 6 step 4)."""
+    from repro.core.paths import paths_of_query
+    from repro.core.plan import rank_query_plan
+    from repro.data.synthetic import random_walk_query
+    q = random_walk_query(nws_small, 5, seed=0)
+    model = PEScoreModel()            # untrained -> constant scores, fine
+    plan = rank_query_plan(q, model, max_path_length=2)
+    tables = paths_of_query(q, 2)
+    seen_verts: list[tuple[set, int]] = []
+    for ti, r in plan.order:
+        vs = set(tables[ti].vertices[r].tolist())
+        l = tables[ti].length
+        for vs2, l2 in seen_verts:
+            if vs & vs2:
+                assert l >= l2, "longer path scheduled before shorter overlap"
+        seen_verts.append((vs, l))

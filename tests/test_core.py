@@ -1,0 +1,144 @@
+"""Core GNN-PE invariants: dominance certificate, aR-tree, matching, paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import gnn as gnn_lib
+from repro.core.artree import build_artree, query_dominating, query_stats
+from repro.core.embedding import embed_query_paths, train_dominance_gnn
+from repro.core.graph import LabeledGraph
+from repro.core.matching import build_shard_index, exact_match
+from repro.core.paths import enumerate_paths, paths_of_query
+from tests.conftest import vf2_oracle
+
+
+def _random_graph(rng, n, m, n_labels):
+    edges = rng.integers(0, n, size=(m, 2))
+    return LabeledGraph.from_edges(n, edges, rng.integers(0, n_labels, n))
+
+
+def _connected_subset(g, size, rng):
+    v0 = int(rng.integers(g.n_vertices))
+    vs = {v0}
+    for _ in range(20 * size):
+        if len(vs) >= size:
+            break
+        frontier = [u for v in vs for u in g.neighbors(v).tolist()
+                    if u not in vs]
+        if not frontier:
+            break
+        vs.add(int(rng.choice(frontier)))
+    return np.array(sorted(vs))
+
+
+# --------------------------------------------------------------------------- #
+# dominance certificate: holds for ANY params, by construction
+# --------------------------------------------------------------------------- #
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_dominance_certificate_any_params(seed):
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng, 60, 150, 4)
+    if g.n_edges < 5:
+        return
+    cfg = gnn_lib.GNNConfig(n_labels=4)
+    params = gnn_lib.init_params(cfg, jax.random.PRNGKey(seed))
+
+    vids = _connected_subset(g, 5, rng)
+    q, old = g.induced_subgraph(vids)
+    if q.n_edges == 0:
+        return
+    # identity embedding: query vertex i == data vertex old[i]
+    for table in paths_of_query(q, 2):
+        q_emb = embed_query_paths(q, params, cfg, table)
+        src = jnp.asarray(np.repeat(np.arange(g.n_vertices),
+                                    np.diff(g.indptr)))
+        dst = jnp.asarray(g.indices.astype(np.int64))
+        mapped = old[table.vertices]
+        d_emb = np.asarray(gnn_lib.encode_paths(
+            params, cfg, jnp.asarray(g.labels), jnp.asarray(g.degrees),
+            src, dst, jnp.asarray(mapped)))
+        assert (q_emb <= d_emb + 1e-4).all(), \
+            "dominance certificate violated for a true match"
+
+
+# --------------------------------------------------------------------------- #
+# aR-tree
+# --------------------------------------------------------------------------- #
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 400), d=st.integers(2, 12), seed=st.integers(0, 99))
+def test_artree_exact_vs_bruteforce(n, d, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 1, size=(n, d)).astype(np.float32)
+    tree = build_artree(pts, branching=8)
+    q = rng.uniform(0, 1, size=d).astype(np.float32)
+    got, _ = query_dominating(tree, q)
+    want = np.flatnonzero((q[None, :] <= pts + 1e-5).all(axis=1))
+    assert set(got.tolist()) == set(want.tolist())
+
+
+def test_artree_serialize_roundtrip():
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(0, 1, size=(100, 6)).astype(np.float32)
+    tree = build_artree(pts)
+    from repro.core.artree import ARTree
+    t2 = ARTree.deserialize(tree.serialize())
+    q = rng.uniform(0, 1, size=6).astype(np.float32)
+    a, _ = query_dominating(tree, q)
+    b, _ = query_dominating(t2, q)
+    assert (np.sort(a) == np.sort(b)).all()
+    assert tree.serialize() == t2.serialize()
+
+
+def test_artree_aggregate_counts():
+    rng = np.random.default_rng(1)
+    pts = rng.uniform(0, 1, size=(137, 4)).astype(np.float32)
+    tree = build_artree(pts, branching=4)
+    assert int(tree.counts[0].sum()) == 137        # root level aggregates
+
+
+# --------------------------------------------------------------------------- #
+# path enumeration
+# --------------------------------------------------------------------------- #
+def test_enumerate_paths_simple_and_canonical(small_graph):
+    t = enumerate_paths(small_graph, 2)
+    v = t.vertices
+    assert (v[:, 0] != v[:, 1]).all() and (v[:, 1] != v[:, 2]).all() \
+        and (v[:, 0] != v[:, 2]).all(), "non-simple path"
+    assert (v[:, 0] < v[:, -1]).all(), "canonical orientation violated"
+    # every edge is a length-1 path
+    t1 = enumerate_paths(small_graph, 1)
+    assert t1.n_paths == small_graph.n_edges
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end exactness vs VF2
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_exact_match_vs_vf2(nws_small, seed):
+    from repro.data.synthetic import random_walk_query
+    g = nws_small
+    cfg = gnn_lib.GNNConfig(n_labels=g.n_labels)
+    params = train_dominance_gnn(g, cfg, n_steps=20, seed=seed)
+    index = build_shard_index(g, params, cfg, max_length=2)
+    q = random_walk_query(g, 4, seed=seed)
+    matches, stats = exact_match(q, g, index, params, cfg)
+    assert set(matches) == vf2_oracle(g, q)
+    assert stats.pruning_rate > 0.5, "index should prune most candidates"
+
+
+def test_pruning_power_after_training(nws_small):
+    """Training should not break exactness and should give high pruning."""
+    g = nws_small
+    cfg = gnn_lib.GNNConfig(n_labels=g.n_labels)
+    params = train_dominance_gnn(g, cfg, n_steps=60, seed=0)
+    index = build_shard_index(g, params, cfg, max_length=2)
+    tree = index.trees[2]
+    ep = index.embedded[2]
+    rates = [query_stats(tree, ep.embeddings[i])["selectivity"]
+             for i in range(0, min(ep.n_paths, 50), 5)]
+    assert np.mean(rates) > 0.8

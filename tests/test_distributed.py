@@ -1,0 +1,176 @@
+"""Distributed runtime: partitioner, load balancing, migration, failover."""
+
+import numpy as np
+import pytest
+
+from repro.core.graph import LabeledGraph
+from repro.dist import loadbalance as lb
+from repro.dist.migration import hot_migrate
+from repro.dist.partition import (edge_cut, hash_partition,
+                                  metis_like_partition, random_partition,
+                                  size_balance)
+from repro.dist.shard import Shard, make_shards, shard_crc32
+from tests.conftest import vf2_oracle
+
+
+def test_partitioner_cut_and_balance(nws_small):
+    g = nws_small
+    for parts in (8, 16):
+        p = metis_like_partition(g, parts, seed=0)
+        r = random_partition(g, parts)
+        assert edge_cut(g, p) < edge_cut(g, r) * 0.85, \
+            "metis-like should beat random by a margin"
+        assert size_balance(p) <= 0.151
+        assert np.bincount(p.assignment, minlength=parts).min() > 0
+
+
+def test_hash_partition_deterministic(nws_small):
+    a = hash_partition(nws_small, 8).assignment
+    b = hash_partition(nws_small, 8).assignment
+    assert (a == b).all()
+
+
+def test_shards_cover_all_paths(nws_small):
+    """Canonical-owner rule: every edge owned by exactly one shard."""
+    g = nws_small
+    p = metis_like_partition(g, 6, seed=0)
+    shards = make_shards(g, p.assignment, 6, halo_hops=2)
+    owners = np.zeros(g.n_edges, dtype=np.int64)
+    edge_id = {(int(u), int(v)): i for i, (u, v) in enumerate(g.edge_list)}
+    for s in shards:
+        el = s.graph.edge_list
+        gu = s.global_ids[el[:, 0]]
+        gv = s.global_ids[el[:, 1]]
+        canon = np.minimum(gu, gv)
+        local_canon_is_owned = s.owned_mask[
+            np.where(s.global_ids[el[:, 0]] <= s.global_ids[el[:, 1]],
+                     el[:, 0], el[:, 1])]
+        for (a, b), owned in zip(np.stack([np.minimum(gu, gv),
+                                           np.maximum(gu, gv)], 1),
+                                 local_canon_is_owned):
+            if owned:
+                owners[edge_id[(int(a), int(b))]] += 1
+    assert (owners == 1).all(), "each edge indexed by exactly one shard"
+
+
+def test_load_formula_and_trigger():
+    t = lb.MachineTelemetry(0, [0, 1], {0: 0.5, 1: 0.25}, {0: 10, 1: 0},
+                            {0: 0.1, 1: 0.05}, {0: 0.9, 1: 0.9})
+    load = lb.machine_load(t, comm_max=10.0)
+    assert abs(load - (0.4 * 0.75 + 0.3 * 1.0 + 0.3 * 0.15)) < 1e-9
+    assert lb.cluster_sigma(np.array([1.0, 0.0])) == pytest.approx(0.5)
+    assert lb.alpha_decay(0.0) == pytest.approx(0.7)
+    assert lb.alpha_decay(60.0) == 0.0
+    assert lb.alpha_decay(1e9) == 0.0
+
+
+def test_plan_migrations_moves_from_overloaded():
+    tele = [
+        lb.MachineTelemetry(0, [0, 1, 2], {0: 0.9, 1: 0.8, 2: 0.7},
+                            {0: 5, 1: 4, 2: 3}, {0: .1, 1: .1, 2: .1}, {}, 0.5),
+        lb.MachineTelemetry(1, [3], {3: 0.01}, {3: 0}, {3: 0.01}, {}, 0.0),
+    ]
+    plan = lb.plan_migrations(
+        tele, corr_fn=lambda s, k: 0.05, wlabel_fn=lambda s, k: 0.5,
+        shard_sizes={i: 1.0 for i in range(4)})
+    assert plan.trigger
+    assert plan.moves, "overload must produce at least one move"
+    for sid, src, tgt in plan.moves:
+        assert src == 0 and tgt == 1
+
+
+def _mini_cluster(nws_small, n_machines=3, spm=3):
+    from repro.dist.cluster import DistributedGNNPE
+    return DistributedGNNPE.build(nws_small, n_machines,
+                                  shards_per_machine=spm,
+                                  gnn_train_steps=15, seed=0)
+
+
+@pytest.fixture(scope="module")
+def engine(nws_small):
+    return _mini_cluster(nws_small)
+
+
+def test_distributed_exactness(engine, nws_small):
+    from repro.data.synthetic import make_workload
+    for q in make_workload(nws_small, 4, seed=3):
+        matches, tel = engine.query(q)
+        assert set(matches) == vf2_oracle(nws_small, q)
+        assert tel.latency_ms > 0
+
+
+def test_migration_crc_and_consistency(engine):
+    shards = engine.shards
+    routing = dict(engine.routing)
+    sid = next(iter(shards))
+    src = routing[sid]
+    tgt = (src + 1) % len(engine.specs)
+    before = shards[sid].index.trees[1].serialize()
+    res = hot_migrate(shards, [(sid, src, tgt)], routing,
+                      rng=np.random.default_rng(0))
+    assert res.crc_ok and routing[sid] == tgt
+    assert shards[sid].index.trees[1].serialize() == before, \
+        "aR-tree must be byte-identical after migration"
+
+
+def test_migration_fault_injection_retransmits(engine):
+    shards = dict(engine.shards)
+    routing = dict(engine.routing)
+    sid = next(iter(shards))
+    total_retrans = 0
+    for seed in range(6):   # corruption is stochastic; sample several runs
+        res = hot_migrate(shards, [(sid, routing[sid],
+                                    (routing[sid] + 1) % 3)], routing,
+                          rng=np.random.default_rng(seed), corrupt_prob=0.6)
+        assert res.crc_ok
+        total_retrans += res.retransmissions
+    assert total_retrans > 0, "corruption should force retransmissions"
+
+
+def test_crc32_detects_flip():
+    blob = b"hello world" * 100
+    crc = shard_crc32(blob)
+    bad = bytearray(blob)
+    bad[7] ^= 0xFF
+    assert shard_crc32(bytes(bad)) != crc
+
+
+def test_shard_serialize_roundtrip(engine):
+    sid = next(iter(engine.shards))
+    s = engine.shards[sid]
+    s2 = Shard.deserialize(s.serialize())
+    assert s2.sid == s.sid
+    assert (s2.global_ids == s.global_ids).all()
+    assert s2.graph.n_edges == s.graph.n_edges
+
+
+def test_worker_failover_exactness(nws_small):
+    from repro.data.synthetic import make_workload
+    from repro.train.elastic import WorkerFailover
+    eng = _mini_cluster(nws_small)
+    fo = WorkerFailover(eng)
+    dead = fo.fail_machine(1)
+    assert dead and all(eng.routing[s] != 1 for s in dead)
+    qs = make_workload(nws_small, 3, seed=9)
+    assert fo.verify_exactness(qs, lambda q: vf2_oracle(nws_small, q))
+
+
+def test_straggler_mitigation():
+    from repro.train.elastic import StragglerMitigator
+    sm = StragglerMitigator(deadline_x=2.0)
+    lat = {0: 10.0, 1: 11.0, 2: 9.0, 3: 200.0}
+    eff = sm.probe_with_speculation(lat)
+    assert eff[3] < 200.0 and sm.reissued == 1
+    assert sm.recovered_ms > 150
+
+
+def test_load_balancing_reduces_sigma(nws_small):
+    """Skewed workload -> trigger -> migrations -> lower sigma."""
+    from repro.data.synthetic import make_workload
+    eng = _mini_cluster(nws_small)
+    qs = make_workload(nws_small, 12, seed=5, hot_fraction=0.8, n_hot=2)
+    eng.run_workload(qs, rebalance=False)
+    sigma_before = eng.load_sigma()
+    eng.run_workload(qs, rebalance=True)
+    if eng.migrations:
+        assert eng.load_sigma() <= sigma_before + 1e-6

@@ -1,0 +1,82 @@
+"""End-to-end system behaviour: the paper's full pipeline on one box.
+
+Builds the distributed engine on a synthetic NWS graph, runs a mixed
+workload with all three innovations active, and asserts the headline
+properties: exactness, cache effectiveness, balancer activity, and
+non-interruptible migration under fault injection.
+"""
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_dataset, make_workload, nws_graph
+from repro.dist.cluster import DistributedGNNPE
+from tests.conftest import vf2_oracle
+
+
+@pytest.fixture(scope="module")
+def system():
+    g = nws_graph(500, 6, 0.1, 6, seed=1)
+    eng = DistributedGNNPE.build(g, n_machines=4, shards_per_machine=3,
+                                 gnn_train_steps=20, seed=1)
+    return g, eng
+
+
+def test_full_pipeline_exact_and_cached(system):
+    g, eng = system
+    queries = make_workload(g, 14, seed=2, hot_fraction=0.6, n_hot=3)
+    tels = eng.run_workload(queries, rebalance=True, corrupt_prob=0.1)
+    # exactness on a sample (oracle is expensive)
+    for q in queries[:3]:
+        matches, _ = eng.query(q)
+        assert set(matches) == vf2_oracle(g, q)
+    # the hot workload must produce cache hits
+    assert sum(t.cache_hits for t in tels) > 0
+    assert eng.cache.hit_rate > 0.1
+    # telemetry sane
+    assert all(t.latency_ms >= 0 for t in tels)
+    assert any(t.shards_skipped > 0 for t in tels), \
+        "root-MBR skip should prune some shards"
+
+
+def test_offline_report_contract(system):
+    _, eng = system
+    rep = eng.offline_report
+    assert rep["n_shards"] == 12
+    assert rep["alloc_imbalance"] < 0.5
+    assert len(rep["train_alloc"]) == 4
+
+
+def test_migration_during_queries_no_interruption(system):
+    """Queries issued while a migration batch is in flight stay exact."""
+    g, eng = system
+    queries = make_workload(g, 4, seed=7)
+    sid = next(iter(eng.shards))
+    from repro.dist.migration import hot_migrate
+    src = eng.routing[sid]
+    tgt = (src + 1) % 4
+    res = hot_migrate(eng.shards, [(sid, src, tgt)], eng.routing,
+                      rng=np.random.default_rng(1), corrupt_prob=0.5)
+    assert res.crc_ok
+    for q in queries:
+        matches, _ = eng.query(q)
+        assert set(matches) == vf2_oracle(g, q)
+
+
+def test_dataset_presets():
+    g = make_dataset("dblp-s")
+    assert g.n_vertices == 2000 and g.n_edges > 1000
+
+
+def test_query_plan_modes_agree(system):
+    """All plan orders must give the same exact answer set."""
+    g, eng = system
+    q = make_workload(g, 1, seed=13)[0]
+    eng.use_cache = False
+    try:
+        a, _ = eng.query(q, plan_mode="pescore")
+        b, _ = eng.query(q, plan_mode="degree")
+        c, _ = eng.query(q, plan_mode="natural")
+    finally:
+        eng.use_cache = True
+    assert set(a) == set(b) == set(c)
