@@ -1,0 +1,87 @@
+"""Strategies for the offline hypothesis fallback (see package docstring).
+
+Each strategy is a tiny object with ``draw(rnd)``; ``map`` and ``filter``
+compose.  Only the strategies this repo's tests need are implemented.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, Sequence
+
+__all__ = ["integers", "floats", "booleans", "binary", "sampled_from",
+           "lists", "tuples", "just", "text"]
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn: Callable[[random.Random], Any]) -> None:
+        self._draw_fn = draw_fn
+
+    def draw(self, rnd: random.Random) -> Any:
+        return self._draw_fn(rnd)
+
+    def map(self, f: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rnd: f(self.draw(rnd)))
+
+    def filter(self, pred: Callable[[Any], bool],
+               max_tries: int = 100) -> "SearchStrategy":
+        def drawer(rnd: random.Random) -> Any:
+            for _ in range(max_tries):
+                v = self.draw(rnd)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return SearchStrategy(drawer)
+
+
+def integers(min_value: int | None = None,
+             max_value: int | None = None) -> SearchStrategy:
+    lo = -(2 ** 31) if min_value is None else int(min_value)
+    hi = 2 ** 31 if max_value is None else int(max_value)
+    return SearchStrategy(lambda rnd: rnd.randint(lo, hi))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_ignored) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.random() < 0.5)
+
+
+def binary(min_size: int = 0, max_size: int = 64) -> SearchStrategy:
+    def drawer(rnd: random.Random) -> bytes:
+        n = rnd.randint(min_size, max_size)
+        return bytes(rnd.getrandbits(8) for _ in range(n))
+    return SearchStrategy(drawer)
+
+
+def sampled_from(options: Sequence[Any]) -> SearchStrategy:
+    options = list(options)
+    return SearchStrategy(lambda rnd: options[rnd.randrange(len(options))])
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 16, **_ignored) -> SearchStrategy:
+    def drawer(rnd: random.Random) -> list:
+        n = rnd.randint(min_size, max_size)
+        return [elements.draw(rnd) for _ in range(n)]
+    return SearchStrategy(drawer)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: tuple(s.draw(rnd)
+                                            for s in strategies))
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: value)
+
+
+def text(alphabet: str = "abcdefghijklmnopqrstuvwxyz", min_size: int = 0,
+         max_size: int = 16) -> SearchStrategy:
+    def drawer(rnd: random.Random) -> str:
+        n = rnd.randint(min_size, max_size)
+        return "".join(rnd.choice(alphabet) for _ in range(n))
+    return SearchStrategy(drawer)

@@ -1,0 +1,10 @@
+"""Distributed GNN-PE runtime (paper §4-§6).
+
+Modules:
+  partition   — METIS-role graph partitioner (min edge-cut + size balance).
+  shard       — ultra-fine shards with halo context + CRC32'd byte images.
+  loadbalance — multi-metric load fusion, sigma trigger, Algorithm-1 planner.
+  migration   — CRC-verified hot shard migration (non-interruptible queries).
+  cluster     — the DistributedGNNPE engine tying everything together.
+  sharding    — logical-axis -> mesh-axis rule registry for the JAX models.
+"""

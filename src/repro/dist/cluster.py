@@ -1,0 +1,536 @@
+"""DistributedGNNPE: the paper's full distributed engine on one process.
+
+Offline (build):  partition -> shards(+halo) -> dominance-GNN training ->
+global vertex embeddings -> per-shard path tables + aR-trees (canonical-
+owner rule: every data path indexed by exactly one shard) -> hardware-
+aware job/shard allocation -> PE-score model fit on sampled probes.
+
+Online (query):   plan (Algorithm 6 / degree / natural order) -> per-path
+aR-tree probes on every non-skipped shard (root-MBR skip, both
+orientations) -> candidate-row filtering against the running per-vertex
+masks (what the paper transmits to the master) -> exact backtracking join.
+Exactness: per-shard candidates are a dominance-certified superset, the
+canonical-owner rule guarantees cluster-wide coverage, and the join
+verifies every match — so results equal the VF2 oracle.
+
+Workload loop:    run_workload collects per-shard telemetry, fuses it
+into machine loads (§4.1), and when the sigma trigger fires plans and
+executes CRC-verified hot migrations (Algorithm 1).
+
+Caching:          a TwoLevelCache (master Top-V + per-machine slaves,
+Algorithms 3 & 4) keyed by query signature, valued by AW-ResNet fused
+path features (Algorithms 2 & 5).  `use_cache` toggles the whole layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+
+import numpy as np
+
+from repro.cache.awresnet import AWResNet
+from repro.cache.features import FeatureTracker
+from repro.cache.policy import TwoLevelCache, protected_degree_threshold
+from repro.core import gnn as gnn_lib
+from repro.core.artree import build_artree
+from repro.core.embedding import (EmbeddedPaths, embed_query_paths,
+                                  train_dominance_gnn)
+from repro.core.graph import LabeledGraph
+from repro.core.matching import (ShardIndex, backtrack_join, path_candidates,
+                                 _reverse_embedding)
+from repro.core.paths import PathTable, enumerate_paths, paths_of_query
+from repro.core.pescore import (PEScoreModel, aggregate_global_features,
+                                path_feature_vector, shard_features)
+from repro.core.plan import degree_based_plan, rank_query_plan
+from repro.dist import loadbalance as lb
+from repro.dist.migration import LINK_BYTES_PER_MS, hot_migrate
+from repro.dist.partition import edge_cut, metis_like_partition, size_balance
+from repro.dist.shard import Shard, make_shards
+
+__all__ = ["MachineSpec", "QueryTelemetry", "DistributedGNNPE"]
+
+ROW_BYTES_PER_VERTEX = 4          # int32 candidate vertex ids on the wire
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineSpec:
+    """Static description of one (simulated) cluster machine."""
+
+    machine_id: int
+    cpu_weight: float             # relative speed (1.0 = reference core)
+    mem_gb: float = 16.0
+    net_gbps: float = 1.0
+
+
+@dataclasses.dataclass
+class QueryTelemetry:
+    """Per-query execution telemetry (feeds balancing + benchmarks)."""
+
+    latency_ms: float = 0.0       # virtual ms (simulated cluster clock)
+    comm_bytes: int = 0           # candidate rows shipped shard -> master
+    cross_shard_rows: int = 0
+    cache_hits: int = 0
+    shards_skipped: int = 0       # root-MBR skips
+    paths_executed: int = 0
+    paths_skipped: int = 0        # early-terminated after empty candidates
+    n_matches: int = 0
+    plan_mode: str = "pescore"
+
+
+def _root_skip(tree, q_fwd: np.ndarray, q_rev: np.ndarray,
+               eps: float = 1e-5) -> bool:
+    """True iff the shard's root MBR proves zero candidates (both
+    orientations) — the <1KB metadata check the central node runs."""
+    if tree.uppers:
+        up = tree.uppers[0].max(axis=0)
+    else:
+        up = tree.points.max(axis=0)
+    return bool((q_fwd > up + eps).any() and (q_rev > up + eps).any())
+
+
+class DistributedGNNPE:
+    """Distributed exact subgraph matching engine (paper §3-§6)."""
+
+    def __init__(self) -> None:
+        raise TypeError("use DistributedGNNPE.build(...)")
+
+    # ------------------------------------------------------------------ #
+    # offline phase
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def build(cls, graph: LabeledGraph, n_machines: int,
+              shards_per_machine: int = 4, gnn_train_steps: int = 60,
+              seed: int = 0, halo_hops: int = 2,
+              max_path_length: int = 2) -> "DistributedGNNPE":
+        self = object.__new__(cls)
+        t_build = time.perf_counter()
+        rng = np.random.default_rng(seed)
+        self.graph = graph
+        self.max_path_length = max_path_length
+        self.cfg = gnn_lib.GNNConfig(n_labels=graph.n_labels)
+
+        # 1. partition into ultra-fine shards with halo context
+        n_shards = n_machines * shards_per_machine
+        part = metis_like_partition(graph, n_shards, seed=seed)
+        self.assignment = part.assignment
+        # the halo must cover both the GNN receptive field and the
+        # longest indexed path, or the canonical owner of a path could
+        # be unable to enumerate it (silent false dismissals)
+        shard_list = make_shards(graph, part.assignment, n_shards,
+                                 halo_hops=max(halo_hops, self.cfg.n_hops,
+                                               max_path_length))
+
+        # 2. dominance GNN (shared across shards so cross-shard paths
+        #    embed consistently) + full-context vertex embeddings
+        self.params = train_dominance_gnn(graph, self.cfg,
+                                          path_length=max_path_length,
+                                          n_steps=gnn_train_steps,
+                                          seed=seed)
+        vemb = self._encode_data_graph()
+
+        # 3. per-shard path tables + aR-trees (canonical-owner rule)
+        self.shards: dict[int, Shard] = {}
+        build_weight: dict[int, float] = {}
+        for shard in shard_list:
+            self._build_shard_index(shard, vemb)
+            self.shards[shard.sid] = shard
+            build_weight[shard.sid] = 1.0 + sum(
+                ep.n_paths for ep in shard.index.embedded.values())
+        self._shard_bytes = {sid: float(s.nbytes())
+                             for sid, s in self.shards.items()}
+        self._label_hist = {sid: s.label_histogram(self.cfg.n_labels)
+                            for sid, s in self.shards.items()}
+
+        # 4. heterogeneous machines + hardware-aware allocation: both the
+        #    offline index-build jobs (train_alloc) and the initial shard
+        #    placement (routing) are LPT-balanced by weight/speed
+        self.cpu_w = rng.uniform(0.7, 1.3, size=n_machines)
+        self.specs = [MachineSpec(k, float(self.cpu_w[k]))
+                      for k in range(n_machines)]
+        train_alloc, alloc_imbalance = self._lpt_alloc(build_weight)
+        # initial placement doubles as the index-build job allocation:
+        # both balance estimated shard work over heterogeneous machines
+        self.routing: dict[int, int] = dict(train_alloc)
+
+        # 5. PE-score model: shard features -> global features; labels
+        #    from sampled offline probes
+        self.pe_model = PEScoreModel()
+        self.pe_model.label_freq = (
+            np.bincount(graph.labels, minlength=self.cfg.n_labels)
+            / max(graph.n_vertices, 1)).astype(np.float32)
+        per_shard = [
+            shard_features(s.graph,
+                           {l: PathTable(ep.vertices, l)
+                            for l, ep in s.index.embedded.items()})
+            for s in self.shards.values()]
+        self.pe_model.global_features = aggregate_global_features(per_shard)
+        self._fit_pe_model(seed)
+
+        # 6. caching layer (Algorithms 2-5)
+        theta_d = protected_degree_threshold(graph.degrees)
+        self.cache = TwoLevelCache(n_slaves=n_machines, theta_d=theta_d)
+        self.tracker = FeatureTracker()
+        self.aw = AWResNet(seed=seed)
+        self.use_cache = True
+        self._slave_store: dict[int, dict] = {k: {}
+                                              for k in range(n_machines)}
+
+        # 7. balancing state
+        self.dead_machines: set[int] = set()
+        self.migrations: list = []
+        self.history: list[dict] = []
+        self._rng = rng
+        self._qclock = 0.0
+        self._last_migration_t = -lb.ALPHA_WINDOW_S
+        self._cpu: dict[int, float] = defaultdict(float)
+        self._comm: dict[int, float] = defaultdict(float)
+        self._touch: dict[int, set] = defaultdict(set)
+        self._last_loads = np.zeros(n_machines)
+
+        self.offline_report = {
+            "n_shards": n_shards,
+            "n_machines": n_machines,
+            "edge_cut": edge_cut(graph, part),
+            "size_balance": size_balance(part),
+            "alloc_imbalance": alloc_imbalance,
+            "train_alloc": np.bincount(
+                list(train_alloc.values()),
+                minlength=n_machines).tolist(),
+            "build_s": round(time.perf_counter() - t_build, 2),
+        }
+        return self
+
+    # -------------------------------------------------------------- #
+    def _encode_data_graph(self) -> np.ndarray:
+        import jax.numpy as jnp
+        g = self.graph
+        src = jnp.asarray(np.repeat(np.arange(g.n_vertices),
+                                    np.diff(g.indptr)))
+        dst = jnp.asarray(g.indices.astype(np.int64))
+        vemb = gnn_lib.encode_graph(self.params, self.cfg,
+                                    jnp.asarray(g.labels),
+                                    jnp.asarray(g.degrees), src, dst)
+        return np.asarray(vemb)
+
+    def _build_shard_index(self, shard: Shard, vemb: np.ndarray) -> None:
+        """Index the shard's *owned* paths with full-context embeddings.
+
+        A path is owned by the shard owning its min-global-id endpoint
+        (canonical-owner rule) — exactly one shard indexes each data
+        path, and the halo guarantees the owner can enumerate it.
+        Structural embeddings are taken from the full-graph vertex
+        embeddings, so shard-local indexing never weakens the dominance
+        certificate (halo vertices keep their exact global context).
+        """
+        import jax.numpy as jnp
+        gi = shard.global_ids
+        labels = jnp.asarray(shard.graph.labels)
+        embedded: dict[int, EmbeddedPaths] = {}
+        trees = {}
+        for l in range(1, self.max_path_length + 1):
+            table = enumerate_paths(shard.graph, l, max_paths=None)
+            verts = table.vertices
+            if verts.shape[0]:
+                g_first = gi[verts[:, 0]]
+                g_last = gi[verts[:, -1]]
+                canon = np.where(g_first <= g_last, verts[:, 0],
+                                 verts[:, -1])
+                verts = verts[shard.owned_mask[canon]]
+            if verts.shape[0]:
+                struct = vemb[gi[verts]].reshape(verts.shape[0], -1)
+                lab = gnn_lib.label_embeddings(labels, jnp.asarray(verts),
+                                               self.cfg.n_labels,
+                                               self.cfg.d_label)
+                emb = np.asarray(gnn_lib.interleave_path_embedding(
+                    jnp.asarray(struct), lab, l + 1), dtype=np.float32)
+            else:
+                verts = np.zeros((0, l + 1), np.int32)
+                emb = np.zeros((0, (l + 1) * self.cfg.d_vertex), np.float32)
+            embedded[l] = EmbeddedPaths(vertices=verts, embeddings=emb,
+                                        length=l)
+            trees[l] = build_artree(emb)
+        shard.index = ShardIndex(embedded=embedded, trees=trees)
+
+    def _lpt_alloc(self, weights: dict[int, float]
+                   ) -> tuple[dict[int, int], float]:
+        """Longest-processing-time job allocation over heterogeneous
+        machines; returns (job -> machine, speed-normalized imbalance)."""
+        loads = np.zeros(len(self.cpu_w))
+        alloc: dict[int, int] = {}
+        for sid in sorted(weights, key=lambda s: -weights[s]):
+            k = int(np.argmin((loads + weights[sid]) / self.cpu_w))
+            alloc[sid] = k
+            loads[k] += weights[sid]
+        norm = loads / self.cpu_w
+        imbalance = float(norm.max() / max(norm.mean(), 1e-9) - 1.0)
+        return alloc, imbalance
+
+    def _fit_pe_model(self, seed: int, n_queries: int = 6) -> None:
+        """Offline PE-score labels from sampled probes (§6.2.1)."""
+        from repro.data.synthetic import random_walk_query
+        rng = np.random.default_rng(seed + 0x9E)
+        xs, ys = [], []
+        totals = {l: sum(s.index.embedded[l].n_paths
+                         for s in self.shards.values())
+                  for l in range(1, self.max_path_length + 1)}
+        for i in range(n_queries):
+            q = random_walk_query(self.graph, int(rng.integers(3, 6)),
+                                  seed=seed * 131 + i)
+            tables = paths_of_query(q, self.max_path_length)
+            for table in tables:
+                q_emb = embed_query_paths(q, self.params, self.cfg, table)
+                for r in range(table.n_paths):
+                    t0 = time.perf_counter()
+                    rows = self._probe_all_shards(q_emb[r], table.length)
+                    ms = (time.perf_counter() - t0) * 1e3
+                    y = PEScoreModel.label_pe_score(
+                        n_valid=float(rows),
+                        n_total=float(max(totals[table.length], 1)),
+                        filter_time_ms=ms)
+                    xs.append(path_feature_vector(
+                        q, table.vertices[r], False,
+                        self.pe_model.global_features,
+                        self.pe_model.label_freq))
+                    ys.append(y)
+        if len(xs) >= 8:
+            from repro.core.pescore import fit_gbdt
+            self.pe_model.gbdt = fit_gbdt(np.stack(xs), np.asarray(ys),
+                                          n_trees=24, depth=3, n_bins=8)
+
+    def _probe_all_shards(self, q_emb: np.ndarray, length: int) -> int:
+        rows = 0
+        q_rev = _reverse_embedding(q_emb[None, :], length + 1)[0]
+        for shard in self.shards.values():
+            tree = shard.index.trees.get(length)
+            if tree is None or tree.n_points == 0 \
+                    or _root_skip(tree, q_emb, q_rev):
+                continue
+            verts, _ = path_candidates(shard.index, q_emb, length)
+            rows += verts.shape[0]
+        return rows
+
+    # ------------------------------------------------------------------ #
+    # online phase
+    # ------------------------------------------------------------------ #
+    def query(self, query: LabeledGraph, plan_mode: str = "pescore"
+              ) -> tuple[list[tuple], QueryTelemetry]:
+        """Exact matches of `query` in the data graph + telemetry."""
+        tel = QueryTelemetry(plan_mode=plan_mode)
+        self._qclock += 1.0
+        key = (query.n_vertices, query.labels.tobytes(),
+               query.edge_list.tobytes())
+
+        if self.use_cache:
+            res = self.cache.access(key, self._slave_store)
+            tel.latency_ms += res.latency_ms
+            if res.data is not None:
+                tel.cache_hits = 1
+                tel.n_matches = len(res.data)
+                self._observe_cache(key, hit=True, matched=bool(res.data),
+                                    latency_ms=tel.latency_ms)
+                return list(res.data), tel
+
+        t_plan = time.perf_counter()
+        tables = paths_of_query(query, self.max_path_length)
+        if plan_mode == "pescore":
+            order = rank_query_plan(query, self.pe_model,
+                                    max_path_length=self.max_path_length,
+                                    tables=tables).order
+        elif plan_mode == "degree":
+            order = degree_based_plan(query, tables=tables).order
+        else:
+            order = [(ti, r) for ti, t in enumerate(tables)
+                     for r in range(t.n_paths)]
+        q_embs = [embed_query_paths(query, self.params, self.cfg, t)
+                  for t in tables]
+        plan_ms = (time.perf_counter() - t_plan) * 1e3
+
+        n_d = self.graph.n_vertices
+        deg_d, deg_q = self.graph.degrees, query.degrees
+        masks = [(self.graph.labels == query.labels[v])
+                 & (deg_d >= deg_q[v]) for v in range(query.n_vertices)]
+        alive = all(m.any() for m in masks)
+
+        machine_ms: dict[int, float] = defaultdict(float)
+        qid = int(self._qclock)
+        rows_by_machine: dict[int, int] = defaultdict(int)
+
+        for ti, r in order:
+            if not alive:
+                tel.paths_skipped += 1
+                continue
+            table = tables[ti]
+            l = table.length
+            qv = table.vertices[r]
+            qe = q_embs[ti][r]
+            q_rev = _reverse_embedding(qe[None, :], l + 1)[0]
+            pos_mask = np.zeros((l + 1, n_d), dtype=bool)
+            for sid, shard in self.shards.items():
+                tree = shard.index.trees.get(l)
+                if tree is None or tree.n_points == 0:
+                    continue
+                if _root_skip(tree, qe, q_rev):
+                    tel.shards_skipped += 1
+                    continue
+                mk = self.routing[sid]
+                t0 = time.perf_counter()
+                verts, _ = path_candidates(shard.index, qe, l)
+                service_ms = ((time.perf_counter() - t0) * 1e3
+                              / self.cpu_w[mk])
+                gverts = shard.global_ids[verts]
+                # shard-side filter against the candidate masks the
+                # master shipped with the probe: only surviving rows
+                # cross the network (what PE-score ordering optimizes)
+                if gverts.shape[0]:
+                    ok = np.ones(gverts.shape[0], dtype=bool)
+                    for i in range(l + 1):
+                        ok &= masks[qv[i]][gverts[:, i]]
+                    gverts = gverts[ok]
+                n_rows = int(gverts.shape[0])
+                tx_bytes = n_rows * ROW_BYTES_PER_VERTEX * (l + 1)
+                machine_ms[mk] += service_ms
+                self._cpu[sid] += service_ms
+                self._comm[sid] += tx_bytes
+                if n_rows:
+                    self._touch[sid].add(qid)
+                    rows_by_machine[mk] += n_rows
+                tel.comm_bytes += tx_bytes
+                tel.cross_shard_rows += n_rows
+                for i in range(l + 1):
+                    pos_mask[i, gverts[:, i]] = True
+            for i, qvi in enumerate(qv):
+                masks[qvi] &= pos_mask[i]
+                if not masks[qvi].any():
+                    alive = False
+            tel.paths_executed += 1
+
+        t_join = time.perf_counter()
+        matches = backtrack_join(query, self.graph, masks) if alive else []
+        join_ms = (time.perf_counter() - t_join) * 1e3
+
+        tel.n_matches = len(matches)
+        comm_ms = tel.comm_bytes / LINK_BYTES_PER_MS
+        tel.latency_ms += (max(machine_ms.values(), default=0.0)
+                           + comm_ms + plan_ms + join_ms + 0.05)
+
+        home = max(rows_by_machine, key=rows_by_machine.get) \
+            if rows_by_machine else 0
+        self._observe_cache(key, hit=False, matched=bool(matches),
+                            latency_ms=tel.latency_ms,
+                            result=matches, slave_id=home)
+        return matches, tel
+
+    # -------------------------------------------------------------- #
+    def _observe_cache(self, key, hit: bool, matched: bool,
+                       latency_ms: float, result=None,
+                       slave_id: int = 0) -> None:
+        self.tracker.record_query(self._qclock, [key], {key: matched})
+        feats = np.asarray(self.tracker.features(key), np.float32)
+        self.aw.observe(feats, 1.0 if hit else 0.0)
+        if not self.use_cache:
+            return
+        if result is not None:
+            w = self.aw.weights(feats[None])[0]
+            value = float((w * feats).sum())
+            self._slave_store[slave_id][key] = result
+            self.cache.register(key, slave_id)
+            self.cache.admit(key, result, value=value,
+                             avg_deg=float(self.graph.avg_degree()),
+                             slave_id=slave_id,
+                             hit_rate=self.cache.hit_rate,
+                             latency_ms=latency_ms)
+        if self.aw.should_train(self.cache.hit_rate):
+            self.aw.train_once(self.cache.hit_rate, latency_ms)
+
+    # ------------------------------------------------------------------ #
+    # workload loop + balancing
+    # ------------------------------------------------------------------ #
+    def run_workload(self, queries: list[LabeledGraph],
+                     rebalance: bool = False,
+                     corrupt_prob: float = 0.0,
+                     plan_mode: str = "pescore") -> list[QueryTelemetry]:
+        """Execute a query stream; optionally rebalance afterwards."""
+        self._cpu.clear()
+        self._comm.clear()
+        self._touch.clear()
+        tels = [self.query(q, plan_mode=plan_mode)[1] for q in queries]
+
+        tele = self._refresh_loads()
+        rebalanced = False
+        if rebalance:
+            plan = lb.plan_migrations(
+                tele, corr_fn=self._corr, wlabel_fn=self._wlabel,
+                shard_sizes=self._shard_bytes,
+                seconds_since_migration=self._qclock
+                - self._last_migration_t)
+            if plan.trigger and plan.moves:
+                res = hot_migrate(self.shards, plan.moves, self.routing,
+                                  rng=self._rng,
+                                  corrupt_prob=corrupt_prob)
+                self.migrations.append(res)
+                self._last_migration_t = self._qclock
+                rebalanced = bool(res.migrated)
+                self._refresh_loads()
+        self.history.append({
+            "sigma": self.load_sigma(),
+            "n_queries": len(queries),
+            "rebalanced": rebalanced,
+            "cache_hit_rate": self.cache.hit_rate,
+        })
+        return tels
+
+    def load_sigma(self) -> float:
+        """Std of machine loads from the most recent workload epoch."""
+        return lb.cluster_sigma(self._last_loads)
+
+    def _refresh_loads(self) -> list[lb.MachineTelemetry]:
+        """Recompute machine loads from the epoch's per-shard stats."""
+        tele = self._machine_telemetry()
+        comm_max = max((sum(t.comm.values()) for t in tele), default=1.0)
+        self._last_loads = np.array(
+            [lb.machine_load(t, max(comm_max, 1e-9)) for t in tele])
+        return tele
+
+    def _machine_telemetry(self) -> list[lb.MachineTelemetry]:
+        """Per-machine telemetry; dead machines emit no row, so the
+        balancer can never pick them as migration receivers."""
+        total_cpu = sum(self._cpu.values()) or 1.0
+        total_mem = sum(self._shard_bytes.values()) or 1.0
+        tele = []
+        for spec in self.specs:
+            k = spec.machine_id
+            if k in self.dead_machines:
+                continue
+            sids = [sid for sid, mk in self.routing.items() if mk == k]
+            tele.append(lb.MachineTelemetry(
+                machine_id=k, shard_ids=sids,
+                cpu={s: self._cpu.get(s, 0.0) / total_cpu for s in sids},
+                comm={s: float(self._comm.get(s, 0.0)) for s in sids},
+                mem={s: self._shard_bytes[s] / total_mem for s in sids},
+                corr={s: self._corr(s, k) for s in sids}))
+        return tele
+
+    def _corr(self, sid: int, machine_id: int) -> float:
+        """Workload correlation: fraction of this epoch's queries that
+        touched both `sid` and the target machine's resident shards."""
+        mine = self._touch.get(sid, set())
+        if not mine:
+            return 0.0
+        theirs: set = set()
+        for other, mk in self.routing.items():
+            if mk == machine_id and other != sid:
+                theirs |= self._touch.get(other, set())
+        return len(mine & theirs) / len(mine)
+
+    def _wlabel(self, sid: int, machine_id: int) -> float:
+        """Label affinity between a shard and a machine's working set."""
+        hists = [self._label_hist[o] for o, mk in self.routing.items()
+                 if mk == machine_id and o != sid]
+        if not hists:
+            return 0.5
+        h_m = np.mean(hists, axis=0)
+        h_s = self._label_hist[sid]
+        denom = np.linalg.norm(h_m) * np.linalg.norm(h_s)
+        return float(h_m @ h_s / denom) if denom > 0 else 0.5

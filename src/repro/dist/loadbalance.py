@@ -1,0 +1,170 @@
+"""Correlation-aware dynamic load balancing (paper §4, Algorithm 1).
+
+Machine load is a weighted fusion of three normalized metrics:
+
+  L(M_k) = 0.4 * CPU(M_k) + 0.3 * Comm(M_k)/Comm_max + 0.3 * Mem(M_k)
+
+The cluster triggers rebalancing when the standard deviation sigma of
+machine loads exceeds a threshold; right after a migration the threshold
+is temporarily raised by `alpha_decay` (0.7 at t=0, linearly decaying to
+0 after 60 s) so the balancer cannot thrash.
+
+`plan_migrations` is the planning half of Algorithm 1: pick shards on
+overloaded machines, preferring shards weakly correlated with the rest
+of their machine's working set (corr_fn) and with high label-affinity to
+the target (wlabel_fn), and accept only moves whose simulated effect
+strictly reduces sigma.  The execution half (CRC-verified transfer) lives
+in repro.dist.migration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["MachineTelemetry", "MigrationPlan", "machine_load",
+           "cluster_sigma", "alpha_decay", "plan_migrations",
+           "W_CPU", "W_COMM", "W_MEM", "SIGMA_THRESHOLD"]
+
+W_CPU, W_COMM, W_MEM = 0.4, 0.3, 0.3
+SIGMA_THRESHOLD = 0.10          # sigma_0: trigger when std(loads) exceeds it
+ALPHA_MAX = 0.7                 # anti-thrash boost right after a migration
+ALPHA_WINDOW_S = 60.0           # decays to zero over this many seconds
+MAX_MOVES_PER_PLAN = 8
+
+
+@dataclasses.dataclass
+class MachineTelemetry:
+    """Per-machine, per-shard load metrics for one balancing epoch.
+
+    cpu/comm/mem map shard id -> that shard's contribution on this
+    machine (cpu and mem normalized cluster-wide, comm in raw bytes).
+    corr optionally carries per-shard workload-correlation estimates and
+    hot the machine's share of recent hot-query traffic.
+    """
+
+    machine_id: int
+    shard_ids: list
+    cpu: dict
+    comm: dict
+    mem: dict
+    corr: dict = dataclasses.field(default_factory=dict)
+    hot: float = 0.0
+
+
+def machine_load(t: MachineTelemetry, comm_max: float) -> float:
+    """Multi-metric fusion L(M_k) (paper §4.1)."""
+    cpu = float(sum(t.cpu.values()))
+    comm = float(sum(t.comm.values()))
+    mem = float(sum(t.mem.values()))
+    return (W_CPU * cpu
+            + W_COMM * min(comm / max(comm_max, 1e-9), 1.0)
+            + W_MEM * mem)
+
+
+def cluster_sigma(loads: np.ndarray) -> float:
+    """Population std of machine loads — the rebalance trigger signal."""
+    loads = np.asarray(loads, dtype=np.float64)
+    return float(loads.std()) if loads.size else 0.0
+
+
+def alpha_decay(seconds_since_migration: float) -> float:
+    """Anti-thrash factor: 0.7 right after a migration, 0 after 60 s."""
+    return max(0.0, ALPHA_MAX * (1.0 - seconds_since_migration
+                                 / ALPHA_WINDOW_S))
+
+
+def _shard_load(t: MachineTelemetry, sid, comm_max: float) -> float:
+    return (W_CPU * t.cpu.get(sid, 0.0)
+            + W_COMM * t.comm.get(sid, 0.0) / max(comm_max, 1e-9)
+            + W_MEM * t.mem.get(sid, 0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationPlan:
+    trigger: bool
+    moves: list              # [(sid, src_machine, tgt_machine), ...]
+    sigma_before: float
+    sigma_after: float       # projected sigma once moves are applied
+
+
+def plan_migrations(telemetry: list[MachineTelemetry],
+                    corr_fn: Callable = lambda sid, machine: 0.0,
+                    wlabel_fn: Callable = lambda sid, machine: 1.0,
+                    shard_sizes: dict | None = None,
+                    sigma_threshold: float = SIGMA_THRESHOLD,
+                    seconds_since_migration: float = ALPHA_WINDOW_S,
+                    max_moves: int = MAX_MOVES_PER_PLAN) -> MigrationPlan:
+    """Algorithm 1 (planning): greedy sigma-reducing shard moves.
+
+    Only machines above the mean load at plan time can donate, only
+    machines below it can receive; every accepted move strictly reduces
+    the simulated sigma, so applying the plan is guaranteed to lower the
+    cluster imbalance it was computed from.
+    """
+    shard_sizes = shard_sizes or {}
+    comm_max = max((sum(t.comm.values()) for t in telemetry), default=1.0)
+    comm_max = max(comm_max, 1e-9)
+    loads = np.array([machine_load(t, comm_max) for t in telemetry])
+    sigma0 = cluster_sigma(loads)
+    threshold = sigma_threshold * (1.0
+                                   + alpha_decay(seconds_since_migration))
+    if sigma0 <= threshold or len(telemetry) < 2:
+        return MigrationPlan(False, [], sigma0, sigma0)
+
+    mean = loads.mean()
+    donors = {t.machine_id for t, l in zip(telemetry, loads) if l > mean}
+    receivers = {t.machine_id for t, l in zip(telemetry, loads)
+                 if l <= mean}
+    tele_of = {t.machine_id: t for t in telemetry}
+    sim = {t.machine_id: l for t, l in zip(telemetry, loads)}
+    placed = {sid: t.machine_id for t in telemetry for sid in t.shard_ids}
+    moved: set = set()
+    moves: list[tuple] = []
+
+    for _ in range(max_moves):
+        src = max(donors, key=lambda k: sim[k])
+        tgt = min(receivers, key=lambda k: sim[k])
+        sigma_cur = cluster_sigma(np.array(list(sim.values())))
+        t_src = tele_of[src]
+        candidates = [sid for sid, mk in placed.items()
+                      if mk == src and sid not in moved]
+        if not candidates:
+            break
+        # correlation-aware preference: big load contribution, weakly
+        # correlated with the donor's remaining working set, high label
+        # affinity with the receiver, cheap to ship
+        max_size = max(shard_sizes.values(), default=1.0) or 1.0
+
+        def rank(sid):
+            sl = _shard_load(t_src, sid, comm_max)
+            cost = shard_sizes.get(sid, 0.0) / max_size
+            return sl * (1.0 - float(corr_fn(sid, src))) \
+                * (0.5 + 0.5 * float(wlabel_fn(sid, tgt))) \
+                / (1.0 + 0.25 * cost)
+        candidates.sort(key=rank, reverse=True)
+        accepted = None
+        for sid in candidates:
+            sl = _shard_load(t_src, sid, comm_max)
+            if sl <= 0.0:
+                continue
+            trial = dict(sim)
+            trial[src] -= sl
+            trial[tgt] += sl
+            if cluster_sigma(np.array(list(trial.values()))) \
+                    < sigma_cur - 1e-12:
+                accepted = (sid, sl)
+                break
+        if accepted is None:
+            break
+        sid, sl = accepted
+        sim[src] -= sl
+        sim[tgt] += sl
+        placed[sid] = tgt
+        moved.add(sid)
+        moves.append((sid, src, tgt))
+
+    sigma1 = cluster_sigma(np.array(list(sim.values())))
+    return MigrationPlan(True, moves, sigma0, sigma1)

@@ -1,0 +1,103 @@
+"""Hot shard migration with CRC verification (paper §4, Algorithm 1).
+
+Execution half of the balancer: ship each shard's canonical byte image to
+its target machine, verify integrity with CRC32, retransmit on mismatch,
+and atomically flip the routing table once the replica is confirmed.
+
+Queries are **non-interruptible** during migration because
+
+  * the shard byte image is a read-only replica — the aR-tree travels
+    verbatim and is byte-identical after the move (no index rebuild, so
+    no window where probes could miss candidates), and
+  * the routing-table flip happens only after the CRC check passes, so a
+    query always finds the shard either at the source (pre-flip) or the
+    target (post-flip), never in between.
+
+The network is simulated: transfer time is charged in *virtual ms* from a
+1 Gbps link model plus a fixed per-transfer handshake, and `corrupt_prob`
+injects in-flight byte flips to exercise the retransmission path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.dist.shard import Shard, shard_crc32
+
+__all__ = ["MigrationResult", "hot_migrate", "LINK_BYTES_PER_MS",
+           "HANDSHAKE_MS"]
+
+LINK_BYTES_PER_MS = 125_000.0    # 1 Gbps simulated inter-machine link
+HANDSHAKE_MS = 5.0               # per-transfer setup + CRC check
+MAX_RETRIES = 16
+
+
+@dataclasses.dataclass
+class MigrationResult:
+    """Telemetry of one migration batch.
+
+    crc_ok means every applied routing flip was preceded by a
+    CRC-confirmed delivery; the bounded retransmission loop guarantees
+    this in the simulator (only injected corruption exists), so a False
+    here would indicate a bug, not a lossy network.
+    """
+
+    migrated: list
+    crc_ok: bool
+    retransmissions: int
+    bytes_moved: int
+    virtual_ms: float
+
+
+def hot_migrate(shards: dict, moves: list, routing: dict,
+                rng: np.random.Generator | None = None,
+                corrupt_prob: float = 0.0,
+                max_retries: int = MAX_RETRIES) -> MigrationResult:
+    """Migrate shards per `moves` = [(sid, src_machine, tgt_machine), ...].
+
+    Mutates `shards` (replacing each moved shard with the replica decoded
+    at the target — provably identical to the source image) and `routing`
+    (flipped to the target only after CRC verification).  Returns batch
+    telemetry including the simulated retransmission count.
+    """
+    rng = rng if rng is not None else np.random.default_rng(0)
+    migrated: list = []
+    retrans = 0
+    bytes_moved = 0
+    virtual_ms = 0.0
+    crc_ok = True
+
+    for sid, src, tgt in moves:
+        shard = shards[sid]
+        blob = shard.serialize()
+        crc = shard_crc32(blob)
+        # attempts 1..max_retries may be corrupted in flight; attempt
+        # max_retries+1 is clean by construction, bounding the loop.
+        # (A real deployment would abort the move instead; in the
+        # simulator only injected corruption exists, so delivery of the
+        # source-identical image is guaranteed.)
+        for attempt in range(1, max_retries + 2):
+            virtual_ms += len(blob) / LINK_BYTES_PER_MS + HANDSHAKE_MS
+            received = blob
+            if (corrupt_prob > 0.0 and attempt <= max_retries
+                    and rng.random() < corrupt_prob):
+                bad = bytearray(blob)
+                bad[int(rng.integers(len(bad)))] ^= 0xFF
+                received = bytes(bad)
+            if shard_crc32(received) == crc:
+                break
+            retrans += 1
+        delivered = shard_crc32(received) == crc
+        crc_ok = crc_ok and delivered
+        if not delivered:       # defensive: shard stays at the source
+            continue
+        shards[sid] = Shard.deserialize(received)
+        routing[sid] = tgt
+        bytes_moved += len(blob)
+        migrated.append(sid)
+
+    return MigrationResult(migrated=migrated, crc_ok=crc_ok,
+                           retransmissions=retrans,
+                           bytes_moved=bytes_moved, virtual_ms=virtual_ms)

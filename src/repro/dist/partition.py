@@ -1,0 +1,188 @@
+"""Graph partitioning for ultra-fine shards (paper §4.2.1).
+
+The paper partitions the data graph into n_machines x shards_per_machine
+ultra-fine shards with a METIS objective: minimum edge cut under a size
+balance constraint.  METIS itself is not available offline, so
+`metis_like_partition` reimplements the two ingredients that carry the
+claim (30-40% fewer cross-shard edges than random, balance <= 15%):
+
+  1. greedy graph growing — BFS regions of target size seeded in
+     unassigned territory (the classic GGGP coarse phase);
+  2. boundary refinement — Fiduccia-Mattheyses-style single-vertex moves
+     that reduce the cut while staying inside the balance envelope.
+
+`random_partition` and `hash_partition` are the benchmark baselines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.core.graph import LabeledGraph
+
+__all__ = ["Partition", "metis_like_partition", "random_partition",
+           "hash_partition", "edge_cut", "size_balance"]
+
+# balance envelope: no part may exceed (1 + BALANCE_EPS) x average size
+BALANCE_EPS = 0.12
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """assignment[v] = part id of vertex v."""
+
+    assignment: np.ndarray      # int32 [n]
+    n_parts: int
+
+    def sizes(self) -> np.ndarray:
+        return np.bincount(self.assignment, minlength=self.n_parts)
+
+
+def _assignment_of(p) -> np.ndarray:
+    return p.assignment if isinstance(p, Partition) else np.asarray(p)
+
+
+def edge_cut(graph: LabeledGraph, p) -> int:
+    """Number of undirected edges whose endpoints live in different parts."""
+    a = _assignment_of(p)
+    e = graph.edge_list
+    if e.size == 0:
+        return 0
+    return int((a[e[:, 0]] != a[e[:, 1]]).sum())
+
+
+def size_balance(p) -> float:
+    """max part size / mean part size - 1 (paper reports <= 15%)."""
+    if isinstance(p, Partition):
+        sizes = p.sizes()
+    else:
+        a = np.asarray(p)
+        sizes = np.bincount(a, minlength=int(a.max()) + 1 if a.size else 1)
+    mean = sizes.mean() if sizes.size else 1.0
+    return float(sizes.max() / max(mean, 1e-9) - 1.0)
+
+
+def random_partition(graph: LabeledGraph, n_parts: int,
+                     seed: int = 0) -> Partition:
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, n_parts, size=graph.n_vertices).astype(np.int32)
+    return Partition(assignment=a, n_parts=n_parts)
+
+
+def hash_partition(graph: LabeledGraph, n_parts: int) -> Partition:
+    """Deterministic multiplicative-hash assignment (stateless baseline)."""
+    v = np.arange(graph.n_vertices, dtype=np.uint64)
+    h = (v * np.uint64(2654435761)) % np.uint64(2 ** 32)
+    return Partition(assignment=(h % np.uint64(n_parts)).astype(np.int32),
+                     n_parts=n_parts)
+
+
+def _grow_regions(graph: LabeledGraph, n_parts: int,
+                  rng: np.random.Generator) -> np.ndarray:
+    """Greedy BFS region growing: contiguous parts of near-equal size."""
+    n = graph.n_vertices
+    assignment = np.full(n, -1, dtype=np.int32)
+    unassigned = n
+    order = rng.permutation(n)
+    cursor = 0
+    for part in range(n_parts):
+        target = unassigned // (n_parts - part)
+        # seed: first unassigned vertex in the shuffled order
+        while cursor < n and assignment[order[cursor]] >= 0:
+            cursor += 1
+        if cursor >= n:
+            break
+        seed_v = int(order[cursor])
+        taken = 0
+        queue = deque([seed_v])
+        while taken < target:
+            if not queue:
+                # region exhausted its component; restart from fresh seed
+                while cursor < n and assignment[order[cursor]] >= 0:
+                    cursor += 1
+                if cursor >= n:
+                    break
+                queue.append(int(order[cursor]))
+            v = queue.popleft()
+            if assignment[v] >= 0:
+                continue
+            assignment[v] = part
+            taken += 1
+            for u in graph.neighbors(v):
+                if assignment[u] < 0:
+                    queue.append(int(u))
+        unassigned -= taken
+    # stragglers (disconnected leftovers): smallest part wins each
+    leftovers = np.flatnonzero(assignment < 0)
+    if leftovers.size:
+        sizes = np.bincount(assignment[assignment >= 0], minlength=n_parts)
+        for v in leftovers:
+            part = int(np.argmin(sizes))
+            assignment[v] = part
+            sizes[part] += 1
+    return assignment
+
+
+def _refine(graph: LabeledGraph, assignment: np.ndarray, n_parts: int,
+            rng: np.random.Generator, n_passes: int = 4) -> np.ndarray:
+    """FM-style boundary refinement under the balance envelope."""
+    n = graph.n_vertices
+    avg = n / n_parts
+    cap = int(np.floor(avg * (1.0 + BALANCE_EPS)))
+    floor_sz = max(1, int(np.ceil(avg * (1.0 - BALANCE_EPS))))
+    sizes = np.bincount(assignment, minlength=n_parts)
+    indptr, indices = graph.indptr, graph.indices
+    for _ in range(n_passes):
+        moved = 0
+        e = graph.edge_list
+        boundary = np.unique(
+            e[assignment[e[:, 0]] != assignment[e[:, 1]]].ravel())
+        for v in rng.permutation(boundary):
+            a = assignment[v]
+            nbrs = indices[indptr[v]:indptr[v + 1]]
+            if nbrs.size == 0:
+                continue
+            conn = np.bincount(assignment[nbrs], minlength=n_parts)
+            # candidate: the neighbor part with the strongest connection
+            conn_masked = conn.copy()
+            conn_masked[a] = -1
+            b = int(np.argmax(conn_masked))
+            gain = int(conn[b] - conn[a])
+            if gain > 0 and sizes[b] < cap and sizes[a] > floor_sz:
+                assignment[v] = b
+                sizes[a] -= 1
+                sizes[b] += 1
+                moved += 1
+        if moved == 0:
+            break
+    return assignment
+
+
+def metis_like_partition(graph: LabeledGraph, n_parts: int,
+                         seed: int = 0) -> Partition:
+    """Minimum-edge-cut partition with size balance <= ~12% (§4.2.1).
+
+    Greedy BFS growing + FM boundary refinement.  Deterministic for a
+    given seed.  Guarantees every part non-empty for n >= n_parts.
+    """
+    if n_parts < 1:
+        raise ValueError("n_parts must be >= 1")
+    n = graph.n_vertices
+    if n_parts >= n:
+        return Partition(np.arange(n, dtype=np.int32) % n_parts, n_parts)
+    rng = np.random.default_rng(seed)
+    assignment = _grow_regions(graph, n_parts, rng)
+    assignment = _refine(graph, assignment, n_parts, rng)
+    # safety: refinement floors keep parts populated, but re-seed any
+    # part emptied by pathological inputs
+    sizes = np.bincount(assignment, minlength=n_parts)
+    for part in np.flatnonzero(sizes == 0):
+        donor = int(np.argmax(sizes))
+        v = int(np.flatnonzero(assignment == donor)[0])
+        assignment[v] = part
+        sizes[donor] -= 1
+        sizes[part] += 1
+    return Partition(assignment=assignment.astype(np.int32), n_parts=n_parts)

@@ -1,0 +1,164 @@
+"""Ultra-fine shards: owned region + halo context + CRC'd byte images.
+
+A shard is the unit of placement, migration, and failover.  It carries:
+
+  * its local graph — the induced subgraph on the owned vertices plus a
+    `halo_hops`-deep ring of context vertices, so every owned vertex sees
+    its full n-hop neighborhood and every short data path with a locally
+    owned canonical endpoint is enumerable locally;
+  * `global_ids` mapping local -> global vertex ids (sorted ascending, so
+    local order agrees with global order);
+  * `owned_mask` implementing the canonical-owner rule: an edge/path is
+    *indexed* by exactly the shard that owns its smaller-global-id
+    endpoint — every edge indexed by exactly one shard, no duplicates;
+  * optionally a `ShardIndex` (embedded path tables + aR-trees, built by
+    the cluster engine).
+
+`serialize`/`deserialize` produce a canonical byte image (numpy npz —
+deterministic, so re-serialization is byte-identical) used as the replica
+format for migration (CRC32-verified, Algorithm 1) and failover.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import zlib
+
+import numpy as np
+
+from repro.core.artree import ARTree
+from repro.core.embedding import EmbeddedPaths
+from repro.core.graph import LabeledGraph
+from repro.core.matching import ShardIndex
+
+__all__ = ["Shard", "make_shards", "shard_crc32", "halo_region"]
+
+
+def shard_crc32(blob: bytes) -> int:
+    """Index-consistency checksum used by Algorithm-1 migration."""
+    return zlib.crc32(blob) & 0xFFFFFFFF
+
+
+@dataclasses.dataclass
+class Shard:
+    """One ultra-fine shard of the data graph.
+
+    Attributes:
+      sid:        shard id (== its part id in the partition).
+      graph:      local induced subgraph (owned + halo vertices).
+      global_ids: int64 [n_local] global id of each local vertex.
+      owned_mask: bool [n_local]  True iff the vertex is owned (not halo).
+      index:      per-shard path index (set by the cluster engine).
+    """
+
+    sid: int
+    graph: LabeledGraph
+    global_ids: np.ndarray
+    owned_mask: np.ndarray
+    index: ShardIndex | None = None
+
+    @property
+    def n_owned(self) -> int:
+        return int(self.owned_mask.sum())
+
+    def nbytes(self) -> int:
+        total = (self.global_ids.nbytes + self.owned_mask.nbytes
+                 + self.graph.labels.nbytes + self.graph.edge_list.nbytes)
+        if self.index is not None:
+            total += self.index.nbytes()
+        return total
+
+    def label_histogram(self, n_labels: int) -> np.ndarray:
+        h = np.bincount(self.graph.labels[self.owned_mask],
+                        minlength=n_labels).astype(np.float64)
+        return h / max(h.sum(), 1.0)
+
+    # ------------------------------------------------------------------ #
+    # canonical byte image (replica / migration format)
+    # ------------------------------------------------------------------ #
+    def serialize(self) -> bytes:
+        arrays: dict[str, np.ndarray] = {
+            "sid": np.int64(self.sid),
+            "global_ids": self.global_ids.astype(np.int64),
+            "owned_mask": self.owned_mask.astype(np.bool_),
+            "graph": np.frombuffer(self.graph.serialize(), dtype=np.uint8),
+        }
+        lengths = sorted(self.index.embedded) if self.index is not None else []
+        arrays["lengths"] = np.asarray(lengths, dtype=np.int64)
+        for l in lengths:
+            ep = self.index.embedded[l]
+            arrays[f"pv{l}"] = ep.vertices.astype(np.int32)
+            arrays[f"pe{l}"] = ep.embeddings.astype(np.float32)
+            arrays[f"tree{l}"] = np.frombuffer(
+                self.index.trees[l].serialize(), dtype=np.uint8)
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        return buf.getvalue()
+
+    @staticmethod
+    def deserialize(blob: bytes) -> "Shard":
+        z = np.load(io.BytesIO(blob))
+        graph = LabeledGraph.deserialize(z["graph"].tobytes())
+        lengths = [int(l) for l in z["lengths"]]
+        index = None
+        if lengths:
+            embedded = {
+                l: EmbeddedPaths(vertices=z[f"pv{l}"],
+                                 embeddings=z[f"pe{l}"], length=l)
+                for l in lengths
+            }
+            trees = {l: ARTree.deserialize(z[f"tree{l}"].tobytes())
+                     for l in lengths}
+            index = ShardIndex(embedded=embedded, trees=trees)
+        return Shard(sid=int(z["sid"]),
+                     graph=graph,
+                     global_ids=z["global_ids"].copy(),
+                     owned_mask=z["owned_mask"].copy(),
+                     index=index)
+
+
+def halo_region(graph: LabeledGraph, owned: np.ndarray,
+                halo_hops: int) -> np.ndarray:
+    """Owned vertex set expanded by `halo_hops` BFS rings (global ids)."""
+    in_region = np.zeros(graph.n_vertices, dtype=bool)
+    in_region[owned] = True
+    frontier = owned
+    for _ in range(halo_hops):
+        if frontier.size == 0:
+            break
+        starts = graph.indptr[frontier]
+        stops = graph.indptr[frontier + 1]
+        counts = (stops - starts).astype(np.int64)
+        total = int(counts.sum())
+        if total == 0:
+            break
+        offs = np.arange(total, dtype=np.int64) - np.repeat(
+            np.cumsum(counts) - counts, counts)
+        nbrs = graph.indices[np.repeat(starts, counts) + offs]
+        new = np.unique(nbrs[~in_region[nbrs]])
+        in_region[new] = True
+        frontier = new
+    return np.flatnonzero(in_region)
+
+
+def make_shards(graph: LabeledGraph, assignment: np.ndarray, n_parts: int,
+                halo_hops: int = 2) -> list[Shard]:
+    """Cut the data graph into shards with `halo_hops` rings of context.
+
+    The canonical-owner rule (owned_mask + min-global-id endpoint) makes
+    every edge of the global graph indexed by exactly one shard, while the
+    halo guarantees the owning shard actually contains the edge and the
+    full message-passing context of its owned vertices.
+    """
+    assignment = np.asarray(assignment)
+    shards: list[Shard] = []
+    for sid in range(n_parts):
+        owned = np.flatnonzero(assignment == sid).astype(np.int64)
+        region = halo_region(graph, owned, halo_hops)
+        local, vids = graph.induced_subgraph(region)
+        owned_mask = assignment[vids] == sid
+        shards.append(Shard(sid=sid, graph=local,
+                            global_ids=vids.astype(np.int64),
+                            owned_mask=owned_mask))
+    return shards

@@ -1,0 +1,167 @@
+"""Logical-axis sharding rules for the JAX model zoo.
+
+Models annotate arrays with *logical* axis names ("batch", "heads",
+"edges", ...) via `constrain`; a process-wide rule table maps logical
+names to mesh axes ("data", "model", ("pod", "data"), or None for
+replicated).  The launch layer installs rules + mesh per run
+(`set_rules`/`set_mesh`, or scoped with `rules_ctx`), so the same model
+code lowers correctly on a laptop (no mesh: every constrain is a no-op)
+and on a multi-pod production mesh.
+
+Rule values are mesh-axis names (str), tuples of names for axes sharded
+over several mesh dims (e.g. ("pod", "data") data-parallel batch), or
+None for replication.  Unknown logical names map to None.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Iterator, Mapping
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+__all__ = ["set_rules", "set_mesh", "clear_rules", "current_mesh",
+           "current_rules", "rules_ctx", "spec_for", "constrain",
+           "shard_map", "GNN_RULES", "LM_RULES", "RECSYS_RULES"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              **kwargs):
+    """Version-portable `shard_map` for the model zoo.
+
+    Newer JAX exposes `jax.shard_map(..., check_vma=...)`; older releases
+    ship `jax.experimental.shard_map.shard_map(..., check_rep=...)`.
+    """
+    impl = getattr(jax, "shard_map", None)
+    if impl is not None:
+        return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_vma=check_vma, **kwargs)
+    from jax.experimental.shard_map import shard_map as impl
+    return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma, **kwargs)
+
+# ------------------------------------------------------------------ #
+# rule presets per model family (the launch layer rewrites the
+# ("pod", "data") placeholders to the ambient data-parallel axes)
+# ------------------------------------------------------------------ #
+LM_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "d_ff": "model",
+    "vocab": "model",
+    "kv_len": None,
+    "experts": "model",
+    "rows": "model",
+}
+
+GNN_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "nodes": ("pod", "data"),
+    "edges": ("pod", "data"),
+    "embed": None,
+    "d_ff": None,
+    "heads": None,
+}
+
+RECSYS_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "d_ff": "model",
+    "rows": "model",
+    "vocab": "model",
+    "cands": None,
+}
+
+_rules: dict[str, Any] = {}
+_mesh: Any = None
+
+
+def set_rules(rules: Mapping[str, Any]) -> None:
+    """Install the process-wide logical->mesh axis mapping."""
+    global _rules
+    _rules = dict(rules)
+
+
+def set_mesh(mesh: Any) -> None:
+    """Install the ambient mesh consulted by `constrain`."""
+    global _mesh
+    _mesh = mesh
+
+
+def clear_rules() -> None:
+    """Drop both the rule table and the ambient mesh."""
+    global _rules, _mesh
+    _rules = {}
+    _mesh = None
+
+
+def current_mesh() -> Any:
+    return _mesh
+
+
+def current_rules() -> dict[str, Any]:
+    return dict(_rules)
+
+
+@contextlib.contextmanager
+def rules_ctx(rules: Mapping[str, Any]) -> Iterator[None]:
+    """Scoped rule table (restores the previous table on exit)."""
+    global _rules
+    prev = _rules
+    _rules = dict(rules)
+    try:
+        yield
+    finally:
+        _rules = prev
+
+
+def spec_for(*names: str | None) -> PartitionSpec:
+    """PartitionSpec for a sequence of logical axis names."""
+    return PartitionSpec(
+        *[_rules.get(n) if n is not None else None for n in names])
+
+
+def _axis_size(mesh: Any, entry: Any) -> int:
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for a in axes:
+        size *= int(mesh.shape[a])
+    return size
+
+
+def constrain(x: jax.Array, *names: str | None) -> jax.Array:
+    """Apply a sharding constraint by logical axis names.
+
+    No-op when no real mesh is ambient, when every named axis maps to
+    None, or when a mapped mesh axis is absent / does not divide the
+    corresponding array dimension (the constraint is a layout *hint* —
+    dropping it is always semantically safe).
+    """
+    mesh = _mesh
+    if mesh is None or not isinstance(mesh, jax.sharding.Mesh):
+        return x
+    entries = [_rules.get(n) if n is not None else None for n in names]
+    if all(e is None for e in entries):
+        return x
+    cleaned = []
+    for dim, entry in zip(x.shape, entries):
+        if entry is None:
+            cleaned.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        if any(a not in mesh.shape for a in axes):
+            cleaned.append(None)
+            continue
+        if int(dim) % _axis_size(mesh, entry) != 0:
+            cleaned.append(None)
+            continue
+        cleaned.append(entry)
+    if all(e is None for e in cleaned):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*cleaned)))

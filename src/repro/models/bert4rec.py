@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import constrain
+from repro.dist.sharding import shard_map as _shard_map
 from repro.models.common import cross_entropy_loss, init_dense
 from repro.models.embedding_bag import init_table
 
@@ -216,7 +217,7 @@ def _bulk_topk_shardmap(params: dict[str, Any], cfg: Bert4RecConfig,
         nv, sel = jax.lax.top_k(allv, k)
         return nv, jnp.take_along_axis(alli, sel, axis=1)
 
-    return jax.shard_map(
+    return _shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(dp, None), P("model", None)),
         out_specs=(P(dp, None), P(dp, None)),

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import constrain
+from repro.dist.sharding import shard_map as _shard_map
 from repro.models.common import init_dense
 
 __all__ = ["MoEConfig", "init_moe_params", "moe_ffn"]
@@ -264,7 +265,7 @@ def _moe_ffn_shardmap(x: jnp.ndarray, params: dict[str, Any], cfg: MoEConfig,
         return out, aux
 
     wspec = P("model", "data" if cfg.fsdp_experts else None, None)
-    routed, aux = jax.shard_map(
+    routed, aux = _shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(dp, None, None), P(), P(), wspec, wspec, wspec),
         out_specs=(P(dp, None, None), P()),

@@ -35,24 +35,28 @@ class WorkerFailover:
     """
 
     engine: Any                       # DistributedGNNPE
+    dead: set = dataclasses.field(default_factory=set)
 
     def fail_machine(self, machine_id: int) -> list[int]:
         """Kill one machine; return the re-homed shard ids."""
         eng = self.engine
+        self.dead.add(machine_id)
+        # the engine owns placement: mark the machine dead there too so
+        # the rebalancer never migrates shards back onto it
+        getattr(eng, "dead_machines", self.dead).add(machine_id)
         victims = [sid for sid, mk in eng.routing.items()
                    if mk == machine_id]
-        survivors = [k for k in range(len(eng.specs)) if k != machine_id]
+        survivors = [k for k in range(len(eng.specs))
+                     if k not in self.dead]
         if not survivors:
             raise RuntimeError("no survivors")
         weights = eng.cpu_w[survivors]
         weights = weights / weights.sum()
         rng = np.random.default_rng(machine_id)
-        for sid in victims:
-            tgt = int(rng.choice(survivors, p=weights))
-            blob = eng.shards[sid].serialize()       # replica byte image
-            from repro.dist.shard import Shard
-            eng.shards[sid] = Shard.deserialize(blob)
-            eng.routing[sid] = tgt
+        moves = [(sid, machine_id, int(rng.choice(survivors, p=weights)))
+                 for sid in victims]
+        from repro.dist.migration import hot_migrate
+        hot_migrate(eng.shards, moves, eng.routing, rng=rng)
         return victims
 
     def verify_exactness(self, queries, oracle_fn) -> bool:

@@ -1,0 +1,95 @@
+"""Property-based tests for shard byte images + CRC integrity.
+
+Beyond the seed assertions in test_distributed.py: serialize/deserialize
+round-trips on arbitrary random graphs and partitions, byte-flip CRC
+detection at arbitrary positions, and retransmission-loop termination
+under heavy fault injection.  Uses hypothesis (or the repo's offline
+fallback under src/hypothesis/).
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.artree import build_artree
+from repro.core.embedding import EmbeddedPaths
+from repro.core.graph import LabeledGraph
+from repro.core.matching import ShardIndex
+from repro.dist.migration import hot_migrate
+from repro.dist.partition import metis_like_partition
+from repro.dist.shard import Shard, make_shards, shard_crc32
+
+
+def _random_graph(n: int, m: int, n_labels: int, seed: int) -> LabeledGraph:
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(m, 2))
+    labels = rng.integers(0, n_labels, size=n)
+    return LabeledGraph.from_edges(n, edges, labels)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(12, 60), seed=st.integers(0, 99),
+       parts=st.integers(2, 5))
+def test_shard_roundtrip_arbitrary_graphs(n, seed, parts):
+    g = _random_graph(n, 3 * n, 4, seed)
+    p = metis_like_partition(g, parts, seed=seed)
+    for s in make_shards(g, p.assignment, parts, halo_hops=2):
+        s2 = Shard.deserialize(s.serialize())
+        assert s2.sid == s.sid
+        assert (s2.global_ids == s.global_ids).all()
+        assert (s2.owned_mask == s.owned_mask).all()
+        assert (s2.graph.labels == s.graph.labels).all()
+        assert (s2.graph.edge_list == s.graph.edge_list).all()
+        assert s2.index is None
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_points=st.integers(1, 50), dim=st.integers(2, 8),
+       seed=st.integers(0, 99))
+def test_shard_roundtrip_preserves_index_bytes(n_points, dim, seed):
+    """The aR-tree must survive the byte image bit-for-bit (the property
+    hot migration relies on for non-interruptible queries)."""
+    rng = np.random.default_rng(seed)
+    g = _random_graph(10, 20, 3, seed)
+    emb = rng.uniform(0, 1, (n_points, dim)).astype(np.float32)
+    verts = rng.integers(0, 10, size=(n_points, 2)).astype(np.int32)
+    index = ShardIndex(
+        embedded={1: EmbeddedPaths(vertices=verts, embeddings=emb,
+                                   length=1)},
+        trees={1: build_artree(emb)})
+    s = Shard(sid=0, graph=g, global_ids=np.arange(10, dtype=np.int64),
+              owned_mask=np.ones(10, dtype=bool), index=index)
+    s2 = Shard.deserialize(s.serialize())
+    assert s2.index.trees[1].serialize() == index.trees[1].serialize()
+    assert (s2.index.embedded[1].embeddings == emb).all()
+    # re-serialization is byte-identical (canonical image)
+    assert s2.serialize() == s.serialize()
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.binary(min_size=1, max_size=512),
+       pos_seed=st.integers(0, 10 ** 6),
+       flip=st.integers(1, 255))
+def test_crc32_detects_any_single_byte_flip(data, pos_seed, flip):
+    crc = shard_crc32(data)
+    bad = bytearray(data)
+    pos = pos_seed % len(bad)
+    bad[pos] ^= flip
+    assert shard_crc32(bytes(bad)) != crc
+    assert shard_crc32(data) == crc        # pure function
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_migration_terminates_under_heavy_corruption(seed):
+    """Even at corrupt_prob=0.9 the retransmission loop converges and
+    the delivered replica is intact."""
+    g = _random_graph(20, 50, 3, seed)
+    p = metis_like_partition(g, 2, seed=seed)
+    shards = {s.sid: s for s in make_shards(g, p.assignment, 2)}
+    routing = {0: 0, 1: 1}
+    before = shards[0].serialize()
+    res = hot_migrate(shards, [(0, 0, 1)], routing,
+                      rng=np.random.default_rng(seed), corrupt_prob=0.9)
+    assert res.crc_ok and routing[0] == 1
+    assert shards[0].serialize() == before
