@@ -2,13 +2,16 @@
 
 Compares the full system (all three innovations) against: (a) the
 networkx VF2 baseline (classical backtracking), (b) the engine with
-pruning disabled at the plan level (natural order, no cache).  The paper's
-headline is 1-2 orders of magnitude vs baselines; here the same direction
-is measured wall-clock on CPU at laptop scale.
+pruning disabled at the plan level (natural order, no cache), and (c)
+the same engine with the batched device probe (`device_probe=True`).
+The paper's headline is 1-2 orders of magnitude vs baselines; here the
+same direction is measured wall-clock on CPU at laptop scale.  The
+host-vs-device end-to-end numbers are merged into BENCH_probe.json.
 """
 
 from __future__ import annotations
 
+import json
 import time
 
 from benchmarks.common import bench_engine, emit
@@ -38,7 +41,30 @@ def run() -> list[tuple]:
     for q in qs:
         eng.query(q, plan_mode="natural")
     t_plain = time.perf_counter() - t0
+
+    # host vs batched device probe, end to end (cache off so every query
+    # exercises the probe path); counts must agree bit for bit
+    t0 = time.perf_counter()
+    n_host = sum(len(eng.query(q, device_probe=False)[0]) for q in qs)
+    t_host = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    n_dev = sum(len(eng.query(q, device_probe=True)[0]) for q in qs)
+    t_dev = time.perf_counter() - t0
+    assert n_host == n_dev == n_vf2, "device probe exactness violated"
     eng.use_cache = True
+    try:
+        with open("BENCH_probe.json") as f:
+            merged = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        merged = {}
+    merged["e2e"] = {"host_s": round(t_host, 4),
+                     "device_s": round(t_dev, 4),
+                     "matches": n_dev, "n_queries": len(qs)}
+    with open("BENCH_probe.json", "w") as f:
+        json.dump(merged, f, indent=2)
+    rows.append(("e2e/probe_host_vs_device", t_dev * 1e6,
+                 f"host_s={t_host:.2f};device_s={t_dev:.2f};"
+                 f"matches={n_dev}"))
 
     rows.append(("e2e/latency_10q", t_sys * 1e6,
                  f"system_s={t_sys:.2f};vf2_s={t_vf2:.2f};"

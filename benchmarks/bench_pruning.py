@@ -2,10 +2,16 @@
 
 Claims checked: index-level pruning removes the overwhelming majority of
 candidate paths (GNN-PE reports ~99.5% on US-Patents); training the
-certified-monotone GNN improves pruning over untrained params.
+certified-monotone GNN improves pruning over untrained params.  Also
+compares the per-(path, shard) host probe against the batched device
+probe (`device_probe=True`, one launch per query path over the padded
+[S, max_leaves, D] slab) and emits the comparison to BENCH_probe.json.
 """
 
 from __future__ import annotations
+
+import json
+import time
 
 import jax
 import numpy as np
@@ -31,6 +37,58 @@ def _pruning(g, params, cfg) -> dict[str, float]:
     return out
 
 
+def probe_comparison(path: str = "BENCH_probe.json") -> dict:
+    """Host vs batched-device probe on the same engine and workload.
+
+    The defining property of the device path: exactly one probe dispatch
+    (device launch) per executed query path, against one per
+    (path, shard) on the host — with bit-identical matches and comm
+    accounting.  The result is merged into BENCH_probe.json.
+    """
+    from benchmarks.common import bench_engine
+    from repro.data.synthetic import make_workload
+
+    g, eng = bench_engine(n_machines=3, spm=3, n_vertices=400, seed=0)
+    qs = make_workload(g, 6, seed=0)
+    eng.use_cache = False
+    report: dict = {"n_queries": len(qs), "n_shards": len(eng.shards)}
+    matches: dict[str, int] = {}
+    for mode, flag in (("host", False), ("device", True)):
+        t0 = time.perf_counter()
+        launches = paths = comm = rows = 0
+        n_matches = 0
+        for q in qs:
+            m, tel = eng.query(q, device_probe=flag)
+            launches += tel.probe_launches
+            paths += tel.paths_executed
+            comm += tel.comm_bytes
+            rows += tel.cross_shard_rows
+            n_matches += len(m)
+        matches[mode] = n_matches
+        report[mode] = {
+            "wall_s": round(time.perf_counter() - t0, 4),
+            "probe_launches": launches,
+            "paths_executed": paths,
+            "launches_per_path": round(launches / max(paths, 1), 3),
+            "comm_bytes": comm,
+            "cross_shard_rows": rows,
+        }
+    assert matches["host"] == matches["device"], "device probe not exact"
+    assert report["host"]["comm_bytes"] == report["device"]["comm_bytes"]
+    assert report["device"]["probe_launches"] \
+        <= report["device"]["paths_executed"], \
+        "device probe must launch at most once per query path"
+    try:
+        with open(path) as f:
+            merged = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        merged = {}
+    merged["probe"] = report
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2)
+    return report
+
+
 def run() -> list[tuple]:
     rows = []
     for name in ("dblp-s", "nws-s"):
@@ -45,6 +103,14 @@ def run() -> list[tuple]:
                          f"selectivity={after[l][0]:.4f};"
                          f"index_prune={after[l][1]:.4f};"
                          f"untrained_sel={before[l][0]:.4f}"))
+    probe = probe_comparison()
+    rows.append(("pruning/probe_host_vs_device",
+                 probe["device"]["wall_s"] * 1e6,
+                 f"host_launches={probe['host']['probe_launches']};"
+                 f"device_launches={probe['device']['probe_launches']};"
+                 f"device_launches_per_path="
+                 f"{probe['device']['launches_per_path']};"
+                 f"comm_bytes={probe['device']['comm_bytes']}"))
     return rows
 
 

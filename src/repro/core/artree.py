@@ -24,7 +24,8 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["ARTree", "build_artree", "query_dominating", "query_stats"]
+__all__ = ["ARTree", "build_artree", "query_dominating", "query_stats",
+           "batched_query_dominating"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,6 +166,101 @@ def query_dominating(tree: ARTree, q: np.ndarray, eps: float = 1e-5
     stats["leaves_tested"] = int(alive.size)
     ok = (q[None, :] <= tree.points[alive] + eps).all(axis=1)
     return tree.perm[alive[ok]], stats
+
+
+def _tree_rows(tree: ARTree) -> np.ndarray:
+    """All box rows of a tree, level-order root->leaf-parents, then the
+    leaf points — the row layout of the batched device probe slab."""
+    if tree.n_points == 0:
+        return np.zeros((0, tree.points.shape[1]), np.float32)
+    return np.concatenate(tree.uppers + [tree.points], axis=0)
+
+
+def batched_query_dominating(trees: list[ARTree], queries: np.ndarray,
+                             eps: float = 1e-5,
+                             use_pallas: bool | None = None
+                             ) -> tuple[list[list[np.ndarray]],
+                                        dict[str, int]]:
+    """Probe Q query embeddings against S packed aR-trees in ONE launch.
+
+    The device probe path (DESIGN.md §3): every tree's internal-node
+    upper bounds (all levels, root first) and its leaf points are
+    concatenated into a single padded ``[S, R_max, D]`` slab with
+    per-shard valid counts, one batched dominance launch
+    (`repro.kernels.dominance.batched_dominance_mask`) evaluates
+    ``ok[s, q, r]`` for every node and leaf at once, and survivorship is
+    then propagated level-order as dense masked AND-reduces: a node is
+    alive iff its packed parent is alive and its own box passes.
+
+    Returns ``(hits, stats)``: ``hits[s][q]`` is the int64 array of
+    ORIGINAL point indices dominated by ``queries[q]`` in ``trees[s]`` —
+    identical in value and order to ``query_dominating(trees[s],
+    queries[q])[0]`` — and ``stats`` aggregates the same counters the
+    host traversal reports, plus ``device_launches`` (always 1 when any
+    tree is non-empty).
+    """
+    queries = np.asarray(queries, dtype=np.float32)
+    n_q = queries.shape[0]
+    stats = {"nodes_visited": 0, "nodes_pruned": 0, "leaves_tested": 0,
+             "device_launches": 0}
+    hits: list[list[np.ndarray]] = [
+        [np.zeros(0, np.int64) for _ in range(n_q)] for _ in trees]
+    rows = [_tree_rows(t) for t in trees]
+    counts = np.array([r.shape[0] for r in rows], np.int32)
+    r_max = int(counts.max()) if counts.size else 0
+    if r_max == 0:
+        return hits, stats
+
+    import jax.numpy as jnp
+
+    from repro.kernels.dominance.ops import batched_dominance_mask
+
+    d = queries.shape[1]
+    # bucket both slab dims to kernel-block multiples: the probed shard
+    # set and max row count vary per query path, and an exact-shape slab
+    # would retrace the jitted kernel on nearly every path.  Block
+    # multiples bound the distinct compiled shapes while capping the
+    # padded compute at one extra block per dim (pow2 rounding was
+    # measurably slower on CPU).  Pad shards have count 0 and -inf
+    # rows, so they can never produce a candidate.
+    s_pad = -(-len(trees) // 8) * 8
+    r_pad = -(-r_max // 256) * 256
+    slab = np.full((s_pad, r_pad, d), -np.inf, np.float32)
+    for s, r in enumerate(rows):
+        slab[s, :r.shape[0]] = r
+    counts = np.pad(counts, (0, s_pad - counts.size))
+    ok_all = np.asarray(batched_dominance_mask(
+        jnp.asarray(queries), jnp.asarray(slab), jnp.asarray(counts),
+        eps=eps, use_pallas=use_pallas)).astype(bool)[:len(trees)]
+    stats["device_launches"] = 1
+
+    for s, tree in enumerate(trees):
+        n = tree.n_points
+        if n == 0:
+            continue
+        b = tree.branching
+        level_sizes = [u.shape[0] for u in tree.uppers]
+        offsets = np.cumsum([0] + level_sizes)
+        for qi in range(n_q):
+            ok = ok_all[s, qi]
+            # root level: every node is a candidate, exactly as the host
+            # traversal starts from the full root array
+            alive = np.ones(level_sizes[0], bool) if level_sizes else None
+            for lvl, m in enumerate(level_sizes):
+                cand = alive
+                ok_lvl = ok[offsets[lvl]:offsets[lvl] + m]
+                alive = cand & ok_lvl
+                stats["nodes_visited"] += int(cand.sum())
+                stats["nodes_pruned"] += int(cand.sum() - alive.sum())
+                nxt = level_sizes[lvl + 1] if lvl + 1 < len(level_sizes) \
+                    else n
+                alive = np.repeat(alive, b)[:nxt]
+            if alive is None:       # single point, no internal levels
+                alive = np.ones(n, bool)
+            stats["leaves_tested"] += int(alive.sum())
+            final = alive & ok[offsets[-1]:offsets[-1] + n]
+            hits[s][qi] = tree.perm[np.flatnonzero(final)]
+    return hits, stats
 
 
 def query_stats(tree: ARTree, q: np.ndarray, eps: float = 1e-5) -> dict[str, float]:

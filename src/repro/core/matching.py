@@ -30,6 +30,7 @@ from repro.core.graph import LabeledGraph
 from repro.core.paths import PathTable, paths_of_query
 
 __all__ = ["MatchStats", "ShardIndex", "build_shard_index",
+           "path_candidates", "batched_path_candidates",
            "vertex_candidates", "backtrack_join", "exact_match"]
 
 
@@ -91,6 +92,19 @@ def _reverse_embedding(emb: np.ndarray, lp1: int) -> np.ndarray:
     return emb.reshape(p, lp1, d)[:, ::-1, :].reshape(p, d_total)
 
 
+def _scatter_hits(ep: EmbeddedPaths, idx_f: np.ndarray, idx_r: np.ndarray
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Forward + reversed hit indices -> (cand_vertices, orient).
+
+    Shared by the host and batched probe paths — their bit-identity
+    contract depends on this scatter staying in lockstep.
+    """
+    verts = np.concatenate([ep.vertices[idx_f], ep.vertices[idx_r][:, ::-1]])
+    orient = np.concatenate([np.zeros(idx_f.size, np.int8),
+                             np.ones(idx_r.size, np.int8)])
+    return verts, orient
+
+
 def path_candidates(index: ShardIndex, q_emb: np.ndarray, length: int,
                     stats: MatchStats | None = None
                     ) -> tuple[np.ndarray, np.ndarray]:
@@ -110,10 +124,44 @@ def path_candidates(index: ShardIndex, q_emb: np.ndarray, length: int,
     if stats is not None:
         stats.leaves_tested += st_f["leaves_tested"] + st_r["leaves_tested"]
         stats.nodes_pruned += st_f["nodes_pruned"] + st_r["nodes_pruned"]
-    verts = np.concatenate([ep.vertices[idx_f], ep.vertices[idx_r][:, ::-1]])
-    orient = np.concatenate([np.zeros(idx_f.size, np.int8),
-                             np.ones(idx_r.size, np.int8)])
-    return verts, orient
+    return _scatter_hits(ep, idx_f, idx_r)
+
+
+def batched_path_candidates(indexes: list[ShardIndex], q_emb: np.ndarray,
+                            length: int, stats: MatchStats | None = None,
+                            use_pallas: bool | None = None
+                            ) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Probe one query path against MANY shard indexes in one launch.
+
+    Gathers every shard's aR-tree of the given length into the padded
+    ``[S, max_leaves, D]`` device slab (see
+    `repro.core.artree.batched_query_dominating`), probes both
+    orientations in the same launch, and scatters survivor rows back per
+    shard.  Returns one ``(cand_vertices [C, l+1], orient [C])`` pair per
+    input index — identical, element for element, to calling
+    `path_candidates(indexes[s], q_emb, length)` per shard.
+    """
+    from repro.core.artree import batched_query_dominating
+
+    trees, slots = [], []
+    out: list[tuple[np.ndarray, np.ndarray]] = [
+        (np.zeros((0, length + 1), np.int32), np.zeros(0, np.int8))
+        for _ in indexes]
+    for s, index in enumerate(indexes):
+        if length in index.trees:
+            trees.append(index.trees[length])
+            slots.append(s)
+    if not trees:
+        return out
+    q_rev = _reverse_embedding(q_emb[None, :], length + 1)[0]
+    hits, bstats = batched_query_dominating(
+        trees, np.stack([q_emb, q_rev]), use_pallas=use_pallas)
+    if stats is not None:
+        stats.leaves_tested += bstats["leaves_tested"]
+        stats.nodes_pruned += bstats["nodes_pruned"]
+    for s, (idx_f, idx_r) in zip(slots, hits):
+        out[s] = _scatter_hits(indexes[s].embedded[length], idx_f, idx_r)
+    return out
 
 
 def vertex_candidates(query: LabeledGraph, data: LabeledGraph,
@@ -122,7 +170,13 @@ def vertex_candidates(query: LabeledGraph, data: LabeledGraph,
     """Per-query-vertex candidate sets (bool masks over data vertices).
 
     Starts from the label + degree filter, then intersects the projection of
-    every path's candidates at every position.
+    every path's candidates at every position.  A probed path with ZERO
+    candidate rows is a dominance proof that the query is unmatchable: its
+    vertices' sets are emptied (the all-False projection) and the remaining
+    paths are skipped, mirroring the cluster engine's `alive` early-exit, so
+    the backtracking join sees an empty set and does no work.  A row entry
+    of ``None`` means the path was NOT probed (e.g. omitted by a partial
+    execution plan) and contributes no constraint.
     """
     n_q, n_d = query.n_vertices, data.n_vertices
     deg_q, deg_d = query.degrees, data.degrees
@@ -130,18 +184,26 @@ def vertex_candidates(query: LabeledGraph, data: LabeledGraph,
     for v in range(n_q):
         mask = (data.labels == query.labels[v]) & (deg_d >= deg_q[v])
         cands.append(mask)
-    pos = 0
+    alive = all(c.any() for c in cands)
     for table, cand in zip(q_tables, cand_per_path):
+        if not alive:
+            break
         for r in range(table.n_paths):
             cv = cand[r] if isinstance(cand, list) else cand
+            if cv is None:          # not probed: no dominance information
+                continue
             # cand for row r: [C, l+1] data vertices aligned to query path row r
             qv = table.vertices[r]
             mask_any = np.zeros((qv.shape[0], n_d), dtype=bool)
             if cv.shape[0]:
                 for i in range(qv.shape[0]):
                     mask_any[i, cv[:, i]] = True
-                for i, qvi in enumerate(qv):
-                    cands[qvi] &= mask_any[i]
+            for i, qvi in enumerate(qv):
+                cands[qvi] &= mask_any[i]
+                if not cands[qvi].any():
+                    alive = False
+            if not alive:
+                break
     return cands
 
 
@@ -230,9 +292,10 @@ def exact_match(query: LabeledGraph, data: LabeledGraph, index: ShardIndex,
         })
     stats.filter_time_ms = (time.perf_counter() - t0) * 1e3
 
+    # rows a partial plan never executed map to None ("not probed"), NOT
+    # to an empty array ("probed, provably unmatchable")
     cand_per_path = [
-        [cand_rows.get((ti, r), np.zeros((0, t.length + 1), np.int32))
-         for r in range(t.n_paths)]
+        [cand_rows.get((ti, r)) for r in range(t.n_paths)]
         for ti, t in enumerate(q_tables)
     ]
     n_total = sum(index.embedded[l].n_paths for l in index.embedded)

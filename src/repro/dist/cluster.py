@@ -38,7 +38,8 @@ from repro.core.artree import build_artree
 from repro.core.embedding import (EmbeddedPaths, embed_query_paths,
                                   train_dominance_gnn)
 from repro.core.graph import LabeledGraph
-from repro.core.matching import (ShardIndex, backtrack_join, path_candidates,
+from repro.core.matching import (MatchStats, ShardIndex, backtrack_join,
+                                 batched_path_candidates, path_candidates,
                                  _reverse_embedding)
 from repro.core.paths import PathTable, enumerate_paths, paths_of_query
 from repro.core.pescore import (PEScoreModel, aggregate_global_features,
@@ -49,9 +50,26 @@ from repro.dist.migration import LINK_BYTES_PER_MS, hot_migrate
 from repro.dist.partition import edge_cut, metis_like_partition, size_balance
 from repro.dist.shard import Shard, make_shards
 
-__all__ = ["MachineSpec", "QueryTelemetry", "DistributedGNNPE"]
+__all__ = ["MachineSpec", "QueryTelemetry", "DistributedGNNPE",
+           "EPOCH_VIRTUAL_S"]
 
 ROW_BYTES_PER_VERTEX = 4          # int32 candidate vertex ids on the wire
+
+# Rebalance clock: the engine runs on VIRTUAL time (queries carry virtual
+# latencies, not wall time), so the anti-thrash decay in
+# `loadbalance.alpha_decay` — specified in seconds over ALPHA_WINDOW_S —
+# needs one documented conversion: each `run_workload` epoch advances the
+# virtual rebalance clock by EPOCH_VIRTUAL_S seconds.  With the defaults
+# (60 s window / 20 s per epoch) the post-migration boost decays to zero
+# after exactly 3 epochs.  All migration bookkeeping uses this one clock;
+# the per-query counter `_qclock` is only a query id / feature timestamp
+# and must never be fed to the balancer as seconds.
+EPOCH_VIRTUAL_S = 20.0
+
+# Deterministic PE-score labeling: the virtual cost of testing one aR-tree
+# leaf during an offline probe.  Labels built from (leaves_tested x this)
+# are machine- and load-independent, unlike wall-clock timings.
+VIRTUAL_MS_PER_LEAF = 1e-4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,8 +93,11 @@ class QueryTelemetry:
     shards_skipped: int = 0       # root-MBR skips
     paths_executed: int = 0
     paths_skipped: int = 0        # early-terminated after empty candidates
+    probe_launches: int = 0       # probe dispatches: host = one per
+                                  # (path, shard); device = one per path
     n_matches: int = 0
     plan_mode: str = "pescore"
+    device_probe: bool = False
 
 
 def _root_skip(tree, q_fwd: np.ndarray, q_rev: np.ndarray,
@@ -103,12 +124,14 @@ class DistributedGNNPE:
     def build(cls, graph: LabeledGraph, n_machines: int,
               shards_per_machine: int = 4, gnn_train_steps: int = 60,
               seed: int = 0, halo_hops: int = 2,
-              max_path_length: int = 2) -> "DistributedGNNPE":
+              max_path_length: int = 2,
+              device_probe: bool = False) -> "DistributedGNNPE":
         self = object.__new__(cls)
         t_build = time.perf_counter()
         rng = np.random.default_rng(seed)
         self.graph = graph
         self.max_path_length = max_path_length
+        self.device_probe = device_probe
         self.cfg = gnn_lib.GNNConfig(n_labels=graph.n_labels)
 
         # 1. partition into ultra-fine shards with halo context
@@ -182,8 +205,10 @@ class DistributedGNNPE:
         self.migrations: list = []
         self.history: list[dict] = []
         self._rng = rng
-        self._qclock = 0.0
-        self._last_migration_t = -lb.ALPHA_WINDOW_S
+        self._qclock = 0.0            # query counter (ids/features only)
+        self._epoch = 0               # run_workload epochs (rebalance clock)
+        self._last_migration_epoch = (self._epoch
+                                      - lb.ALPHA_WINDOW_S / EPOCH_VIRTUAL_S)
         self._cpu: dict[int, float] = defaultdict(float)
         self._comm: dict[int, float] = defaultdict(float)
         self._touch: dict[int, set] = defaultdict(set)
@@ -268,10 +293,17 @@ class DistributedGNNPE:
         return alloc, imbalance
 
     def _fit_pe_model(self, seed: int, n_queries: int = 6) -> None:
-        """Offline PE-score labels from sampled probes (§6.2.1)."""
+        """Offline PE-score labels from sampled probes (§6.2.1).
+
+        Labels use DETERMINISTIC probe statistics: the filter-cost term
+        is `leaves_tested * VIRTUAL_MS_PER_LEAF` (the work the probe
+        actually did), not wall time, so the fitted model is identical
+        across machines and load conditions.  Wall time is still
+        measured, but only into the `pe_fit_report` diagnostic.
+        """
         from repro.data.synthetic import random_walk_query
         rng = np.random.default_rng(seed + 0x9E)
-        xs, ys = [], []
+        xs, ys, wall_ms = [], [], []
         totals = {l: sum(s.index.embedded[l].n_paths
                          for s in self.shards.values())
                   for l in range(1, self.max_path_length + 1)}
@@ -283,41 +315,61 @@ class DistributedGNNPE:
                 q_emb = embed_query_paths(q, self.params, self.cfg, table)
                 for r in range(table.n_paths):
                     t0 = time.perf_counter()
-                    rows = self._probe_all_shards(q_emb[r], table.length)
-                    ms = (time.perf_counter() - t0) * 1e3
+                    rows, leaves = self._probe_all_shards(q_emb[r],
+                                                          table.length)
+                    wall_ms.append((time.perf_counter() - t0) * 1e3)
                     y = PEScoreModel.label_pe_score(
                         n_valid=float(rows),
                         n_total=float(max(totals[table.length], 1)),
-                        filter_time_ms=ms)
+                        filter_time_ms=leaves * VIRTUAL_MS_PER_LEAF)
                     xs.append(path_feature_vector(
                         q, table.vertices[r], False,
                         self.pe_model.global_features,
                         self.pe_model.label_freq))
                     ys.append(y)
+        self.pe_fit_report = {
+            "n_probes": len(wall_ms),
+            "wall_ms_total": float(sum(wall_ms)),   # diagnostic only
+        }
         if len(xs) >= 8:
             from repro.core.pescore import fit_gbdt
             self.pe_model.gbdt = fit_gbdt(np.stack(xs), np.asarray(ys),
                                           n_trees=24, depth=3, n_bins=8)
 
-    def _probe_all_shards(self, q_emb: np.ndarray, length: int) -> int:
+    def _probe_all_shards(self, q_emb: np.ndarray, length: int
+                          ) -> tuple[int, int]:
+        """(surviving rows, leaves tested) over all shards — both counts
+        are deterministic functions of the index and the query."""
         rows = 0
+        stats = MatchStats()
         q_rev = _reverse_embedding(q_emb[None, :], length + 1)[0]
         for shard in self.shards.values():
             tree = shard.index.trees.get(length)
             if tree is None or tree.n_points == 0 \
                     or _root_skip(tree, q_emb, q_rev):
                 continue
-            verts, _ = path_candidates(shard.index, q_emb, length)
+            verts, _ = path_candidates(shard.index, q_emb, length, stats)
             rows += verts.shape[0]
-        return rows
+        return rows, stats.leaves_tested
 
     # ------------------------------------------------------------------ #
     # online phase
     # ------------------------------------------------------------------ #
-    def query(self, query: LabeledGraph, plan_mode: str = "pescore"
+    def query(self, query: LabeledGraph, plan_mode: str = "pescore",
+              device_probe: bool | None = None
               ) -> tuple[list[tuple], QueryTelemetry]:
-        """Exact matches of `query` in the data graph + telemetry."""
-        tel = QueryTelemetry(plan_mode=plan_mode)
+        """Exact matches of `query` in the data graph + telemetry.
+
+        device_probe=True routes every path's shard probes through ONE
+        batched device launch (padded [S, max_leaves, D] slab, both
+        orientations fused) instead of per-(path, shard) host calls; the
+        candidate sets, matches and comm accounting are bit-identical to
+        the host path.  None falls back to the engine-level default set
+        at build time.
+        """
+        if device_probe is None:
+            device_probe = self.device_probe
+        tel = QueryTelemetry(plan_mode=plan_mode, device_probe=device_probe)
         self._qclock += 1.0
         key = (query.n_vertices, query.labels.tobytes(),
                query.edge_list.tobytes())
@@ -367,6 +419,9 @@ class DistributedGNNPE:
             qe = q_embs[ti][r]
             q_rev = _reverse_embedding(qe[None, :], l + 1)[0]
             pos_mask = np.zeros((l + 1, n_d), dtype=bool)
+            # central node: root-MBR skip from the <1KB metadata, then
+            # gather the surviving shards for this path's probe
+            probes: list[tuple[int, Shard]] = []
             for sid, shard in self.shards.items():
                 tree = shard.index.trees.get(l)
                 if tree is None or tree.n_points == 0:
@@ -374,12 +429,33 @@ class DistributedGNNPE:
                 if _root_skip(tree, qe, q_rev):
                     tel.shards_skipped += 1
                     continue
+                probes.append((sid, shard))
+            if device_probe and probes:
+                # pad all probed shards into one [S, max_leaves, D] slab
+                # and launch once; survivor rows scatter back per shard.
+                # Service time is attributed per shard as a DETERMINISTIC
+                # virtual cost (leaves x VIRTUAL_MS_PER_LEAF): the wall
+                # time of a batched launch includes one-off jit compiles
+                # per slab-shape bucket and cannot be attributed to a
+                # machine without poisoning the load telemetry.
+                results = batched_path_candidates(
+                    [shard.index for _, shard in probes], qe, l)
+                tel.probe_launches += 1
+                probe_ms = {sid: s.index.trees[l].n_points
+                            * VIRTUAL_MS_PER_LEAF for sid, s in probes}
+                verts_of = {sid: verts
+                            for (sid, _), (verts, _) in zip(probes, results)}
+            else:
+                probe_ms, verts_of = {}, {}
+                for sid, shard in probes:
+                    t0 = time.perf_counter()
+                    verts_of[sid], _ = path_candidates(shard.index, qe, l)
+                    probe_ms[sid] = (time.perf_counter() - t0) * 1e3
+                    tel.probe_launches += 1
+            for sid, shard in probes:
                 mk = self.routing[sid]
-                t0 = time.perf_counter()
-                verts, _ = path_candidates(shard.index, qe, l)
-                service_ms = ((time.perf_counter() - t0) * 1e3
-                              / self.cpu_w[mk])
-                gverts = shard.global_ids[verts]
+                service_ms = probe_ms[sid] / self.cpu_w[mk]
+                gverts = shard.global_ids[verts_of[sid]]
                 # shard-side filter against the candidate masks the
                 # master shipped with the probe: only surviving rows
                 # cross the network (what PE-score ordering optimizes)
@@ -415,8 +491,19 @@ class DistributedGNNPE:
         tel.latency_ms += (max(machine_ms.values(), default=0.0)
                            + comm_ms + plan_ms + join_ms + 0.05)
 
-        home = max(rows_by_machine, key=rows_by_machine.get) \
-            if rows_by_machine else 0
+        # home the cached result on the LIVE machine that produced the
+        # most candidate rows; never onto a dead machine (a query that
+        # probed nothing must not default to machine 0 if 0 is dead).
+        # With no live machine at all there is nowhere to cache: home is
+        # None and admission is skipped.
+        live_rows = {k: v for k, v in rows_by_machine.items()
+                     if k not in self.dead_machines}
+        if live_rows:
+            home = max(live_rows, key=live_rows.get)
+        else:
+            home = next((spec.machine_id for spec in self.specs
+                         if spec.machine_id not in self.dead_machines),
+                        None)
         self._observe_cache(key, hit=False, matched=bool(matches),
                             latency_ms=tel.latency_ms,
                             result=matches, slave_id=home)
@@ -425,13 +512,15 @@ class DistributedGNNPE:
     # -------------------------------------------------------------- #
     def _observe_cache(self, key, hit: bool, matched: bool,
                        latency_ms: float, result=None,
-                       slave_id: int = 0) -> None:
+                       slave_id: int | None = 0) -> None:
+        """slave_id=None means no live machine can hold the result:
+        feature tracking still runs, admission is skipped."""
         self.tracker.record_query(self._qclock, [key], {key: matched})
         feats = np.asarray(self.tracker.features(key), np.float32)
         self.aw.observe(feats, 1.0 if hit else 0.0)
         if not self.use_cache:
             return
-        if result is not None:
+        if result is not None and slave_id is not None:
             w = self.aw.weights(feats[None])[0]
             value = float((w * feats).sum())
             self._slave_store[slave_id][key] = result
@@ -451,11 +540,18 @@ class DistributedGNNPE:
                      rebalance: bool = False,
                      corrupt_prob: float = 0.0,
                      plan_mode: str = "pescore") -> list[QueryTelemetry]:
-        """Execute a query stream; optionally rebalance afterwards."""
+        """Execute a query stream (one epoch); optionally rebalance.
+
+        The rebalance clock advances EPOCH_VIRTUAL_S virtual seconds per
+        epoch — see the constant's docstring; the anti-thrash boost in
+        `lb.alpha_decay` therefore decays over ALPHA_WINDOW_S /
+        EPOCH_VIRTUAL_S epochs, never over a number of *queries*.
+        """
         self._cpu.clear()
         self._comm.clear()
         self._touch.clear()
         tels = [self.query(q, plan_mode=plan_mode)[1] for q in queries]
+        self._epoch += 1
 
         tele = self._refresh_loads()
         rebalanced = False
@@ -463,14 +559,15 @@ class DistributedGNNPE:
             plan = lb.plan_migrations(
                 tele, corr_fn=self._corr, wlabel_fn=self._wlabel,
                 shard_sizes=self._shard_bytes,
-                seconds_since_migration=self._qclock
-                - self._last_migration_t)
+                seconds_since_migration=(self._epoch
+                                         - self._last_migration_epoch)
+                * EPOCH_VIRTUAL_S)
             if plan.trigger and plan.moves:
                 res = hot_migrate(self.shards, plan.moves, self.routing,
                                   rng=self._rng,
                                   corrupt_prob=corrupt_prob)
                 self.migrations.append(res)
-                self._last_migration_t = self._qclock
+                self._last_migration_epoch = self._epoch
                 rebalanced = bool(res.migrated)
                 self._refresh_loads()
         self.history.append({

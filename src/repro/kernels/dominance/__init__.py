@@ -1,4 +1,7 @@
-from repro.kernels.dominance.ops import dominance_mask
-from repro.kernels.dominance.ref import dominance_mask_ref
+from repro.kernels.dominance.ops import (batched_dominance_mask,
+                                         dominance_mask)
+from repro.kernels.dominance.ref import (dominance_mask_3d_ref,
+                                         dominance_mask_ref)
 
-__all__ = ["dominance_mask", "dominance_mask_ref"]
+__all__ = ["dominance_mask", "dominance_mask_ref",
+           "batched_dominance_mask", "dominance_mask_3d_ref"]

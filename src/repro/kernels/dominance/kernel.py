@@ -20,6 +20,8 @@ from jax.experimental import pallas as pl
 
 BLOCK_Q = 128
 BLOCK_N = 256
+BLOCK_S_Q = 8                       # batched kernel: query block (sublane)
+BLOCK_S_N = 256                     # batched kernel: box block (lanes)
 
 
 def _dominance_kernel(q_ref, boxes_ref, out_ref, *, eps: float):
@@ -29,7 +31,7 @@ def _dominance_kernel(q_ref, boxes_ref, out_ref, *, eps: float):
     out_ref[...] = ok.astype(jnp.int8)
 
 
-@functools.partial(jax.jit, static_argnames=("block_q", "block_n",
+@functools.partial(jax.jit, static_argnames=("eps", "block_q", "block_n",
                                              "interpret"))
 def dominance_pallas(queries: jnp.ndarray, boxes: jnp.ndarray,
                      eps: float = 1e-5, block_q: int = BLOCK_Q,
@@ -61,3 +63,48 @@ def dominance_pallas(queries: jnp.ndarray, boxes: jnp.ndarray,
         interpret=interpret,
     )(qq, bb)
     return out[:q, :n]
+
+
+def _dominance_kernel_3d(q_ref, boxes_ref, out_ref, *, eps: float):
+    q = q_ref[...]                        # [BQ, D]
+    b = boxes_ref[0]                      # [BN, D] (shard-sliced)
+    ok = (q[:, None, :] <= b[None, :, :] + eps).all(axis=-1)
+    out_ref[0] = ok.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_q", "block_n",
+                                             "interpret"))
+def dominance_pallas_3d(queries: jnp.ndarray, boxes: jnp.ndarray,
+                        eps: float = 1e-5, block_q: int = BLOCK_S_Q,
+                        block_n: int = BLOCK_S_N,
+                        interpret: bool = True) -> jnp.ndarray:
+    """queries [Q, D], boxes [S, L, D] -> int8 [S, Q, L] dominance mask.
+
+    The batched device-probe layout: S shards, each padded to L =
+    max_leaves box rows (aR-tree node uppers or leaf points).  Pad rows
+    must hold -inf so they dominate nothing; the grid streams one shard
+    slab per program along the first axis, so the whole cluster's leaf
+    filter for one query path is a single launch.
+    """
+    s, l, d = boxes.shape
+    q = queries.shape[0]
+    q_pad = pl.cdiv(q, block_q) * block_q
+    l_pad = pl.cdiv(max(l, 1), block_n) * block_n
+    qq = jnp.pad(queries, ((0, q_pad - q), (0, 0)),
+                 constant_values=jnp.inf)     # padded queries match nothing
+    bb = jnp.pad(boxes, ((0, 0), (0, l_pad - l), (0, 0)),
+                 constant_values=-jnp.inf)    # padded boxes dominate nothing
+    grid = (s, q_pad // block_q, l_pad // block_n)
+    out = pl.pallas_call(
+        functools.partial(_dominance_kernel_3d, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda k, i, j: (i, 0)),
+            pl.BlockSpec((1, block_n, d), lambda k, i, j: (k, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, block_n),
+                               lambda k, i, j: (k, i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, q_pad, l_pad), jnp.int8),
+        interpret=interpret,
+    )(qq, bb)
+    return out[:, :q, :l]

@@ -11,8 +11,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dominance.kernel import dominance_pallas
-from repro.kernels.dominance.ref import dominance_mask_ref
+from repro.kernels.dominance.kernel import (dominance_pallas,
+                                            dominance_pallas_3d)
+from repro.kernels.dominance.ref import (dominance_mask_3d_ref,
+                                         dominance_mask_ref)
 
 
 def dominance_mask(queries: jnp.ndarray, boxes: jnp.ndarray,
@@ -25,3 +27,30 @@ def dominance_mask(queries: jnp.ndarray, boxes: jnp.ndarray,
         return dominance_pallas(queries, boxes, eps,
                                 interpret=jax.default_backend() != "tpu")
     return dominance_mask_ref(queries, boxes, eps)
+
+
+def batched_dominance_mask(queries: jnp.ndarray, boxes: jnp.ndarray,
+                           counts: jnp.ndarray | None = None,
+                           eps: float = 1e-5,
+                           use_pallas: bool | None = None) -> jnp.ndarray:
+    """Batched probe: queries [Q, D], boxes [S, L, D] -> int8 [S, Q, L].
+
+    `counts` ([S] int32, optional) gives each shard's number of valid box
+    rows; rows at or past the count are forced to 0 in the mask, so the
+    caller may pad the slab with arbitrary values (the kernel itself only
+    guarantees this for -inf padding).
+    """
+    s, l, _ = boxes.shape
+    if s == 0 or l == 0:
+        return jnp.zeros((s, queries.shape[0], l), jnp.int8)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        out = dominance_pallas_3d(queries, boxes, eps,
+                                  interpret=jax.default_backend() != "tpu")
+    else:
+        out = dominance_mask_3d_ref(queries, boxes, eps)
+    if counts is not None:
+        valid = jnp.arange(l)[None, None, :] < counts[:, None, None]
+        out = out * valid.astype(jnp.int8)
+    return out

@@ -12,3 +12,12 @@ def dominance_mask_ref(queries: jnp.ndarray, boxes: jnp.ndarray,
     """queries [Q, D], boxes [N, D] -> int8 [Q, N]."""
     ok = jnp.all(queries[:, None, :] <= boxes[None, :, :] + eps, axis=-1)
     return ok.astype(jnp.int8)
+
+
+@jax.jit
+def dominance_mask_3d_ref(queries: jnp.ndarray, boxes: jnp.ndarray,
+                          eps: float = 1e-5) -> jnp.ndarray:
+    """queries [Q, D], boxes [S, L, D] -> int8 [S, Q, L]."""
+    ok = jnp.all(queries[None, :, None, :] <= boxes[:, None, :, :] + eps,
+                 axis=-1)
+    return ok.astype(jnp.int8)

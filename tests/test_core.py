@@ -11,7 +11,8 @@ from repro.core import gnn as gnn_lib
 from repro.core.artree import build_artree, query_dominating, query_stats
 from repro.core.embedding import embed_query_paths, train_dominance_gnn
 from repro.core.graph import LabeledGraph
-from repro.core.matching import build_shard_index, exact_match
+from repro.core.matching import (backtrack_join, build_shard_index,
+                                 exact_match, vertex_candidates)
 from repro.core.paths import enumerate_paths, paths_of_query
 from tests.conftest import vf2_oracle
 
@@ -113,6 +114,71 @@ def test_enumerate_paths_simple_and_canonical(small_graph):
     # every edge is a length-1 path
     t1 = enumerate_paths(small_graph, 1)
     assert t1.n_paths == small_graph.n_edges
+
+
+# --------------------------------------------------------------------------- #
+# zero-candidate early-exit (dominance proof of unmatchability)
+# --------------------------------------------------------------------------- #
+def test_zero_candidate_path_empties_vertex_sets():
+    """Regression: a path with ZERO aR-tree candidates proves the query
+    unmatchable, but `vertex_candidates` used to skip the intersection
+    for empty arrays — the masks stayed label-filtered and the full
+    backtracking join still ran.  Empty candidates must empty the
+    path's vertex sets (the cluster engine's `alive` early-exit), so
+    the join short-circuits without exploring anything."""
+    # data: labels 0 and 1 both exist, but never adjacent
+    data = LabeledGraph.from_edges(
+        4, np.array([[0, 2], [1, 3]]), np.array([0, 1, 0, 1]))
+    query = LabeledGraph.from_edges(
+        2, np.array([[0, 1]]), np.array([0, 1]))
+    q_tables = paths_of_query(query, 1)
+    assert sum(t.n_paths for t in q_tables) == 1
+    empty = [[np.zeros((0, t.length + 1), np.int32)
+              for _ in range(t.n_paths)] for t in q_tables]
+    cands = vertex_candidates(query, data, q_tables, empty)
+    # label filter alone admits candidates; the zero-candidate path must
+    # still empty every touched vertex set
+    assert all(int(c.sum()) == 0 for c in cands), \
+        "zero-candidate path must empty its vertex sets"
+    assert backtrack_join(query, data, cands) == []
+
+
+def test_zero_candidate_skips_remaining_paths():
+    """Once one vertex set goes empty, later paths are not intersected
+    (their masks keep the label-filter values) — mirrors cluster.query."""
+    data = LabeledGraph.from_edges(
+        4, np.array([[0, 2], [1, 3]]), np.array([0, 1, 0, 1]))
+    # triangle-free query over two edges 0-1, 1-2
+    query = LabeledGraph.from_edges(
+        3, np.array([[0, 1], [1, 2]]), np.array([0, 1, 0]))
+    q_tables = paths_of_query(query, 1)
+    rows = [[np.zeros((0, t.length + 1), np.int32)
+             for _ in range(t.n_paths)] for t in q_tables]
+    cands = vertex_candidates(query, data, q_tables, rows)
+    assert any(int(c.sum()) == 0 for c in cands)
+    assert backtrack_join(query, data, cands) == []
+
+
+def test_partial_plan_does_not_false_dismiss():
+    """A plan that omits path rows must treat them as 'not probed' (no
+    constraint), never as 'probed and provably empty' — a partial plan
+    still returns the exact match set."""
+    rng = np.random.default_rng(3)
+    g = _random_graph(rng, 40, 120, 3)
+    cfg = gnn_lib.GNNConfig(n_labels=3)
+    params = gnn_lib.init_params(cfg, jax.random.PRNGKey(3))
+    index = build_shard_index(g, params, cfg, max_length=2)
+    q = None
+    for seed in range(10):
+        from repro.data.synthetic import random_walk_query
+        cand = random_walk_query(g, 3, seed=seed)
+        if sum(t.n_paths for t in paths_of_query(cand, 2)) >= 2:
+            q = cand
+            break
+    assert q is not None
+    full, _ = exact_match(q, g, index, params, cfg)
+    partial, _ = exact_match(q, g, index, params, cfg, plan=[(0, 0)])
+    assert set(partial) == set(full) == vf2_oracle(g, q)
 
 
 # --------------------------------------------------------------------------- #

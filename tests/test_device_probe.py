@@ -1,0 +1,135 @@
+"""Device probe path: the batched [S, max_leaves, D] probe must be
+bit-identical to the per-(path, shard) host path at every layer —
+aR-tree descent, per-shard candidate scatter, and the full engine."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.artree import (batched_query_dominating, build_artree,
+                               query_dominating)
+from repro.core.matching import batched_path_candidates, path_candidates
+
+# --------------------------------------------------------------------------- #
+# aR-tree layer: batched descent == host short-circuit traversal
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 999), s=st.integers(1, 6), d=st.integers(2, 10))
+def test_batched_descent_matches_host(seed, s, d):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(0, 120, size=s)     # includes empty trees
+    trees = [build_artree(rng.uniform(0, 1, (n, d)).astype(np.float32))
+             for n in sizes]
+    queries = rng.uniform(0, 1, (2, d)).astype(np.float32)
+    hits, stats = batched_query_dominating(trees, queries)
+    agg = {"nodes_visited": 0, "nodes_pruned": 0, "leaves_tested": 0}
+    for t, h in zip(trees, hits):
+        for qi in range(queries.shape[0]):
+            want, st_host = query_dominating(t, queries[qi])
+            np.testing.assert_array_equal(h[qi], want)
+            for k in agg:
+                agg[k] += st_host[k]
+    assert {k: stats[k] for k in agg} == agg, \
+        "batched stats must mirror the host counters exactly"
+
+
+def test_batched_descent_single_point_tree():
+    """n_levels == 0 edge: a 1-point tree has no internal levels."""
+    pts = np.array([[0.5, 0.5]], np.float32)
+    tree = build_artree(pts)
+    queries = np.array([[0.2, 0.2], [0.9, 0.9]], np.float32)
+    hits, _ = batched_query_dominating([tree], queries)
+    np.testing.assert_array_equal(hits[0][0], [0])
+    np.testing.assert_array_equal(hits[0][1], np.zeros(0, np.int64))
+
+
+def test_batched_descent_all_empty():
+    hits, stats = batched_query_dominating(
+        [build_artree(np.zeros((0, 4), np.float32))],
+        np.zeros((2, 4), np.float32))
+    assert hits[0][0].size == 0 and hits[0][1].size == 0
+    assert stats["device_launches"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# matching layer: batched per-shard candidate scatter
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999), s=st.integers(1, 5))
+def test_batched_path_candidates_matches_host(seed, s):
+    from repro.core.embedding import EmbeddedPaths
+    from repro.core.matching import ShardIndex
+    rng = np.random.default_rng(seed)
+    length, d_v = 2, 4
+    indexes = []
+    for _ in range(s):
+        n = int(rng.integers(0, 60))
+        emb = rng.uniform(0, 1, (n, (length + 1) * d_v)).astype(np.float32)
+        verts = rng.integers(0, 50, (n, length + 1)).astype(np.int32)
+        indexes.append(ShardIndex(
+            embedded={length: EmbeddedPaths(vertices=verts, embeddings=emb,
+                                            length=length)},
+            trees={length: build_artree(emb)}))
+    q_emb = rng.uniform(0, 1, (length + 1) * d_v).astype(np.float32)
+    batched = batched_path_candidates(indexes, q_emb, length)
+    for index, (verts, orient) in zip(indexes, batched):
+        want_v, want_o = path_candidates(index, q_emb, length)
+        np.testing.assert_array_equal(verts, want_v)
+        np.testing.assert_array_equal(orient, want_o)
+
+
+# --------------------------------------------------------------------------- #
+# engine layer: device_probe=True is bit-identical to the host path
+# --------------------------------------------------------------------------- #
+
+_ENGINE = None
+
+
+def _engine():
+    """Module-lazy mini cluster (shared across the property examples)."""
+    global _ENGINE
+    if _ENGINE is None:
+        from repro.data.synthetic import nws_graph
+        from repro.dist.cluster import DistributedGNNPE
+        g = nws_graph(250, 6, 0.1, 6, seed=1)
+        eng = DistributedGNNPE.build(g, 3, shards_per_machine=3,
+                                     gnn_train_steps=10, seed=1)
+        eng.use_cache = False          # compare raw probe paths
+        _ENGINE = (g, eng)
+    return _ENGINE
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       plan=st.sampled_from(["pescore", "degree", "natural"]))
+def test_device_probe_bit_identical(seed, plan):
+    from repro.data.synthetic import random_walk_query
+    g, eng = _engine()
+    rng = np.random.default_rng(seed)
+    q = random_walk_query(g, int(rng.integers(2, 6)), seed=seed)
+    m_host, t_host = eng.query(q, plan_mode=plan, device_probe=False)
+    m_dev, t_dev = eng.query(q, plan_mode=plan, device_probe=True)
+    assert m_host == m_dev
+    assert t_host.comm_bytes == t_dev.comm_bytes
+    assert t_host.cross_shard_rows == t_dev.cross_shard_rows
+    assert t_host.shards_skipped == t_dev.shards_skipped
+    assert t_host.paths_executed == t_dev.paths_executed
+    assert t_host.paths_skipped == t_dev.paths_skipped
+    # one batched launch per executed path (vs one host probe per
+    # (path, shard)): the ROADMAP batching item's defining property
+    assert t_dev.probe_launches <= t_dev.paths_executed
+    assert t_host.probe_launches >= t_dev.probe_launches
+
+
+def test_device_probe_matches_oracle():
+    from repro.data.synthetic import make_workload
+    from tests.conftest import vf2_oracle
+    g, eng = _engine()
+    for q in make_workload(g, 3, seed=7):
+        matches, tel = eng.query(q, device_probe=True)
+        assert tel.device_probe
+        assert set(matches) == vf2_oracle(g, q)

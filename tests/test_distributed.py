@@ -164,6 +164,94 @@ def test_straggler_mitigation():
     assert sm.recovered_ms > 150
 
 
+def test_rebalance_clock_uses_epoch_virtual_seconds(nws_small, monkeypatch):
+    """Regression: run_workload used to feed the per-query counter to
+    `plan_migrations` as seconds_since_migration, so the anti-thrash
+    boost suppressed legitimate rebalances for ~60 *queries*.  The clock
+    is virtual epoch seconds: one epoch = EPOCH_VIRTUAL_S, and a
+    sigma-violating epoch right after the window must rebalance at the
+    un-boosted threshold."""
+    from repro.data.synthetic import make_workload
+    from repro.dist import cluster as cluster_mod
+    eng = _mini_cluster(nws_small)
+    qs = make_workload(nws_small, 4, seed=1)
+    seen = []
+
+    def spy(telemetry, **kw):
+        # record the clock value and never migrate, so the window
+        # elapses undisturbed
+        seen.append(kw["seconds_since_migration"])
+        return lb.MigrationPlan(False, [], 0.0, 0.0)
+
+    monkeypatch.setattr(cluster_mod.lb, "plan_migrations", spy)
+    # simulate "a migration just happened" on both clock generations
+    eng._last_migration_epoch = getattr(eng, "_epoch", 0)
+    eng._qclock = 0.0
+    eng._last_migration_t = 0.0            # pre-fix attribute (ignored now)
+    n_epochs = int(lb.ALPHA_WINDOW_S / cluster_mod.EPOCH_VIRTUAL_S)
+    for _ in range(n_epochs):
+        eng.run_workload(qs, rebalance=True)
+    # after the full window the boost must have decayed to zero — the
+    # next trigger comparison runs at the plain SIGMA_THRESHOLD
+    assert seen[-1] >= lb.ALPHA_WINDOW_S - 1e-9
+    assert lb.alpha_decay(seen[-1]) == 0.0
+
+
+def test_dead_machine_never_homes_cache(nws_small):
+    """Regression: a query that probes no shard used to register its
+    cached result on slave 0 even when machine 0 was dead."""
+    from repro.train.elastic import WorkerFailover
+    eng = _mini_cluster(nws_small)
+    WorkerFailover(eng).fail_machine(0)
+    # star query whose center needs a degree no data vertex has: the
+    # label/degree filter kills it up front, so no shard is ever probed
+    # and rows_by_machine stays empty
+    k = int(nws_small.degrees.max()) + 1
+    edges = np.array([[0, i] for i in range(1, k + 1)])
+    q = LabeledGraph.from_edges(k + 1, edges,
+                                np.zeros(k + 1, dtype=np.int64))
+    matches, tel = eng.query(q)
+    assert matches == [] and tel.cross_shard_rows == 0
+    key = (q.n_vertices, q.labels.tobytes(), q.edge_list.tobytes())
+    home = eng.cache.location[key]
+    assert home != 0, "cache must never home onto a dead machine"
+    assert home not in eng.dead_machines
+    assert key in eng._slave_store[home]
+    assert key not in eng._slave_store[0]
+
+
+def test_all_machines_dead_skips_cache_admission(nws_small):
+    """With no live machine there is nowhere to home a result: admission
+    must be skipped entirely, not routed to a dead default."""
+    eng = _mini_cluster(nws_small)
+    eng.dead_machines.update(range(len(eng.specs)))
+    k = int(nws_small.degrees.max()) + 1
+    edges = np.array([[0, i] for i in range(1, k + 1)])
+    q = LabeledGraph.from_edges(k + 1, edges,
+                                np.zeros(k + 1, dtype=np.int64))
+    matches, _ = eng.query(q)
+    assert matches == []
+    key = (q.n_vertices, q.labels.tobytes(), q.edge_list.tobytes())
+    assert key not in eng.cache.location
+    assert all(key not in store for store in eng._slave_store.values())
+
+
+def test_pe_fit_labels_deterministic(nws_small):
+    """Regression: PE-score labels used wall-clock probe timings, so two
+    identical builds fitted different models.  Labels now come from
+    deterministic probe statistics (rows + leaves tested)."""
+    e1 = _mini_cluster(nws_small)
+    e2 = _mini_cluster(nws_small)
+    assert e1.pe_model.gbdt is not None
+    np.testing.assert_array_equal(e1.pe_model.gbdt.value,
+                                  e2.pe_model.gbdt.value)
+    np.testing.assert_array_equal(e1.pe_model.gbdt.threshold,
+                                  e2.pe_model.gbdt.threshold)
+    np.testing.assert_array_equal(e1.pe_model.gbdt.feature,
+                                  e2.pe_model.gbdt.feature)
+    assert e1.pe_fit_report["n_probes"] == e2.pe_fit_report["n_probes"]
+
+
 def test_load_balancing_reduces_sigma(nws_small):
     """Skewed workload -> trigger -> migrations -> lower sigma."""
     from repro.data.synthetic import make_workload

@@ -7,8 +7,11 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.kernels.dominance.kernel import dominance_pallas
-from repro.kernels.dominance.ref import dominance_mask_ref
+from repro.kernels.dominance.kernel import (dominance_pallas,
+                                            dominance_pallas_3d)
+from repro.kernels.dominance.ops import batched_dominance_mask
+from repro.kernels.dominance.ref import (dominance_mask_3d_ref,
+                                         dominance_mask_ref)
 from repro.kernels.flash.kernel import flash_attention_pallas
 from repro.kernels.flash.ref import flash_attention_ref
 from repro.kernels.segment.kernel import csr_gather_sum_pallas
@@ -39,6 +42,63 @@ def test_dominance_property(q, n, d, seed):
     bb = jnp.asarray(rng.uniform(0, 1, (n, d)), jnp.float32)
     got = np.asarray(dominance_pallas(qq, bb, interpret=True))
     want = np.asarray(dominance_mask_ref(qq, bb))
+    assert (got == want).all()
+
+
+# --------------------------------------------------------------------------- #
+# batched (3-D) dominance: the device probe slab [S, max_leaves, D]
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("s,q,l,d", [
+    (1, 1, 1, 2),       # one shard, one leaf
+    (3, 2, 300, 12),    # leaves not a multiple of the lane block
+    (5, 2, 256, 8),     # exactly one lane block
+    (2, 9, 513, 6),     # queries past the sublane block, odd leaves
+    (4, 2, 1, 4),       # one leaf per shard
+])
+def test_dominance_3d_sweep(s, q, l, d):
+    rng = np.random.default_rng(s * 1000 + l)
+    qq = jnp.asarray(rng.uniform(0, 2, (q, d)), jnp.float32)
+    bb = jnp.asarray(rng.uniform(0, 2, (s, l, d)), jnp.float32)
+    got = dominance_pallas_3d(qq, bb, interpret=True)
+    want = dominance_mask_3d_ref(qq, bb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dominance_3d_counts_mask_padding():
+    """Per-shard valid counts: rows at/past the count never survive, even
+    when the padded slab holds dominating garbage there."""
+    rng = np.random.default_rng(0)
+    qq = jnp.asarray(rng.uniform(0, 1, (2, 6)), jnp.float32)
+    bb = jnp.full((3, 40, 6), 10.0, jnp.float32)    # dominates everything
+    counts = jnp.asarray([0, 1, 40], jnp.int32)
+    got = np.asarray(batched_dominance_mask(qq, bb, counts,
+                                            use_pallas=False))
+    assert got[0].sum() == 0                        # zero-leaf shard
+    assert (got[1, :, 1:] == 0).all() and (got[1, :, 0] == 1).all()
+    assert (got[2] == 1).all()
+    pall = np.asarray(batched_dominance_mask(qq, bb, counts,
+                                             use_pallas=True))
+    np.testing.assert_array_equal(got, pall)
+
+
+def test_dominance_3d_degenerate_shapes():
+    """0 shards and 0 leaves short-circuit to empty masks."""
+    qq = jnp.zeros((2, 4), jnp.float32)
+    assert batched_dominance_mask(qq, jnp.zeros((0, 8, 4))).shape \
+        == (0, 2, 8)
+    assert batched_dominance_mask(qq, jnp.zeros((3, 0, 4))).shape \
+        == (3, 2, 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(1, 5), q=st.integers(1, 9), l=st.integers(1, 300),
+       d=st.integers(1, 16), seed=st.integers(0, 99))
+def test_dominance_3d_property(s, q, l, d, seed):
+    rng = np.random.default_rng(seed)
+    qq = jnp.asarray(rng.uniform(0, 1, (q, d)), jnp.float32)
+    bb = jnp.asarray(rng.uniform(0, 1, (s, l, d)), jnp.float32)
+    got = np.asarray(dominance_pallas_3d(qq, bb, interpret=True))
+    want = np.asarray(dominance_mask_3d_ref(qq, bb))
     assert (got == want).all()
 
 
