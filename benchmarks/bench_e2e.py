@@ -3,10 +3,13 @@
 Compares the full system (all three innovations) against: (a) the
 networkx VF2 baseline (classical backtracking), (b) the engine with
 pruning disabled at the plan level (natural order, no cache), and (c)
-the same engine with the batched device probe (`device_probe=True`).
-The paper's headline is 1-2 orders of magnitude vs baselines; here the
-same direction is measured wall-clock on CPU at laptop scale.  The
-host-vs-device end-to-end numbers are merged into BENCH_probe.json.
+the same engine under all three probe paths (host / per-path device /
+resident plane).  The paper's headline is 1-2 orders of magnitude vs
+baselines; here the same direction is measured wall-clock on CPU at
+laptop scale.  The probe numbers are merged into BENCH_probe.json, and
+a STABLE-SCHEMA BENCH_e2e.json (schema_version, per-mode wall ms,
+launches/path, host<->device bytes) tracks the perf trajectory across
+PRs — `benchmarks/run.py` emits it on every e2e run.
 """
 
 from __future__ import annotations
@@ -14,9 +17,11 @@ from __future__ import annotations
 import json
 import time
 
-from benchmarks.common import bench_engine, emit
+from benchmarks.common import bench_engine, emit, merge_json
 from repro.data.synthetic import make_workload
 from tests.conftest import vf2_oracle
+
+E2E_SCHEMA_VERSION = 1
 
 
 def run() -> list[tuple]:
@@ -42,29 +47,56 @@ def run() -> list[tuple]:
         eng.query(q, plan_mode="natural")
     t_plain = time.perf_counter() - t0
 
-    # host vs batched device probe, end to end (cache off so every query
-    # exercises the probe path); counts must agree bit for bit
-    t0 = time.perf_counter()
-    n_host = sum(len(eng.query(q, device_probe=False)[0]) for q in qs)
-    t_host = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    n_dev = sum(len(eng.query(q, device_probe=True)[0]) for q in qs)
-    t_dev = time.perf_counter() - t0
-    assert n_host == n_dev == n_vf2, "device probe exactness violated"
+    # probe paths end to end (cache off so every query exercises the
+    # probe; device/plane warmed so jit compiles don't skew wall time);
+    # match counts must agree bit for bit across all three
+    for q in qs:
+        eng.query(q, probe_mode="device")
+        eng.query(q, probe_mode="plane")
+    modes: dict[str, dict] = {}
+    n_by_mode: dict[str, int] = {}
+    for mode in ("host", "device", "plane"):
+        t0 = time.perf_counter()
+        n_m = launches = paths = h2d = d2h = 0
+        for q in qs:
+            m, tel = eng.query(q, probe_mode=mode)
+            n_m += len(m)
+            launches += tel.probe_launches
+            paths += tel.paths_executed
+            h2d += tel.probe_h2d_bytes
+            d2h += tel.probe_d2h_bytes
+        n_by_mode[mode] = n_m
+        modes[mode] = {
+            "wall_ms": round((time.perf_counter() - t0) * 1e3, 2),
+            "launches_per_path": round(launches / max(paths, 1), 4),
+            "h2d_bytes": h2d,
+            "d2h_bytes": d2h,
+        }
+    assert len(set(n_by_mode.values())) == 1 \
+        and n_by_mode["host"] == n_vf2, "probe exactness violated"
     eng.use_cache = True
-    try:
-        with open("BENCH_probe.json") as f:
-            merged = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        merged = {}
-    merged["e2e"] = {"host_s": round(t_host, 4),
-                     "device_s": round(t_dev, 4),
-                     "matches": n_dev, "n_queries": len(qs)}
-    with open("BENCH_probe.json", "w") as f:
-        json.dump(merged, f, indent=2)
-    rows.append(("e2e/probe_host_vs_device", t_dev * 1e6,
-                 f"host_s={t_host:.2f};device_s={t_dev:.2f};"
-                 f"matches={n_dev}"))
+
+    merge_json("BENCH_probe.json", "e2e",
+               {"modes": modes, "matches": n_vf2, "n_queries": len(qs)})
+    # stable cross-PR schema: one file, fixed keys, per-mode metrics
+    with open("BENCH_e2e.json", "w") as f:
+        json.dump({
+            "schema_version": E2E_SCHEMA_VERSION,
+            "workload": {"n_queries": len(qs), "n_vertices": g.n_vertices,
+                         "n_shards": len(eng.shards), "matches": n_vf2},
+            "modes": modes,
+            "system": {"wall_ms": round(t_sys * 1e3, 2),
+                       "vf2_ms": round(t_vf2 * 1e3, 2),
+                       "no_innovation_ms": round(t_plain * 1e3, 2)},
+        }, f, indent=2)
+    rows.append(("e2e/probe_host_vs_device_vs_plane",
+                 modes["plane"]["wall_ms"] * 1e3,
+                 f"host_ms={modes['host']['wall_ms']};"
+                 f"device_ms={modes['device']['wall_ms']};"
+                 f"plane_ms={modes['plane']['wall_ms']};"
+                 f"plane_launches_per_path="
+                 f"{modes['plane']['launches_per_path']};"
+                 f"matches={n_vf2}"))
 
     rows.append(("e2e/latency_10q", t_sys * 1e6,
                  f"system_s={t_sys:.2f};vf2_s={t_vf2:.2f};"

@@ -3,14 +3,14 @@
 Claims checked: index-level pruning removes the overwhelming majority of
 candidate paths (GNN-PE reports ~99.5% on US-Patents); training the
 certified-monotone GNN improves pruning over untrained params.  Also
-compares the per-(path, shard) host probe against the batched device
-probe (`device_probe=True`, one launch per query path over the padded
-[S, max_leaves, D] slab) and emits the comparison to BENCH_probe.json.
+runs the three-way probe comparison — per-(path, shard) host traversal
+vs per-path device slab (`probe_mode="device"`) vs device-resident
+probe planes (`probe_mode="plane"`, one fused launch per query plan,
+candidate-id-only readback) — and emits it to BENCH_probe.json.
 """
 
 from __future__ import annotations
 
-import json
 import time
 
 import jax
@@ -38,12 +38,20 @@ def _pruning(g, params, cfg) -> dict[str, float]:
 
 
 def probe_comparison(path: str = "BENCH_probe.json") -> dict:
-    """Host vs batched-device probe on the same engine and workload.
+    """Host vs per-path-device vs resident-plane probe, same workload.
 
-    The defining property of the device path: exactly one probe dispatch
-    (device launch) per executed query path, against one per
-    (path, shard) on the host — with bit-identical matches and comm
-    accounting.  The result is merged into BENCH_probe.json.
+    Three-way comparison of the probe paths (all bit-identical in
+    matches and comm accounting):
+
+      * host:   one traversal per (path, shard) — no device traffic;
+      * device: one launch per path, but the slab is re-packed on the
+        host per path and the dense ok mask ships back (PR 2);
+      * plane:  ONE fused launch per query plan over the device-resident
+        planes — warm queries ship query rows up and candidate ids down,
+        never the slab.
+
+    The result (launch counts + host<->device bytes per query) is merged
+    into BENCH_probe.json.
     """
     from benchmarks.common import bench_engine
     from repro.data.synthetic import make_workload
@@ -51,18 +59,23 @@ def probe_comparison(path: str = "BENCH_probe.json") -> dict:
     g, eng = bench_engine(n_machines=3, spm=3, n_vertices=400, seed=0)
     qs = make_workload(g, 6, seed=0)
     eng.use_cache = False
+    for q in qs:                          # jit + plane warmup (all modes)
+        eng.query(q, probe_mode="device")
+        eng.query(q, probe_mode="plane")
     report: dict = {"n_queries": len(qs), "n_shards": len(eng.shards)}
     matches: dict[str, int] = {}
-    for mode, flag in (("host", False), ("device", True)):
+    for mode in ("host", "device", "plane"):
         t0 = time.perf_counter()
-        launches = paths = comm = rows = 0
+        launches = paths = comm = rows = h2d = d2h = 0
         n_matches = 0
         for q in qs:
-            m, tel = eng.query(q, device_probe=flag)
+            m, tel = eng.query(q, probe_mode=mode)
             launches += tel.probe_launches
             paths += tel.paths_executed
             comm += tel.comm_bytes
             rows += tel.cross_shard_rows
+            h2d += tel.probe_h2d_bytes
+            d2h += tel.probe_d2h_bytes
             n_matches += len(m)
         matches[mode] = n_matches
         report[mode] = {
@@ -70,22 +83,28 @@ def probe_comparison(path: str = "BENCH_probe.json") -> dict:
             "probe_launches": launches,
             "paths_executed": paths,
             "launches_per_path": round(launches / max(paths, 1), 3),
+            "launches_per_query": round(launches / len(qs), 3),
             "comm_bytes": comm,
             "cross_shard_rows": rows,
+            "h2d_bytes_per_query": round(h2d / len(qs), 1),
+            "d2h_bytes_per_query": round(d2h / len(qs), 1),
         }
-    assert matches["host"] == matches["device"], "device probe not exact"
-    assert report["host"]["comm_bytes"] == report["device"]["comm_bytes"]
+    assert matches["host"] == matches["device"] == matches["plane"], \
+        "device/plane probe not exact"
+    assert report["host"]["comm_bytes"] == report["device"]["comm_bytes"] \
+        == report["plane"]["comm_bytes"]
     assert report["device"]["probe_launches"] \
         <= report["device"]["paths_executed"], \
         "device probe must launch at most once per query path"
-    try:
-        with open(path) as f:
-            merged = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        merged = {}
-    merged["probe"] = report
-    with open(path, "w") as f:
-        json.dump(merged, f, indent=2)
+    assert report["plane"]["probe_launches"] <= len(qs), \
+        "plane probe must launch at most once per query plan"
+    assert report["plane"]["h2d_bytes_per_query"] \
+        < report["device"]["h2d_bytes_per_query"], \
+        "resident planes must ship fewer slab bytes than per-path packing"
+    report["plane"]["resident_bytes"] = eng.planes.resident_bytes()
+    report["plane"]["cache_stats"] = dict(eng.planes.stats)
+    from benchmarks.common import merge_json
+    merge_json(path, "probe", report)
     return report
 
 
@@ -104,13 +123,16 @@ def run() -> list[tuple]:
                          f"index_prune={after[l][1]:.4f};"
                          f"untrained_sel={before[l][0]:.4f}"))
     probe = probe_comparison()
-    rows.append(("pruning/probe_host_vs_device",
-                 probe["device"]["wall_s"] * 1e6,
+    rows.append(("pruning/probe_host_vs_device_vs_plane",
+                 probe["plane"]["wall_s"] * 1e6,
                  f"host_launches={probe['host']['probe_launches']};"
                  f"device_launches={probe['device']['probe_launches']};"
-                 f"device_launches_per_path="
-                 f"{probe['device']['launches_per_path']};"
-                 f"comm_bytes={probe['device']['comm_bytes']}"))
+                 f"plane_launches={probe['plane']['probe_launches']};"
+                 f"plane_launches_per_query="
+                 f"{probe['plane']['launches_per_query']};"
+                 f"device_h2d_per_q={probe['device']['h2d_bytes_per_query']};"
+                 f"plane_h2d_per_q={probe['plane']['h2d_bytes_per_query']};"
+                 f"comm_bytes={probe['plane']['comm_bytes']}"))
     return rows
 
 

@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable
 
@@ -9,6 +10,19 @@ import numpy as np
 
 from repro.data.synthetic import make_workload, nws_graph
 from repro.dist.cluster import DistributedGNNPE
+
+
+def merge_json(path: str, key: str, value: dict) -> None:
+    """Merge one top-level key into a JSON report file (creates it if
+    absent/corrupt) — shared by the BENCH_*.json emitters."""
+    try:
+        with open(path) as f:
+            merged = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        merged = {}
+    merged[key] = value
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2)
 
 
 def timeit(fn: Callable, n: int = 5, warmup: int = 1) -> float:

@@ -2,6 +2,12 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--only <name>]``
 Prints ``name,us_per_call,derived`` CSV rows (stdout) per benchmark.
+
+Side-effect files with stable schemas, tracked across PRs:
+  * BENCH_probe.json — three-way host/device/plane probe comparison
+    (bench_pruning) + e2e probe modes (bench_e2e);
+  * BENCH_e2e.json   — schema_version, per-mode wall ms, launches/path,
+    host<->device bytes (bench_e2e).
 """
 
 from __future__ import annotations

@@ -202,7 +202,7 @@ def batched_query_dominating(trees: list[ARTree], queries: np.ndarray,
     queries = np.asarray(queries, dtype=np.float32)
     n_q = queries.shape[0]
     stats = {"nodes_visited": 0, "nodes_pruned": 0, "leaves_tested": 0,
-             "device_launches": 0}
+             "device_launches": 0, "h2d_bytes": 0, "d2h_bytes": 0}
     hits: list[list[np.ndarray]] = [
         [np.zeros(0, np.int64) for _ in range(n_q)] for _ in trees]
     rows = [_tree_rows(t) for t in trees]
@@ -213,7 +213,8 @@ def batched_query_dominating(trees: list[ARTree], queries: np.ndarray,
 
     import jax.numpy as jnp
 
-    from repro.kernels.dominance.ops import batched_dominance_mask
+    from repro.kernels.dominance.ops import (ROW_BUCKET, SHARD_BUCKET,
+                                             batched_dominance_mask, bucket)
 
     d = queries.shape[1]
     # bucket both slab dims to kernel-block multiples: the probed shard
@@ -223,16 +224,18 @@ def batched_query_dominating(trees: list[ARTree], queries: np.ndarray,
     # padded compute at one extra block per dim (pow2 rounding was
     # measurably slower on CPU).  Pad shards have count 0 and -inf
     # rows, so they can never produce a candidate.
-    s_pad = -(-len(trees) // 8) * 8
-    r_pad = -(-r_max // 256) * 256
+    s_pad = bucket(len(trees), SHARD_BUCKET)
+    r_pad = bucket(r_max, ROW_BUCKET)
     slab = np.full((s_pad, r_pad, d), -np.inf, np.float32)
     for s, r in enumerate(rows):
         slab[s, :r.shape[0]] = r
     counts = np.pad(counts, (0, s_pad - counts.size))
+    stats["h2d_bytes"] = slab.nbytes + queries.nbytes + counts.nbytes
     ok_all = np.asarray(batched_dominance_mask(
         jnp.asarray(queries), jnp.asarray(slab), jnp.asarray(counts),
         eps=eps, use_pallas=use_pallas)).astype(bool)[:len(trees)]
     stats["device_launches"] = 1
+    stats["d2h_bytes"] = s_pad * n_q * r_pad          # dense int8 readback
 
     for s, tree in enumerate(trees):
         n = tree.n_points
@@ -241,25 +244,28 @@ def batched_query_dominating(trees: list[ARTree], queries: np.ndarray,
         b = tree.branching
         level_sizes = [u.shape[0] for u in tree.uppers]
         offsets = np.cumsum([0] + level_sizes)
-        for qi in range(n_q):
-            ok = ok_all[s, qi]
+        ok = ok_all[s]                                # [n_q, rows]
+        if level_sizes:
             # root level: every node is a candidate, exactly as the host
-            # traversal starts from the full root array
-            alive = np.ones(level_sizes[0], bool) if level_sizes else None
+            # traversal starts from the full root array; survivorship is
+            # propagated for ALL queries at once (vectorized fallback —
+            # the device path fuses this into the launch instead, see
+            # repro/kernels/dominance/ops.fused_plan_descent)
+            alive = np.ones((n_q, level_sizes[0]), bool)
             for lvl, m in enumerate(level_sizes):
                 cand = alive
-                ok_lvl = ok[offsets[lvl]:offsets[lvl] + m]
-                alive = cand & ok_lvl
+                alive = cand & ok[:, offsets[lvl]:offsets[lvl] + m]
                 stats["nodes_visited"] += int(cand.sum())
                 stats["nodes_pruned"] += int(cand.sum() - alive.sum())
                 nxt = level_sizes[lvl + 1] if lvl + 1 < len(level_sizes) \
                     else n
-                alive = np.repeat(alive, b)[:nxt]
-            if alive is None:       # single point, no internal levels
-                alive = np.ones(n, bool)
-            stats["leaves_tested"] += int(alive.sum())
-            final = alive & ok[offsets[-1]:offsets[-1] + n]
-            hits[s][qi] = tree.perm[np.flatnonzero(final)]
+                alive = np.repeat(alive, b, axis=1)[:, :nxt]
+        else:                       # single point, no internal levels
+            alive = np.ones((n_q, n), bool)
+        stats["leaves_tested"] += int(alive.sum())
+        final = alive & ok[:, offsets[-1]:offsets[-1] + n]
+        for qi in range(n_q):
+            hits[s][qi] = tree.perm[np.flatnonzero(final[qi])]
     return hits, stats
 
 

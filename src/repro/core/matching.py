@@ -129,7 +129,8 @@ def path_candidates(index: ShardIndex, q_emb: np.ndarray, length: int,
 
 def batched_path_candidates(indexes: list[ShardIndex], q_emb: np.ndarray,
                             length: int, stats: MatchStats | None = None,
-                            use_pallas: bool | None = None
+                            use_pallas: bool | None = None,
+                            byte_stats: dict | None = None
                             ) -> list[tuple[np.ndarray, np.ndarray]]:
     """Probe one query path against MANY shard indexes in one launch.
 
@@ -140,6 +141,11 @@ def batched_path_candidates(indexes: list[ShardIndex], q_emb: np.ndarray,
     shard.  Returns one ``(cand_vertices [C, l+1], orient [C])`` pair per
     input index — identical, element for element, to calling
     `path_candidates(indexes[s], q_emb, length)` per shard.
+
+    `byte_stats` (optional dict) accumulates the launch's host<->device
+    traffic under ``h2d_bytes``/``d2h_bytes`` — this path re-packs the
+    slab per call; the resident-plane path (repro/core/probeplane.py)
+    exists to amortize exactly that.
     """
     from repro.core.artree import batched_query_dominating
 
@@ -159,6 +165,9 @@ def batched_path_candidates(indexes: list[ShardIndex], q_emb: np.ndarray,
     if stats is not None:
         stats.leaves_tested += bstats["leaves_tested"]
         stats.nodes_pruned += bstats["nodes_pruned"]
+    if byte_stats is not None:
+        for k in ("h2d_bytes", "d2h_bytes"):
+            byte_stats[k] = byte_stats.get(k, 0) + bstats[k]
     for s, (idx_f, idx_r) in zip(slots, hits):
         out[s] = _scatter_hits(indexes[s].embedded[length], idx_f, idx_r)
     return out

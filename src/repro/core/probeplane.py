@@ -1,0 +1,359 @@
+"""Device-resident probe planes: cached shard slabs + whole-plan descent.
+
+PR 2's batched device probe still re-packed every shard's aR-tree rows
+into the ``[S, R, D]`` slab on the host for EVERY path of EVERY query,
+shipped the dense ``ok[s, q, r]`` mask back, and walked survivorship in
+per-query numpy loops.  A *probe plane* removes all three costs:
+
+  * **resident slabs** — each shard tree's rows (`artree._tree_rows`
+    layout: every internal level's upper bounds root-first, then the
+    leaf points) are packed ONCE at index-build time into a padded
+    device block (`TreePlane`), together with the packed-parent pointers
+    the descent needs; the rows never cross the host boundary again;
+  * **whole-plan assembly** — the planes a query plan probes are stacked
+    (device-side, cached across queries) into one ``[S, R_pad, D_pad]``
+    slab covering ALL path lengths of the plan: query rows are padded
+    with ``-inf`` beyond their own width, which passes every box dim, so
+    paths of different lengths share one launch;
+  * **candidate-id readback** — one fused launch
+    (`repro.kernels.dominance.ops.fused_plan_descent`) evaluates the
+    dominance masks AND runs the level-order survivor propagation on
+    device; only per-(shard, path) candidate row ids and counters cross
+    back (the readback contract), never a dense mask.
+
+Staleness: a plane records the *identity* of the ARTree it was packed
+from, and `ClusterPlanes` re-validates on every access — a shard index
+replaced by hot migration, failover, or a rebuild can never be served
+from a stale plane (property-tested in tests/test_probeplane.py).
+
+All padded shapes are rounded to the named buckets in
+`repro.kernels.dominance.ops` so the jitted descent compiles at most
+once per (shard-bucket, row-bucket) pair.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core.artree import ARTree, _tree_rows
+
+__all__ = ["TreePlane", "AssembledPlanes", "PlanProbeResult",
+           "ClusterPlanes", "build_tree_plane", "plan_probe"]
+
+_PLANE_TOKENS = itertools.count(1)
+_MAX_ASSEMBLED = 4          # assembled-slab cache entries kept per cluster
+
+
+@dataclasses.dataclass(frozen=True)
+class TreePlane:
+    """One shard tree packed for device residency.
+
+    ``rows`` is the device array (row-bucketed, -inf pad); everything
+    else is host metadata the assemble step stacks.  ``tree`` is kept
+    solely as the staleness token — `ClusterPlanes` compares it by
+    identity against the live index before every use.
+    """
+
+    tree: ARTree
+    token: int                   # unique per build; keys assembled slabs
+    rows: object                 # jnp [R_b, D] device rows
+    n_rows: int                  # valid rows (internal levels + leaves)
+    n_levels: int
+    leaf_offset: int             # first leaf row
+    parent: np.ndarray           # int32 [R_b]; self at roots and pads
+    is_root: np.ndarray          # bool [R_b]
+    internal: np.ndarray         # bool [R_b] valid internal-node rows
+    leaf: np.ndarray             # bool [R_b] valid leaf rows
+
+    @property
+    def device_nbytes(self) -> int:
+        return int(self.rows.size) * 4
+
+
+def build_tree_plane(tree: ARTree) -> TreePlane:
+    """Pack one non-empty aR-tree into its device-resident plane."""
+    import jax.numpy as jnp
+
+    from repro.kernels.dominance.ops import ROW_BUCKET, bucket
+
+    rows = _tree_rows(tree)
+    n_rows, d = rows.shape
+    r_b = bucket(n_rows, ROW_BUCKET)
+    padded = np.full((r_b, d), -np.inf, np.float32)
+    padded[:n_rows] = rows
+
+    level_sizes = [u.shape[0] for u in tree.uppers]
+    offsets = np.cumsum([0] + level_sizes)
+    b = tree.branching
+    parent = np.arange(r_b, dtype=np.int32)       # self: roots + pad rows
+    is_root = np.zeros(r_b, bool)
+    if level_sizes:
+        is_root[:level_sizes[0]] = True
+        for k in range(1, len(level_sizes)):
+            j = np.arange(level_sizes[k], dtype=np.int32)
+            parent[offsets[k] + j] = offsets[k - 1] + j // b
+        j = np.arange(tree.n_points, dtype=np.int32)
+        parent[offsets[-1] + j] = offsets[-2] + j // b
+    else:                       # single point: the leaf is its own root
+        is_root[:tree.n_points] = True
+    internal = np.zeros(r_b, bool)
+    internal[:offsets[-1]] = True
+    leaf = np.zeros(r_b, bool)
+    leaf[offsets[-1]:n_rows] = True
+    return TreePlane(tree=tree, token=next(_PLANE_TOKENS),
+                     rows=jnp.asarray(padded), n_rows=n_rows,
+                     n_levels=tree.n_levels, leaf_offset=int(offsets[-1]),
+                     parent=parent, is_root=is_root, internal=internal,
+                     leaf=leaf)
+
+
+@dataclasses.dataclass(frozen=True)
+class AssembledPlanes:
+    """A set of planes stacked into one launchable slab (device arrays).
+
+    The shard axis is bucketed; pad planes have count 0, -inf rows and
+    all-False role masks, so they can never produce a candidate.
+    """
+
+    keys: tuple                  # ((sid, length), ...) slab order
+    slot: dict                   # (sid, length) -> shard-axis index
+    lengths: np.ndarray          # int32 [S_b]; -1 on pad planes
+    slab: object                 # jnp [S_b, R_b, D_pad]
+    counts: object               # jnp int32 [S_b]
+    parent: object               # jnp int32 [S_b, R_b]
+    is_root: object              # jnp bool [S_b, R_b]
+    internal: object             # jnp bool [S_b, R_b]
+    leaf: object                 # jnp bool [S_b, R_b]
+    leaf_offsets: np.ndarray     # int64 [S_b]
+    perms: list                  # per real plane: tree.perm (host)
+    d_pad: int
+    n_iter: int                  # bucketed max tree depth
+    assembled_bytes: int         # host->device bytes this assembly moved
+
+
+def _assemble(planes: list[TreePlane], keys: list[tuple]) -> AssembledPlanes:
+    import jax.numpy as jnp
+
+    from repro.kernels.dominance.ops import (DEPTH_BUCKET, SHARD_BUCKET,
+                                             bucket)
+
+    s_b = bucket(len(planes), SHARD_BUCKET)
+    r_b = max(int(p.rows.shape[0]) for p in planes)
+    d_pad = max(int(p.rows.shape[1]) for p in planes)
+    n_iter = bucket(max(p.n_levels for p in planes), DEPTH_BUCKET)
+
+    moved = 0
+    slabs = []
+    for p in planes:
+        rows = p.rows               # already resident: no host bytes move
+        pr, pd = int(rows.shape[0]), int(rows.shape[1])
+        if pr < r_b or pd < d_pad:  # device-side pad up to the common slab
+            rows = jnp.pad(rows, ((0, r_b - pr), (0, d_pad - pd)),
+                           constant_values=-jnp.inf)
+        slabs.append(rows)
+    pad_planes = s_b - len(planes)
+    if pad_planes:
+        slabs.append(jnp.full((pad_planes, r_b, d_pad), -jnp.inf,
+                              jnp.float32))
+    slab = jnp.concatenate(
+        [jnp.stack(slabs[:len(planes)])] + slabs[len(planes):], axis=0) \
+        if pad_planes else jnp.stack(slabs)
+
+    def stack_meta(field: str, fill) -> np.ndarray:
+        out = np.full((s_b, r_b), fill,
+                      getattr(planes[0], field).dtype)
+        for i, p in enumerate(planes):
+            out[i, :p.parent.shape[0]] = getattr(p, field)
+        return out
+
+    parent = stack_meta("parent", 0)
+    for i in range(s_b):            # pad rows/planes: self-parented
+        tail = planes[i].parent.shape[0] if i < len(planes) else 0
+        parent[i, tail:] = np.arange(tail, r_b, dtype=np.int32)
+    is_root = stack_meta("is_root", False)
+    internal = stack_meta("internal", False)
+    leaf = stack_meta("leaf", False)
+    counts = np.zeros(s_b, np.int32)
+    counts[:len(planes)] = [p.n_rows for p in planes]
+    lengths = np.full(s_b, -1, np.int32)
+    lengths[:len(planes)] = [l for _, l in keys]
+    moved += (parent.nbytes + is_root.nbytes + internal.nbytes
+              + leaf.nbytes + counts.nbytes)
+    return AssembledPlanes(
+        keys=tuple(keys),
+        slot={k: i for i, k in enumerate(keys)},
+        lengths=lengths, slab=slab,
+        counts=jnp.asarray(counts), parent=jnp.asarray(parent),
+        is_root=jnp.asarray(is_root), internal=jnp.asarray(internal),
+        leaf=jnp.asarray(leaf),
+        leaf_offsets=np.array([p.leaf_offset for p in planes]
+                              + [0] * pad_planes, np.int64),
+        perms=[p.tree.perm for p in planes],
+        d_pad=d_pad, n_iter=n_iter, assembled_bytes=moved)
+
+
+@dataclasses.dataclass
+class PlanProbeResult:
+    """Readback of one whole-plan launch: candidate ids + counters only."""
+
+    assembled: AssembledPlanes
+    counts: np.ndarray           # int32 [S_b, Q_b]
+    cand_rows: np.ndarray        # int32 [S_b, Q_b, C_max] slab row ids
+    nodes_visited: np.ndarray    # int32 [S_b, Q_b]
+    nodes_pruned: np.ndarray     # int32 [S_b, Q_b]
+    leaves_tested: np.ndarray    # int32 [S_b, Q_b]
+    h2d_bytes: int
+    d2h_bytes: int
+
+    def hits(self, sid: int, length: int, qrow: int) -> np.ndarray:
+        """ORIGINAL point indices dominated by query row `qrow` in the
+        (sid, length) tree — identical in value and order to the host
+        `query_dominating` output."""
+        s = self.assembled.slot[(sid, length)]
+        k = int(self.counts[s, qrow])
+        local = (self.cand_rows[s, qrow, :k].astype(np.int64)
+                 - self.assembled.leaf_offsets[s])
+        return self.assembled.perms[s][local]
+
+    def counters(self, sid: int, length: int, qrow: int) -> dict[str, int]:
+        s = self.assembled.slot[(sid, length)]
+        return {"nodes_visited": int(self.nodes_visited[s, qrow]),
+                "nodes_pruned": int(self.nodes_pruned[s, qrow]),
+                "leaves_tested": int(self.leaves_tested[s, qrow])}
+
+
+def plan_probe(assembled: AssembledPlanes,
+               queries: list[tuple[np.ndarray, int]], eps: float = 1e-5,
+               use_pallas: bool | None = None) -> PlanProbeResult:
+    """Probe every (embedding, length) query row of a plan in ONE launch.
+
+    Rows narrower than the slab width are padded with -inf (passes every
+    box dim); pad rows past the real count hold +inf (match nothing) and
+    carry pair_valid=False.  Readback is counts + the leading candidate
+    id columns + counters — the dense mask never crosses back.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.dominance.ops import (QUERY_BUCKET, bucket,
+                                             fused_plan_descent)
+
+    n_q = len(queries)
+    q_b = bucket(max(n_q, 1), QUERY_BUCKET)
+    qmat = np.full((q_b, assembled.d_pad), np.inf, np.float32)
+    q_len = np.full(q_b, -2, np.int32)          # never matches a plane
+    for i, (emb, length) in enumerate(queries):
+        emb = np.asarray(emb, np.float32).ravel()
+        qmat[i, :emb.size] = emb
+        qmat[i, emb.size:] = -np.inf
+        q_len[i] = length
+    pair_valid = assembled.lengths[:, None] == q_len[None, :]
+
+    n_cand, order, nv, npr, lt = fused_plan_descent(
+        jnp.asarray(qmat), assembled.slab, assembled.counts,
+        assembled.parent, assembled.is_root, assembled.internal,
+        assembled.leaf, jnp.asarray(pair_valid), eps=eps,
+        n_iter=assembled.n_iter, use_pallas=use_pallas)
+
+    counts = np.asarray(n_cand)
+    c_max = int(counts.max()) if counts.size else 0
+    cand_rows = np.asarray(order[:, :, :c_max])  # device slice, then ship
+    nv, npr, lt = np.asarray(nv), np.asarray(npr), np.asarray(lt)
+    return PlanProbeResult(
+        assembled=assembled, counts=counts, cand_rows=cand_rows,
+        nodes_visited=nv, nodes_pruned=npr, leaves_tested=lt,
+        h2d_bytes=qmat.nbytes + pair_valid.nbytes,
+        d2h_bytes=(counts.nbytes + cand_rows.nbytes + nv.nbytes
+                   + npr.nbytes + lt.nbytes))
+
+
+class ClusterPlanes:
+    """Per-cluster plane cache: build -> resident -> invalidate.
+
+    Planes are built at index-build time (`build_shard`), served resident
+    across queries, and invalidated on hot migration / rebalancing /
+    machine failure (`invalidate`) — with an identity re-check on every
+    access as the backstop, so even an index swapped behind the cache's
+    back (e.g. a direct `hot_migrate` call) is repacked before use.
+    """
+
+    def __init__(self) -> None:
+        self._planes: dict[tuple[int, int], TreePlane] = {}
+        self._assembled: OrderedDict[tuple, AssembledPlanes] = OrderedDict()
+        self.stats = {"plane_builds": 0, "invalidations": 0,
+                      "assembles": 0, "assemble_reuses": 0, "probes": 0,
+                      "h2d_bytes": 0, "d2h_bytes": 0}
+
+    def resident_bytes(self) -> int:
+        """Total device bytes held: per-tree planes PLUS the assembled
+        slab copies (each a padded stack of every included plane)."""
+        return (sum(p.device_nbytes for p in self._planes.values())
+                + sum(int(a.slab.size) * 4
+                      for a in self._assembled.values()))
+
+    def plane(self, sid: int, length: int, tree: ARTree) -> TreePlane:
+        """The resident plane for (sid, length); rebuilt iff stale."""
+        key = (sid, length)
+        cached = self._planes.get(key)
+        if cached is not None and cached.tree is tree:
+            return cached
+        if cached is not None:      # index replaced behind our back
+            self._drop(key)
+        plane = build_tree_plane(tree)
+        self._planes[key] = plane
+        self.stats["plane_builds"] += 1
+        self.stats["h2d_bytes"] += plane.device_nbytes
+        return plane
+
+    def build_shard(self, sid: int, index) -> None:
+        """Eagerly pack every non-empty tree of a freshly built index."""
+        for length, tree in index.trees.items():
+            if tree.n_points:
+                self.plane(sid, length, tree)
+
+    def invalidate(self, sid: int) -> None:
+        """Drop every plane (and assembled slab) touching a shard."""
+        for key in [k for k in self._planes if k[0] == sid]:
+            self._drop(key)
+
+    def _drop(self, key: tuple[int, int]) -> None:
+        self._planes.pop(key, None)
+        self.stats["invalidations"] += 1
+        for sig in [s for s, a in self._assembled.items()
+                    if key in a.slot]:
+            del self._assembled[sig]
+
+    def assemble(self, entries: list[tuple[int, int, ARTree]]
+                 ) -> AssembledPlanes:
+        """Stack the planes for (sid, length, tree) entries; cached —
+        a warm assembly moves zero slab bytes host->device."""
+        planes = [self.plane(sid, l, tree) for sid, l, tree in entries]
+        keys = [(sid, l) for sid, l, _ in entries]
+        sig = tuple(p.token for p in planes)
+        hit = self._assembled.get(sig)
+        if hit is not None:
+            self._assembled.move_to_end(sig)
+            self.stats["assemble_reuses"] += 1
+            return hit
+        assembled = _assemble(planes, keys)
+        self._assembled[sig] = assembled
+        while len(self._assembled) > _MAX_ASSEMBLED:
+            self._assembled.popitem(last=False)
+        self.stats["assembles"] += 1
+        self.stats["h2d_bytes"] += assembled.assembled_bytes
+        return assembled
+
+    def probe(self, entries: list[tuple[int, int, ARTree]],
+              queries: list[tuple[np.ndarray, int]], eps: float = 1e-5,
+              use_pallas: bool | None = None) -> PlanProbeResult:
+        """assemble + plan_probe with cache statistics accounting."""
+        assembled = self.assemble(entries)
+        res = plan_probe(assembled, queries, eps=eps,
+                         use_pallas=use_pallas)
+        self.stats["probes"] += 1
+        self.stats["h2d_bytes"] += res.h2d_bytes
+        self.stats["d2h_bytes"] += res.d2h_bytes
+        return res

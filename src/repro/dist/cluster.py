@@ -40,8 +40,9 @@ from repro.core.embedding import (EmbeddedPaths, embed_query_paths,
 from repro.core.graph import LabeledGraph
 from repro.core.matching import (MatchStats, ShardIndex, backtrack_join,
                                  batched_path_candidates, path_candidates,
-                                 _reverse_embedding)
+                                 _reverse_embedding, _scatter_hits)
 from repro.core.paths import PathTable, enumerate_paths, paths_of_query
+from repro.core.probeplane import ClusterPlanes
 from repro.core.pescore import (PEScoreModel, aggregate_global_features,
                                 path_feature_vector, shard_features)
 from repro.core.plan import degree_based_plan, rank_query_plan
@@ -94,9 +95,16 @@ class QueryTelemetry:
     paths_executed: int = 0
     paths_skipped: int = 0        # early-terminated after empty candidates
     probe_launches: int = 0       # probe dispatches: host = one per
-                                  # (path, shard); device = one per path
+                                  # (path, shard); device = one per path;
+                                  # plane = ONE per query plan
+    probe_h2d_bytes: int = 0      # host->device probe traffic (slab +
+                                  # queries; 0 on the pure-host path)
+    probe_d2h_bytes: int = 0      # device->host readback (dense mask on
+                                  # the device path; candidate ids +
+                                  # counters only on the plane path)
     n_matches: int = 0
     plan_mode: str = "pescore"
+    probe_mode: str = "host"      # host | device | plane
     device_probe: bool = False
 
 
@@ -125,13 +133,23 @@ class DistributedGNNPE:
               shards_per_machine: int = 4, gnn_train_steps: int = 60,
               seed: int = 0, halo_hops: int = 2,
               max_path_length: int = 2,
-              device_probe: bool = False) -> "DistributedGNNPE":
+              device_probe: bool = False,
+              probe_mode: str | None = None) -> "DistributedGNNPE":
         self = object.__new__(cls)
         t_build = time.perf_counter()
         rng = np.random.default_rng(seed)
         self.graph = graph
         self.max_path_length = max_path_length
-        self.device_probe = device_probe
+        # default probe path: "host" (per-(path, shard) traversal),
+        # "device" (PR-2 per-path slab launch), or "plane" (device-
+        # resident planes, one fused launch per query plan).  The legacy
+        # device_probe bool maps onto probe_mode for compatibility.
+        if probe_mode is None:
+            probe_mode = "device" if device_probe else "host"
+        if probe_mode not in ("host", "device", "plane"):
+            raise ValueError(f"unknown probe_mode {probe_mode!r}")
+        self.probe_mode = probe_mode
+        self.device_probe = probe_mode != "host"
         self.cfg = gnn_lib.GNNConfig(n_labels=graph.n_labels)
 
         # 1. partition into ultra-fine shards with halo context
@@ -153,7 +171,11 @@ class DistributedGNNPE:
                                           seed=seed)
         vemb = self._encode_data_graph()
 
-        # 3. per-shard path tables + aR-trees (canonical-owner rule)
+        # 3. per-shard path tables + aR-trees (canonical-owner rule);
+        #    each index is also packed onto device as a resident probe
+        #    plane at build time (lifecycle: build -> resident ->
+        #    invalidate on migration/failure)
+        self.planes = ClusterPlanes()
         self.shards: dict[int, Shard] = {}
         build_weight: dict[int, float] = {}
         for shard in shard_list:
@@ -277,6 +299,7 @@ class DistributedGNNPE:
                                         length=l)
             trees[l] = build_artree(emb)
         shard.index = ShardIndex(embedded=embedded, trees=trees)
+        self.planes.build_shard(shard.sid, shard.index)
 
     def _lpt_alloc(self, weights: dict[int, float]
                    ) -> tuple[dict[int, int], float]:
@@ -356,20 +379,34 @@ class DistributedGNNPE:
     # online phase
     # ------------------------------------------------------------------ #
     def query(self, query: LabeledGraph, plan_mode: str = "pescore",
-              device_probe: bool | None = None
+              device_probe: bool | None = None,
+              probe_mode: str | None = None
               ) -> tuple[list[tuple], QueryTelemetry]:
         """Exact matches of `query` in the data graph + telemetry.
 
-        device_probe=True routes every path's shard probes through ONE
-        batched device launch (padded [S, max_leaves, D] slab, both
-        orientations fused) instead of per-(path, shard) host calls; the
-        candidate sets, matches and comm accounting are bit-identical to
-        the host path.  None falls back to the engine-level default set
-        at build time.
+        probe_mode picks the probe path — all three are bit-identical in
+        candidates, matches and comm accounting:
+
+          * "host":   one aR-tree traversal per (path, shard);
+          * "device": ONE batched launch per query path (PR-2 slab,
+            padded [S, max_leaves, D], both orientations fused — the
+            slab is re-packed on the host per path);
+          * "plane":  ONE fused launch per query PLAN over the
+            device-resident shard planes (zero slab bytes when warm;
+            readback is candidate row ids + counters only).
+
+        The legacy device_probe bool maps True -> "device", False ->
+        "host"; None falls back to the engine default set at build time.
         """
-        if device_probe is None:
-            device_probe = self.device_probe
-        tel = QueryTelemetry(plan_mode=plan_mode, device_probe=device_probe)
+        if probe_mode is None:
+            if device_probe is None:
+                probe_mode = self.probe_mode
+            else:
+                probe_mode = "device" if device_probe else "host"
+        if probe_mode not in ("host", "device", "plane"):
+            raise ValueError(f"unknown probe_mode {probe_mode!r}")
+        tel = QueryTelemetry(plan_mode=plan_mode, probe_mode=probe_mode,
+                             device_probe=probe_mode != "host")
         self._qclock += 1.0
         key = (query.n_vertices, query.labels.tobytes(),
                query.edge_list.tobytes())
@@ -409,6 +446,14 @@ class DistributedGNNPE:
         qid = int(self._qclock)
         rows_by_machine: dict[int, int] = defaultdict(int)
 
+        # plane mode: ONE fused launch for the whole plan, up front.
+        # Early-exited paths simply never read their precomputed rows
+        # (their comm/latency accounting stays untouched, exactly like a
+        # skipped host probe), so bit-identity with the host loop holds.
+        plan_hits = None
+        if probe_mode == "plane" and alive and order:
+            plan_hits = self._plan_probe(tables, order, q_embs, tel)
+
         for ti, r in order:
             if not alive:
                 tel.paths_skipped += 1
@@ -430,7 +475,20 @@ class DistributedGNNPE:
                     tel.shards_skipped += 1
                     continue
                 probes.append((sid, shard))
-            if device_probe and probes:
+            if probes and plan_hits is not None:
+                # read this path's survivors from the plan-wide launch;
+                # same deterministic service-time attribution as the
+                # per-path device branch below
+                base, res = plan_hits["row_of"][(ti, r)], plan_hits["res"]
+                probe_ms, verts_of = {}, {}
+                for sid, shard in probes:
+                    idx_f = res.hits(sid, l, base)
+                    idx_r = res.hits(sid, l, base + 1)
+                    verts_of[sid], _ = _scatter_hits(
+                        shard.index.embedded[l], idx_f, idx_r)
+                    probe_ms[sid] = (shard.index.trees[l].n_points
+                                     * VIRTUAL_MS_PER_LEAF)
+            elif probes and probe_mode == "device":
                 # pad all probed shards into one [S, max_leaves, D] slab
                 # and launch once; survivor rows scatter back per shard.
                 # Service time is attributed per shard as a DETERMINISTIC
@@ -438,9 +496,13 @@ class DistributedGNNPE:
                 # time of a batched launch includes one-off jit compiles
                 # per slab-shape bucket and cannot be attributed to a
                 # machine without poisoning the load telemetry.
+                bs: dict[str, int] = {}
                 results = batched_path_candidates(
-                    [shard.index for _, shard in probes], qe, l)
+                    [shard.index for _, shard in probes], qe, l,
+                    byte_stats=bs)
                 tel.probe_launches += 1
+                tel.probe_h2d_bytes += bs.get("h2d_bytes", 0)
+                tel.probe_d2h_bytes += bs.get("d2h_bytes", 0)
                 probe_ms = {sid: s.index.trees[l].n_points
                             * VIRTUAL_MS_PER_LEAF for sid, s in probes}
                 verts_of = {sid: verts
@@ -510,6 +572,48 @@ class DistributedGNNPE:
         return matches, tel
 
     # -------------------------------------------------------------- #
+    def _plan_probe(self, tables, order, q_embs, tel: QueryTelemetry):
+        """ONE fused device launch for every path of the query plan.
+
+        Assembles the resident shard planes of every length the plan
+        touches (warm planes and a warm assembly ship ZERO slab bytes),
+        stacks all (path, orientation) embeddings on the query axis —
+        rows are -inf-padded past their own length's width so different
+        lengths share the launch — and reads back only candidate row ids
+        + counters.  Returns {"res": PlanProbeResult, "row_of":
+        {(ti, r): fwd query-row}}, or None when there is nothing to
+        probe.  Stale planes (index replaced by migration/failover) are
+        repacked before use by the identity check in ClusterPlanes.
+        """
+        lengths = sorted({tables[ti].length for ti, _ in order})
+        entries = []
+        for sid in sorted(self.shards):
+            index = self.shards[sid].index
+            for l in lengths:
+                tree = index.trees.get(l)
+                if tree is not None and tree.n_points:
+                    entries.append((sid, l, tree))
+        if not entries:
+            return None
+        qrows: list[tuple[np.ndarray, int]] = []
+        row_of: dict[tuple[int, int], int] = {}
+        for ti, r in order:
+            l = tables[ti].length
+            qe = q_embs[ti][r]
+            row_of[(ti, r)] = len(qrows)
+            qrows.append((qe, l))
+            qrows.append((_reverse_embedding(qe[None, :], l + 1)[0], l))
+        h2d0 = self.planes.stats["h2d_bytes"]
+        d2h0 = self.planes.stats["d2h_bytes"]
+        res = self.planes.probe(entries, qrows)
+        tel.probe_launches += 1
+        # stats deltas, not res.h2d_bytes: a cold probe (first after
+        # build or invalidation) also pays plane repacking + assembly
+        # metadata, and the telemetry must show that amortization
+        tel.probe_h2d_bytes += self.planes.stats["h2d_bytes"] - h2d0
+        tel.probe_d2h_bytes += self.planes.stats["d2h_bytes"] - d2h0
+        return {"res": res, "row_of": row_of}
+
     def _observe_cache(self, key, hit: bool, matched: bool,
                        latency_ms: float, result=None,
                        slave_id: int | None = 0) -> None:
@@ -569,6 +673,11 @@ class DistributedGNNPE:
                 self.migrations.append(res)
                 self._last_migration_epoch = self._epoch
                 rebalanced = bool(res.migrated)
+                # migrated shards carry freshly deserialized indexes:
+                # drop their resident probe planes (lazily repacked on
+                # the next plane-mode probe)
+                for sid in res.migrated:
+                    self.planes.invalidate(sid)
                 self._refresh_loads()
         self.history.append({
             "sigma": self.load_sigma(),
@@ -577,6 +686,18 @@ class DistributedGNNPE:
             "cache_hit_rate": self.cache.hit_rate,
         })
         return tels
+
+    def handle_machine_failure(self, machine_id: int) -> list[int]:
+        """Kill a machine and re-home its shards onto the survivors
+        (Algorithm-1 migration from replicas, via WorkerFailover); the
+        victims' resident probe planes are invalidated so a plane-mode
+        probe can never read a pre-failover slab."""
+        from repro.train.elastic import WorkerFailover
+        fo = WorkerFailover(self, dead=set(self.dead_machines))
+        victims = fo.fail_machine(machine_id)
+        for sid in victims:
+            self.planes.invalidate(sid)
+        return victims
 
     def load_sigma(self) -> float:
         """Std of machine loads from the most recent workload epoch."""

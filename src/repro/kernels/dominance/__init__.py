@@ -1,7 +1,12 @@
-from repro.kernels.dominance.ops import (batched_dominance_mask,
-                                         dominance_mask)
+from repro.kernels.dominance.ops import (DEPTH_BUCKET, QUERY_BUCKET,
+                                         ROW_BUCKET, SHARD_BUCKET,
+                                         batched_dominance_mask,
+                                         dominance_mask, fused_plan_descent)
 from repro.kernels.dominance.ref import (dominance_mask_3d_ref,
-                                         dominance_mask_ref)
+                                         dominance_mask_ref,
+                                         survivor_propagation_ref)
 
 __all__ = ["dominance_mask", "dominance_mask_ref",
-           "batched_dominance_mask", "dominance_mask_3d_ref"]
+           "batched_dominance_mask", "dominance_mask_3d_ref",
+           "fused_plan_descent", "survivor_propagation_ref",
+           "SHARD_BUCKET", "ROW_BUCKET", "QUERY_BUCKET", "DEPTH_BUCKET"]

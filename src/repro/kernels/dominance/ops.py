@@ -4,9 +4,16 @@ The aR-tree device path (repro/core/artree batched traversal) calls this
 for leaf-level filtering when `use_pallas` is on; the CPU dry-run lowers
 the pure-jnp reference instead (Mosaic kernels do not compile on the CPU
 backend).
+
+`fused_plan_descent` is the whole-plan probe: dominance compare AND
+level-order survivor propagation in one launch, returning compact
+candidate row ids + counters instead of the dense ok mask (the probe-
+plane readback contract — see repro/core/probeplane.py).
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +21,27 @@ import jax.numpy as jnp
 from repro.kernels.dominance.kernel import (dominance_pallas,
                                             dominance_pallas_3d)
 from repro.kernels.dominance.ref import (dominance_mask_3d_ref,
-                                         dominance_mask_ref)
+                                         dominance_mask_ref,
+                                         survivor_propagation_ref)
+
+# Slab-shape buckets.  The probed shard set, row counts, query-plan size
+# and tree depth all vary per query, and exact-shape slabs would retrace
+# the jitted probe on nearly every call; rounding every axis up to these
+# buckets bounds the distinct compiled shapes to one per (S-bucket,
+# R-bucket) pair (times the handful of Q/depth buckets) while capping the
+# padded compute at one extra block per dim.  ROW_BUCKET matches the 3-D
+# kernel's lane block (BLOCK_S_N) and SHARD_BUCKET/QUERY_BUCKET its
+# sublane block (BLOCK_S_Q); DEPTH_BUCKET exploits that propagation
+# iterations past the tree depth are idempotent.
+SHARD_BUCKET = 8
+ROW_BUCKET = 256
+QUERY_BUCKET = 8
+DEPTH_BUCKET = 4
+
+
+def bucket(n: int, b: int) -> int:
+    """Round n up to a multiple of bucket size b (0 stays 0)."""
+    return -(-n // b) * b
 
 
 def dominance_mask(queries: jnp.ndarray, boxes: jnp.ndarray,
@@ -54,3 +81,71 @@ def batched_dominance_mask(queries: jnp.ndarray, boxes: jnp.ndarray,
         valid = jnp.arange(l)[None, None, :] < counts[:, None, None]
         out = out * valid.astype(jnp.int8)
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "n_iter", "use_pallas"))
+def fused_plan_descent_jit(queries: jnp.ndarray, slab: jnp.ndarray,
+                           counts: jnp.ndarray, parent: jnp.ndarray,
+                           is_root: jnp.ndarray, internal: jnp.ndarray,
+                           leaf: jnp.ndarray, pair_valid: jnp.ndarray,
+                           *, eps: float, n_iter: int, use_pallas: bool
+                           ) -> tuple[jnp.ndarray, ...]:
+    """Whole-plan fused descent: dominance + survivorship in ONE launch.
+
+    queries    [Q, D]    all (path, orientation) rows of a query plan,
+                         -inf-padded past each path's own width (passes
+                         every box dim, so lengths share the launch) and
+                         +inf pad rows past the real count.
+    slab       [S, R, D] assembled shard planes, -inf pad rows.
+    counts     [S]       valid rows per plane.
+    parent     [S, R]    packed-parent pointers (self at roots/pads).
+    is_root / internal / leaf [S, R]  row-role masks.
+    pair_valid [S, Q]    length(plane) == length(query row).
+
+    Returns per-(plane, query-row): candidate count [S, Q], slab row ids
+    sorted candidates-first ascending [S, Q, R], and the host traversal's
+    nodes_visited / nodes_pruned / leaves_tested counters [S, Q].  Only
+    the counts, the leading id columns, and the counters are meant to
+    cross back to the host — never a dense ok mask.
+    """
+    if use_pallas:
+        ok8 = dominance_pallas_3d(queries, slab, eps,
+                                  interpret=jax.default_backend() != "tpu")
+    else:
+        ok8 = dominance_mask_3d_ref(queries, slab, eps)
+    r = slab.shape[1]
+    valid_rows = jnp.arange(r)[None, None, :] < counts[:, None, None]
+    ok = ok8.astype(bool) & valid_rows & pair_valid[:, :, None]
+    _, anc = survivor_propagation_ref(ok, parent, is_root, n_iter)
+    # anc is True at root rows even for pair_valid-gated (plane, query)
+    # combinations, so the counters need the gate re-applied — a gated
+    # pair was never probed and must report zeros, not its root fan-out
+    gate = pair_valid.astype(jnp.int32)
+    nodes_visited = (anc & internal[:, None, :]).sum(-1,
+                                                     dtype=jnp.int32) * gate
+    nodes_pruned = (anc & ~ok & internal[:, None, :]).sum(
+        -1, dtype=jnp.int32) * gate
+    leaves_tested = (anc & leaf[:, None, :]).sum(-1, dtype=jnp.int32) * gate
+    final = anc & ok & leaf[:, None, :]
+    n_cand = final.sum(-1, dtype=jnp.int32)
+    # compaction: sort each row's ids with non-candidates pushed to the
+    # sentinel r, so the leading n_cand VALUES are the candidate rows in
+    # ascending order — exactly the host flatnonzero order.  Sorting the
+    # id values directly (not argsort) is ~7x faster, and int16 ids
+    # halve the readback whenever the row axis fits (it always does
+    # under ROW_BUCKET-padded shard trees).
+    id_dtype = jnp.int16 if r < 2 ** 15 else jnp.int32
+    row_ids = jnp.arange(r, dtype=id_dtype)[None, None, :]
+    order = jnp.sort(jnp.where(final, row_ids, id_dtype(r)), axis=-1)
+    return n_cand, order, nodes_visited, nodes_pruned, leaves_tested
+
+
+def fused_plan_descent(queries, slab, counts, parent, is_root, internal,
+                       leaf, pair_valid, eps: float = 1e-5,
+                       n_iter: int = 0, use_pallas: bool | None = None):
+    """See `fused_plan_descent_jit`; resolves use_pallas=None by backend."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    return fused_plan_descent_jit(queries, slab, counts, parent, is_root,
+                                  internal, leaf, pair_valid, eps=eps,
+                                  n_iter=n_iter, use_pallas=use_pallas)

@@ -21,3 +21,26 @@ def dominance_mask_3d_ref(queries: jnp.ndarray, boxes: jnp.ndarray,
     ok = jnp.all(queries[None, :, None, :] <= boxes[:, None, :, :] + eps,
                  axis=-1)
     return ok.astype(jnp.int8)
+
+
+def survivor_propagation_ref(ok: jnp.ndarray, parent: jnp.ndarray,
+                             is_root: jnp.ndarray, n_iter: int
+                             ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Level-order survivor propagation over packed-parent pointers.
+
+    ok [S, Q, R] bool node tests, parent [S, R] int32 (roots and pad rows
+    point at themselves), is_root [S, R] bool.  One iteration ANDs every
+    row with its parent, so after `n_iter` >= max tree depth iterations
+    ``alive[s, q, r]`` is the AND of ok over the row and ALL its
+    ancestors; extra iterations are idempotent (callers round n_iter up
+    to a bucket to bound jit retraces).  ``anc`` is the same AND over
+    *strict* ancestors only (True at roots) — the "candidate before its
+    own box test" mask the host traversal's counters are defined on.
+    """
+    idx = jnp.broadcast_to(parent[:, None, :], ok.shape)
+    alive = ok
+    for _ in range(n_iter):
+        alive = alive & jnp.take_along_axis(alive, idx, axis=-1)
+    anc = jnp.where(is_root[:, None, :], True,
+                    jnp.take_along_axis(alive, idx, axis=-1))
+    return alive, anc

@@ -113,16 +113,25 @@ def test_device_probe_bit_identical(seed, plan):
     q = random_walk_query(g, int(rng.integers(2, 6)), seed=seed)
     m_host, t_host = eng.query(q, plan_mode=plan, device_probe=False)
     m_dev, t_dev = eng.query(q, plan_mode=plan, device_probe=True)
-    assert m_host == m_dev
-    assert t_host.comm_bytes == t_dev.comm_bytes
-    assert t_host.cross_shard_rows == t_dev.cross_shard_rows
-    assert t_host.shards_skipped == t_dev.shards_skipped
-    assert t_host.paths_executed == t_dev.paths_executed
-    assert t_host.paths_skipped == t_dev.paths_skipped
+    m_pln, t_pln = eng.query(q, plan_mode=plan, probe_mode="plane")
+    assert m_host == m_dev == m_pln
+    for t in (t_dev, t_pln):
+        assert t_host.comm_bytes == t.comm_bytes
+        assert t_host.cross_shard_rows == t.cross_shard_rows
+        assert t_host.shards_skipped == t.shards_skipped
+        assert t_host.paths_executed == t.paths_executed
+        assert t_host.paths_skipped == t.paths_skipped
     # one batched launch per executed path (vs one host probe per
     # (path, shard)): the ROADMAP batching item's defining property
     assert t_dev.probe_launches <= t_dev.paths_executed
     assert t_host.probe_launches >= t_dev.probe_launches
+    # resident planes go further: ONE fused launch per query PLAN, and
+    # (warm) the slab never crosses the host boundary again — only the
+    # query rows go up and candidate ids come back
+    assert t_pln.probe_launches <= 1
+    assert t_host.probe_h2d_bytes == 0
+    if t_pln.probe_launches:
+        assert 0 < t_pln.probe_h2d_bytes < t_dev.probe_h2d_bytes
 
 
 def test_device_probe_matches_oracle():
@@ -133,3 +142,6 @@ def test_device_probe_matches_oracle():
         matches, tel = eng.query(q, device_probe=True)
         assert tel.device_probe
         assert set(matches) == vf2_oracle(g, q)
+        m_pln, t_pln = eng.query(q, probe_mode="plane")
+        assert t_pln.probe_mode == "plane" and t_pln.device_probe
+        assert set(m_pln) == vf2_oracle(g, q)

@@ -102,6 +102,39 @@ def test_dominance_3d_property(s, q, l, d, seed):
     assert (got == want).all()
 
 
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(1, 4), q=st.integers(1, 6), r=st.integers(2, 40),
+       seed=st.integers(0, 999))
+def test_survivor_propagation_matches_chain_and(s, q, r, seed):
+    """Parent-pointer propagation == brute-force ancestor-chain AND."""
+    from repro.kernels.dominance.ref import survivor_propagation_ref
+    rng = np.random.default_rng(seed)
+    ok = rng.random((s, q, r)) < 0.7
+    # random forests: row i's parent is a strictly smaller row (roots
+    # self-parented), so chain depth <= r
+    parent = np.array([[0] + [int(rng.integers(0, i)) for i in range(1, r)]
+                       for _ in range(s)], np.int32)
+    is_root = np.zeros((s, r), bool)
+    is_root[:, 0] = True
+    alive, anc = survivor_propagation_ref(
+        jnp.asarray(ok), jnp.asarray(parent), jnp.asarray(is_root),
+        n_iter=r)
+    alive, anc = np.asarray(alive), np.asarray(anc)
+    for si in range(s):
+        for qi in range(q):
+            for ri in range(r):
+                chain, node = [], ri
+                while True:
+                    chain.append(node)
+                    if node == parent[si, node]:
+                        break
+                    node = parent[si, node]
+                assert alive[si, qi, ri] == all(ok[si, qi, c]
+                                                for c in chain)
+                assert anc[si, qi, ri] == all(ok[si, qi, c]
+                                              for c in chain[1:])
+
+
 # --------------------------------------------------------------------------- #
 # segment / CSR gather-sum
 # --------------------------------------------------------------------------- #

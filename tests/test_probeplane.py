@@ -1,0 +1,272 @@
+"""Device-resident probe planes: resident slabs + whole-plan fused descent.
+
+Three contracts under test (ISSUE 3):
+
+  * bit-identity — a plane probe returns the same candidates (value AND
+    order) and the same nodes/leaves counters as the host traversal, for
+    every (shard, length, path-orientation) pair of a plan, in ONE
+    launch;
+  * staleness — a cached plane must never serve a probe after the shard
+    index changed (migration, failover, direct mutation);
+  * retrace bounds — probing workloads with varying shard counts and
+    path lengths compiles at most one descent kernel per
+    (shard-bucket, row-bucket) shape pair.
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.artree import build_artree, query_dominating
+from repro.core.probeplane import (ClusterPlanes, build_tree_plane,
+                                   plan_probe)
+from repro.kernels.dominance.ops import (DEPTH_BUCKET, QUERY_BUCKET,
+                                         ROW_BUCKET, SHARD_BUCKET, bucket)
+
+# --------------------------------------------------------------------------- #
+# plane layer: whole-plan fused descent == host short-circuit traversal
+# --------------------------------------------------------------------------- #
+
+
+def _random_cluster(rng, n_shards, dims):
+    """{(sid, length): tree} over `dims` = {length: D}, sizes incl. 1."""
+    trees = {}
+    for sid in range(n_shards):
+        for length, d in dims.items():
+            n = int(rng.integers(1, 200))
+            pts = rng.uniform(0, 1, (n, d)).astype(np.float32)
+            trees[(sid, length)] = build_artree(pts)
+    return trees
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 999), s=st.integers(1, 5),
+       n_q=st.integers(1, 6))
+def test_plan_probe_matches_host(seed, s, n_q):
+    rng = np.random.default_rng(seed)
+    dims = {1: 6, 2: 9}
+    trees = _random_cluster(rng, s, dims)
+    planes = ClusterPlanes()
+    entries = [(sid, l, t) for (sid, l), t in trees.items()]
+    queries = [(rng.uniform(0, 1, dims[l]).astype(np.float32), l)
+               for l in dims for _ in range(n_q)]
+    res = planes.probe(entries, queries, use_pallas=False)
+    for (sid, l), tree in trees.items():
+        for qi, (emb, ql) in enumerate(queries):
+            if ql != l:
+                continue
+            want, want_stats = query_dominating(tree, emb)
+            np.testing.assert_array_equal(res.hits(sid, l, qi), want)
+            assert res.counters(sid, l, qi) == want_stats, \
+                "plane counters must mirror the host traversal exactly"
+
+
+def test_plan_probe_single_point_and_readback_contract():
+    """1-point trees (no internal levels) + the id-only readback: the
+    shipped arrays are counts/ids/counters, never a dense R-wide mask."""
+    t1 = build_artree(np.array([[0.5, 0.5]], np.float32))
+    t2 = build_artree(np.random.default_rng(0).uniform(
+        0, 1, (300, 2)).astype(np.float32))
+    planes = ClusterPlanes()
+    res = planes.probe([(0, 1, t1), (1, 1, t2)],
+                       [(np.array([0.2, 0.2], np.float32), 1),
+                        (np.array([0.9, 0.9], np.float32), 1)],
+                       use_pallas=False)
+    np.testing.assert_array_equal(res.hits(0, 1, 0), [0])
+    np.testing.assert_array_equal(res.hits(0, 1, 1), np.zeros(0, np.int64))
+    assert res.counters(0, 1, 0) == {"nodes_visited": 0, "nodes_pruned": 0,
+                                     "leaves_tested": 1}
+    # readback contract: id slice width == the largest candidate count,
+    # not the bucketed row axis
+    assert res.cand_rows.shape[2] == int(res.counts.max())
+    assert res.cand_rows.shape[2] < ROW_BUCKET
+    s_b, r_b = res.assembled.slab.shape[0], res.assembled.slab.shape[1]
+    dense_mask_bytes = s_b * res.counts.shape[1] * r_b  # PR-2 readback
+    assert res.d2h_bytes < dense_mask_bytes
+
+
+def test_warm_plane_moves_no_slab_bytes():
+    """Second probe of the same plan: cached planes + cached assembly,
+    so h2d is the query rows only (orders of magnitude below the slab)."""
+    rng = np.random.default_rng(3)
+    trees = _random_cluster(rng, 4, {1: 6, 2: 9})
+    planes = ClusterPlanes()
+    entries = [(sid, l, t) for (sid, l), t in trees.items()]
+    queries = [(rng.uniform(0, 1, 6).astype(np.float32), 1),
+               (rng.uniform(0, 1, 9).astype(np.float32), 2)]
+    planes.probe(entries, queries, use_pallas=False)
+    cold = dict(planes.stats)
+    res = planes.probe(entries, queries, use_pallas=False)
+    assert planes.stats["assemble_reuses"] == cold["assemble_reuses"] + 1
+    assert planes.stats["plane_builds"] == cold["plane_builds"]
+    warm_h2d = planes.stats["h2d_bytes"] - cold["h2d_bytes"]
+    assert warm_h2d == res.h2d_bytes            # queries + pair mask only
+    slab_bytes = int(res.assembled.slab.size) * 4
+    assert warm_h2d < slab_bytes / 10
+
+
+# --------------------------------------------------------------------------- #
+# staleness: a stale cached plane must never serve a probe
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_stale_plane_never_serves(seed):
+    """Replace one shard's tree behind the cache's back: the next probe
+    must match a FRESH host probe of the new tree, not the old plane."""
+    rng = np.random.default_rng(seed)
+    d = 6
+    trees = {sid: build_artree(rng.uniform(0, 1, (int(rng.integers(1, 150)), d)
+                                           ).astype(np.float32))
+             for sid in range(3)}
+    planes = ClusterPlanes()
+    q = rng.uniform(0, 1, d).astype(np.float32)
+    entries = [(sid, 1, t) for sid, t in trees.items()]
+    planes.probe(entries, [(q, 1)], use_pallas=False)
+    # mutate shard 1's index (new tree object, like a migration rebuild)
+    trees[1] = build_artree(rng.uniform(0, 1, (77, d)).astype(np.float32))
+    entries = [(sid, 1, t) for sid, t in trees.items()]
+    res = planes.probe(entries, [(q, 1)], use_pallas=False)
+    assert planes.stats["invalidations"] >= 1
+    for sid, t in trees.items():
+        want, _ = query_dominating(t, q)
+        np.testing.assert_array_equal(res.hits(sid, 1, 0), want)
+
+
+def test_engine_invalidation_after_migration_and_failure():
+    """After hot migration, rebalance-driven moves and machine failure,
+    plane-mode candidates must equal a fresh host probe (engine level)."""
+    from repro.data.synthetic import make_workload, random_walk_query
+    from repro.dist.migration import hot_migrate
+    from tests.test_device_probe import _engine
+
+    g, eng = _engine()
+    inval0 = eng.planes.stats["invalidations"]
+
+    # 1. direct hot_migrate (bypasses the engine's invalidate call —
+    #    the identity backstop must catch the swapped index)
+    sid = next(iter(eng.shards))
+    src = eng.routing[sid]
+    tgt = next(k for k in range(len(eng.specs)) if k != src)
+    hot_migrate(eng.shards, [(sid, src, tgt)], eng.routing)
+
+    q = random_walk_query(g, 4, seed=123)
+    m_host, _ = eng.query(q, probe_mode="host")
+    m_plane, tel = eng.query(q, probe_mode="plane")
+    assert m_host == m_plane
+    assert tel.probe_launches <= 1
+
+    # 2. engine-level failure handling invalidates victims eagerly
+    victims = eng.handle_machine_failure(
+        max(k for k in range(len(eng.specs)) if k not in eng.dead_machines))
+    assert victims
+    assert eng.planes.stats["invalidations"] > inval0
+    for qs in make_workload(g, 2, seed=17):
+        mh, _ = eng.query(qs, probe_mode="host")
+        mp, _ = eng.query(qs, probe_mode="plane")
+        assert mh == mp
+
+
+# --------------------------------------------------------------------------- #
+# retrace guard: one compile per (shard-bucket, row-bucket) pair
+# --------------------------------------------------------------------------- #
+
+
+def test_descent_compiles_once_per_bucket_pair():
+    from repro.kernels.dominance.ops import fused_plan_descent_jit
+
+    rng = np.random.default_rng(0)
+    dims = {1: 6, 2: 9}
+
+    def probe(n_shards, n_rows_max, n_queries):
+        planes = ClusterPlanes()
+        trees = {}
+        for sid in range(n_shards):
+            for l, d in dims.items():
+                n = int(rng.integers(1, n_rows_max))
+                trees[(sid, l)] = build_artree(
+                    rng.uniform(0, 1, (n, d)).astype(np.float32))
+        entries = [(sid, l, t) for (sid, l), t in trees.items()]
+        queries = [(rng.uniform(0, 1, dims[1 + i % 2]).astype(np.float32),
+                    1 + i % 2) for i in range(n_queries)]
+        res = planes.probe(entries, queries, use_pallas=False)
+        s_b = bucket(len(entries), SHARD_BUCKET)
+        r_b = bucket(max(t.n_points for t in trees.values()), ROW_BUCKET)
+        assert res.assembled.slab.shape[0] == s_b
+        assert res.assembled.slab.shape[1] >= r_b
+
+    # varying shard counts and plan sizes WITHIN one (S, R) bucket pair:
+    # the first probe's compile must serve all of them
+    probe(1, 180, 1)
+    cache0 = fused_plan_descent_jit._cache_size()
+    for n_shards, n_q in [(2, 3), (3, 5), (4, 2), (4, 8)]:
+        probe(n_shards, 180, n_q)
+    assert fused_plan_descent_jit._cache_size() == cache0, \
+        "same (S-bucket, R-bucket) pair must not retrace"
+    # crossing the row bucket compiles exactly one more kernel
+    probe(2, 900, 3)
+    assert fused_plan_descent_jit._cache_size() == cache0 + 1
+    probe(3, 900, 5)                      # same new pair: still no retrace
+    assert fused_plan_descent_jit._cache_size() == cache0 + 1
+    # crossing the shard bucket compiles exactly one more kernel
+    probe(9, 180, 3)
+    assert fused_plan_descent_jit._cache_size() == cache0 + 2
+
+
+def test_bucket_constants_are_kernel_aligned():
+    """The named buckets replace the old inline 8/256 literals and must
+    stay aligned to the 3-D kernel's block shape."""
+    from repro.kernels.dominance.kernel import BLOCK_S_N, BLOCK_S_Q
+    assert ROW_BUCKET % BLOCK_S_N == 0
+    assert QUERY_BUCKET % BLOCK_S_Q == 0
+    assert SHARD_BUCKET >= 1 and DEPTH_BUCKET >= 1
+    assert bucket(0, ROW_BUCKET) == 0
+    assert bucket(1, ROW_BUCKET) == ROW_BUCKET
+    assert bucket(ROW_BUCKET, ROW_BUCKET) == ROW_BUCKET
+
+
+def test_plane_parent_pointers():
+    """Packed-parent layout: roots self-parented, level-k row j ->
+    level-(k-1) row j//B, leaves -> last internal level."""
+    tree = build_artree(np.random.default_rng(0).uniform(
+        0, 1, (100, 4)).astype(np.float32), branching=4)
+    plane = build_tree_plane(tree)
+    sizes = [u.shape[0] for u in tree.uppers]
+    offsets = np.cumsum([0] + sizes)
+    assert plane.leaf_offset == offsets[-1]
+    assert plane.is_root[:sizes[0]].all()
+    for k in range(1, len(sizes)):
+        for j in (0, sizes[k] - 1):
+            assert plane.parent[offsets[k] + j] == offsets[k - 1] + j // 4
+    for j in (0, 99):
+        assert plane.parent[offsets[-1] + j] == offsets[-2] + j // 4
+    # pad rows are inert: self-parented, no role
+    pad = slice(plane.n_rows, None)
+    np.testing.assert_array_equal(plane.parent[pad],
+                                  np.arange(plane.n_rows,
+                                            plane.parent.shape[0]))
+    assert not plane.is_root[pad].any()
+    assert not plane.internal[pad].any() and not plane.leaf[pad].any()
+
+
+def test_plan_probe_cross_length_isolation():
+    """Length-1 and length-2 planes share one launch; a query row must
+    only ever hit planes of its own length (pair_valid gating)."""
+    rng = np.random.default_rng(5)
+    # a length-1 tree whose boxes dominate EVERYTHING a length-2 query
+    # could ask for on the shared prefix dims
+    t1 = build_artree(np.full((20, 4), 100.0, np.float32))
+    t2 = build_artree(rng.uniform(0, 1, (50, 8)).astype(np.float32))
+    planes = ClusterPlanes()
+    q2 = rng.uniform(0, 1, 8).astype(np.float32)
+    res = planes.probe([(0, 1, t1), (0, 2, t2)], [(q2, 2)],
+                       use_pallas=False)
+    want, _ = query_dominating(t2, q2)
+    np.testing.assert_array_equal(res.hits(0, 2, 0), want)
+    s1 = res.assembled.slot[(0, 1)]
+    assert int(res.counts[s1, 0]) == 0, \
+        "a length-2 query row must not produce hits on a length-1 plane"
+    assert res.counters(0, 1, 0) == {"nodes_visited": 0, "nodes_pruned": 0,
+                                     "leaves_tested": 0}, \
+        "a gated pair was never probed and must report zero counters"
