@@ -22,6 +22,83 @@ from repro.data.synthetic import make_workload
 from tests.conftest import vf2_oracle
 
 E2E_SCHEMA_VERSION = 1
+WORKLOAD_SCHEMA_VERSION = 1
+
+# counters that must agree bit for bit between the serial plane path and
+# megabatch execution (wall time / launch attribution are mode-specific)
+_IDENTical = ("comm_bytes", "cross_shard_rows", "shards_skipped",
+              "paths_executed", "paths_skipped", "n_matches", "cache_hits")
+
+
+def workload_comparison(g=None, eng=None, n_vertices: int = 300,
+                        n_machines: int = 3, spm: int = 2,
+                        n_queries: int = 24, batch: int = 12,
+                        seed: int = 5) -> dict:
+    """Serial-plane vs megabatch workload throughput + BENCH_workload.json.
+
+    Asserts (CI smoke contract): bit-identical per-query counters and
+    comm bytes, batched launches-per-query < 0.25, and a strictly
+    smaller per-query device->host readback than the serial plane path
+    (the in-kernel mask filter ships candidates pre-filtered).
+    """
+    if eng is None:
+        g, eng = bench_engine(n_machines=n_machines, spm=spm,
+                              n_vertices=n_vertices, seed=seed)
+    elif g is None:
+        g = eng.graph
+    qs = make_workload(g, n_queries, seed=seed, hot_fraction=0.5)
+    cache_was = eng.use_cache
+    try:
+        eng.use_cache = False
+        # warm both paths so one-off jit compiles don't skew wall time
+        eng.run_workload(qs[:4], probe_mode="plane")
+        eng.run_workload(qs, probe_mode="plane", batch_size=batch)
+
+        t0 = time.perf_counter()
+        tels_s = eng.run_workload(qs, probe_mode="plane")
+        t_serial = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        tels_b = eng.run_workload(qs, probe_mode="plane",
+                                  batch_size=batch)
+        t_mega = time.perf_counter() - t0
+    finally:
+        eng.use_cache = cache_was
+
+    for i, (t_s, t_b) in enumerate(zip(tels_s, tels_b)):
+        for f in _IDENTical:
+            assert getattr(t_s, f) == getattr(t_b, f), \
+                f"megabatch bit-identity violated: query {i} field {f}"
+
+    def _mode(tels, wall_s):
+        nq = max(len(tels), 1)
+        return {
+            "qps": round(len(tels) / max(wall_s, 1e-9), 2),
+            "wall_ms_per_query": round(wall_s * 1e3 / nq, 3),
+            "launches_per_query": round(
+                sum(t.probe_launches for t in tels) / nq, 4),
+            "h2d_bytes_per_query": round(
+                sum(t.probe_h2d_bytes for t in tels) / nq, 1),
+            "d2h_bytes_per_query": round(
+                sum(t.probe_d2h_bytes for t in tels) / nq, 1),
+        }
+
+    serial, mega = _mode(tels_s, t_serial), _mode(tels_b, t_mega)
+    assert mega["launches_per_query"] < 0.25, \
+        f"megabatch launch amortization regressed: {mega}"
+    assert mega["d2h_bytes_per_query"] < serial["d2h_bytes_per_query"], \
+        "megabatch readback is not pre-filtered below the plane path"
+    out = {
+        "schema_version": WORKLOAD_SCHEMA_VERSION,
+        "workload": {"n_queries": len(qs), "n_vertices": g.n_vertices,
+                     "n_shards": len(eng.shards), "batch_size": batch,
+                     "matches": sum(t.n_matches for t in tels_b)},
+        "serial": serial,
+        "megabatch": mega,
+        "speedup": round(t_serial / max(t_mega, 1e-9), 2),
+    }
+    with open("BENCH_workload.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out
 
 
 def run() -> list[tuple]:
@@ -97,6 +174,18 @@ def run() -> list[tuple]:
                  f"plane_launches_per_path="
                  f"{modes['plane']['launches_per_path']};"
                  f"matches={n_vf2}"))
+
+    # megabatch workload execution: serial plane vs B=16 fused batches
+    # on the same 800-vertex engine (asserts bit-identity + amortized
+    # launches internally; emits stable-schema BENCH_workload.json)
+    wl = workload_comparison(g=g, eng=eng, n_queries=32, batch=16, seed=5)
+    rows.append(("e2e/megabatch_workload",
+                 wl["megabatch"]["wall_ms_per_query"] * 1e3,
+                 f"serial_qps={wl['serial']['qps']};"
+                 f"mega_qps={wl['megabatch']['qps']};"
+                 f"speedup={wl['speedup']}x;"
+                 f"launches_per_query={wl['megabatch']['launches_per_query']};"
+                 f"d2h_per_query={wl['megabatch']['d2h_bytes_per_query']}"))
 
     rows.append(("e2e/latency_10q", t_sys * 1e6,
                  f"system_s={t_sys:.2f};vf2_s={t_vf2:.2f};"

@@ -71,12 +71,16 @@ class ValueCache:
         self.evictions = 0
 
     # -------------------------------------------------------------- #
-    def get(self, key: Hashable) -> Any | None:
+    def get(self, key: Hashable, peek: bool = False) -> Any | None:
+        """Lookup; peek=True reads without touching hit/miss/frequency
+        state (the statistics only ever reflect authoritative accesses)."""
         if key in self.store:
-            self.hits += 1
-            self.freq[key] = self.freq.get(key, 0) + 1
+            if not peek:
+                self.hits += 1
+                self.freq[key] = self.freq.get(key, 0) + 1
             return self.store[key]
-        self.misses += 1
+        if not peek:
+            self.misses += 1
         return None
 
     def put(self, key: Hashable, data: Any, value: float,
@@ -170,6 +174,25 @@ class TwoLevelCache:
         self.location[key] = slave_id
 
     # -------------------------------------------------------------- #
+    def peek(self, key: Hashable,
+             slave_data: dict[int, dict[Hashable, Any]]) -> bool:
+        """Read-only twin of `access`: True iff it would return data.
+
+        Touches no LRU order and no hit/miss statistics — callers that
+        only need to know whether a key is servable (e.g. megabatch
+        dispatch deciding what to pack speculatively) must not perturb
+        the cache state the authoritative access sequence will replay.
+        Keep the tier order in lockstep with `access` below.
+        """
+        if self.master.get(key, peek=True) is not None:
+            return True
+        sid = self.location.get(key)
+        if sid is None:
+            return False
+        if self.slaves[sid].get(key, peek=True) is not None:
+            return True
+        return key in slave_data.get(sid, {})
+
     def access(self, key: Hashable, slave_data: dict[int, dict[Hashable, Any]],
                ) -> AccessResult:
         """Algorithm 3: strict priority access."""

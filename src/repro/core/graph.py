@@ -129,12 +129,26 @@ class LabeledGraph:
             vids,
         )
 
-    def adjacency_sets(self) -> list[set[int]]:
-        """Python adjacency sets (used by the backtracking verifier)."""
-        return [
-            set(self.indices[self.indptr[v] : self.indptr[v + 1]].tolist())
-            for v in range(self.n_vertices)
-        ]
+    def adjacency_bits(self) -> np.ndarray:
+        """Bit-packed adjacency matrix, lazily built and cached.
+
+        uint8 [n, ceil(n/8)]: bit ``v & 7`` of byte ``[u, v >> 3]`` is 1
+        iff (u, v) is an edge.  The vectorized join uses it for O(1)
+        batched adjacency tests; at n^2/8 bytes it is only built for
+        graphs the join actually tables (callers gate on size).
+        """
+        cached = getattr(self, "_adj_bits", None)
+        if cached is None:
+            n = self.n_vertices
+            bits = np.zeros((n, (n + 7) // 8), np.uint8)
+            rows = np.repeat(np.arange(n, dtype=np.int64),
+                             np.diff(self.indptr))
+            cols = self.indices.astype(np.int64)
+            np.bitwise_or.at(bits, (rows, cols >> 3),
+                             np.uint8(1) << (cols & 7).astype(np.uint8))
+            object.__setattr__(self, "_adj_bits", bits)
+            cached = bits
+        return cached
 
     def to_networkx(self):
         import networkx as nx

@@ -216,23 +216,24 @@ def vertex_candidates(query: LabeledGraph, data: LabeledGraph,
     return cands
 
 
-def backtrack_join(query: LabeledGraph, data: LabeledGraph,
-                   cands: list[np.ndarray], max_matches: int | None = None
-                   ) -> list[tuple[int, ...]]:
-    """Ordered backtracking with exact verification (injective, adjacency).
+# table-join guards: the vectorized frontier join materializes partial-
+# mapping tables and an n^2/8-byte adjacency bitmap (32 MB at the cap);
+# past any bound it falls back to the recursive verifier (same results,
+# same order).  _JOIN_STEP_MAX_ELEMS bounds the [K, depth, C] broadcast
+# temporaries of ONE extension step (~64 MB of bools) BEFORE they are
+# built — the row cap alone would only trigger after the allocation.
+_JOIN_BITMAP_MAX_N = 16_384
+_JOIN_TABLE_MAX_ROWS = 1 << 18
+_JOIN_STEP_MAX_ELEMS = 1 << 26
 
-    Query vertices are matched in ascending candidate-set size, preferring
-    vertices adjacent to already-matched ones (connected expansion).
-    """
+
+def _join_order(query: LabeledGraph, adj_q: list[set], sizes: list[int]
+                ) -> list[int]:
+    """Matching order: ascending candidate-set size under connected
+    expansion (prefer vertices adjacent to already-placed ones)."""
     n_q = query.n_vertices
-    adj_q = [set(query.neighbors(v).tolist()) for v in range(n_q)]
-    adj_d = data.adjacency_sets()
-    sizes = [int(c.sum()) for c in cands]
-    if any(s == 0 for s in sizes):
-        return []
-
     order: list[int] = []
-    placed = set()
+    placed: set[int] = set()
     while len(order) < n_q:
         frontier = [v for v in range(n_q) if v not in placed and
                     (not order or adj_q[v] & placed)]
@@ -241,8 +242,16 @@ def backtrack_join(query: LabeledGraph, data: LabeledGraph,
         v = min(frontier, key=lambda x: sizes[x])
         order.append(v)
         placed.add(v)
+    return order
 
-    cand_lists = [np.flatnonzero(c) for c in cands]
+
+def _backtrack_join_rec(query: LabeledGraph, data: LabeledGraph,
+                        cand_lists: list[np.ndarray], order: list[int],
+                        adj_q: list[set],
+                        max_matches: int | None) -> list[tuple[int, ...]]:
+    """Recursive DFS verifier (exact; the table join's fallback)."""
+    n_q = query.n_vertices
+    indptr, indices = data.indptr, data.indices
     matches: list[tuple[int, ...]] = []
     mapping = np.full(n_q, -1, dtype=np.int64)
     used: set[int] = set()
@@ -252,12 +261,15 @@ def backtrack_join(query: LabeledGraph, data: LabeledGraph,
             matches.append(tuple(int(x) for x in mapping))
             return max_matches is not None and len(matches) >= max_matches
         v = order[depth]
-        back_nbrs = [u for u in adj_q[v] if mapping[u] >= 0]
-        for u_d in cand_lists[v]:
+        cl = cand_lists[v]
+        for u in adj_q[v]:
+            b = mapping[u]
+            if b >= 0:
+                cl = cl[np.isin(cl, indices[indptr[b]:indptr[b + 1]],
+                                assume_unique=True)]
+        for u_d in cl:
             u_d = int(u_d)
             if u_d in used:
-                continue
-            if any(u_d not in adj_d[mapping[b]] for b in back_nbrs):
                 continue
             mapping[v] = u_d
             used.add(u_d)
@@ -269,6 +281,68 @@ def backtrack_join(query: LabeledGraph, data: LabeledGraph,
 
     rec(0)
     return matches
+
+
+def backtrack_join(query: LabeledGraph, data: LabeledGraph,
+                   cands: list[np.ndarray], max_matches: int | None = None
+                   ) -> list[tuple[int, ...]]:
+    """Ordered backtracking with exact verification (injective, adjacency).
+
+    Query vertices are matched in ascending candidate-set size, preferring
+    vertices adjacent to already-matched ones (connected expansion).
+
+    High-match queries made the per-node DFS the end-to-end hotspot once
+    probing moved on device, so the default engine is a vectorized
+    frontier-table join: partial mappings live in one [K, depth] array
+    and every depth extends ALL of them at once with batched adjacency
+    (bit-packed matrix) + injectivity tests.  Rows stay in DFS order
+    (np.nonzero is row-major and candidate lists ascend), so matches are
+    emitted in exactly the recursive verifier's order; the recursion
+    remains as the fallback for early-exit (max_matches), huge graphs,
+    and table blow-ups.
+    """
+    n_q = query.n_vertices
+    adj_q = [set(query.neighbors(v).tolist()) for v in range(n_q)]
+    sizes = [int(c.sum()) for c in cands]
+    if any(s == 0 for s in sizes):
+        return []
+    order = _join_order(query, adj_q, sizes)
+    cand_lists = [np.flatnonzero(c) for c in cands]
+    if max_matches is not None or data.n_vertices > _JOIN_BITMAP_MAX_N:
+        return _backtrack_join_rec(query, data, cand_lists, order, adj_q,
+                                   max_matches)
+
+    adj_bits = data.adjacency_bits()
+    col_of = {v: j for j, v in enumerate(order)}
+    rows = cand_lists[order[0]][:, None]              # [K, 1] partials
+    for depth in range(1, n_q):
+        v = order[depth]
+        cl = cand_lists[v]
+        if rows.shape[0] == 0 or cl.size == 0:
+            return []
+        if rows.shape[0] * cl.size * (depth + 1) > _JOIN_STEP_MAX_ELEMS:
+            return _backtrack_join_rec(query, data, cand_lists, order,
+                                       adj_q, max_matches)
+        byte_idx, bit = cl >> 3, (cl & 7).astype(np.uint8)
+        allowed = np.ones((rows.shape[0], cl.size), dtype=bool)
+        for u in adj_q[v]:
+            j = col_of.get(u)
+            if j is not None and j < depth:
+                mb = rows[:, j]
+                allowed &= ((adj_bits[mb[:, None], byte_idx[None, :]]
+                             >> bit[None, :]) & 1).astype(bool)
+        # injectivity: a candidate may not repeat a row's mapped vertex
+        allowed &= ~(rows[:, :, None] == cl[None, None, :]).any(axis=1)
+        rk, ck = np.nonzero(allowed)                  # row-major: DFS order
+        rows = np.concatenate([rows[rk], cl[ck][:, None]], axis=1)
+        if rows.shape[0] > _JOIN_TABLE_MAX_ROWS:
+            return _backtrack_join_rec(query, data, cand_lists, order,
+                                       adj_q, max_matches)
+    if rows.shape[0] == 0:
+        return []
+    out = np.empty((rows.shape[0], n_q), dtype=np.int64)
+    out[:, order] = rows
+    return [tuple(int(x) for x in r) for r in out]
 
 
 def exact_match(query: LabeledGraph, data: LabeledGraph, index: ShardIndex,

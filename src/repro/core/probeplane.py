@@ -35,17 +35,19 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from collections import OrderedDict
+from collections import OrderedDict, defaultdict
 
 import numpy as np
 
 from repro.core.artree import ARTree, _tree_rows
 
 __all__ = ["TreePlane", "AssembledPlanes", "PlanProbeResult",
-           "ClusterPlanes", "build_tree_plane", "plan_probe"]
+           "ClusterPlanes", "build_tree_plane", "plan_probe",
+           "MegaBlock", "MegaAssembly", "MegaInFlight", "MegaProbeResult"]
 
 _PLANE_TOKENS = itertools.count(1)
 _MAX_ASSEMBLED = 4          # assembled-slab cache entries kept per cluster
+_MAX_MEGA = 4               # megabatch leaf-assembly cache entries
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,6 +272,95 @@ def plan_probe(assembled: AssembledPlanes,
                    + npr.nbytes + lt.nbytes))
 
 
+# --------------------------------------------------------------------------- #
+# megabatch leaf assemblies (multi-query fused workload execution, PR 4)
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class MegaBlock:
+    """One path length's leaf block of a megabatch assembly.
+
+    The leaf slab is sliced device-side out of the resident `TreePlane`
+    rows (zero slab bytes host->device when the planes are warm); the
+    per-leaf global-vertex table `gverts` is the in-kernel mask-filter
+    operand and crosses host->device once per cold assembly.
+    """
+
+    length: int
+    sids: tuple                  # shard-axis order
+    slot: dict                   # sid -> shard-axis index
+    trees: tuple                 # packed-from ARTree identities (the
+                                 # staleness signature MegaAssembly.stale
+                                 # compares against the live index)
+    leaves: object               # jnp [S_b, N_b, D] leaf points, -inf pad
+    counts_dev: object           # jnp int32 [S_b] valid leaves
+    gverts_dev: object           # jnp int32 [S_b, N_b, l+1]
+    n_points: np.ndarray         # int64 [S_b]
+    gverts_host: np.ndarray      # int32 [S_b, N_b, l+1] (consume-side copy)
+    up_max: np.ndarray           # float32 [S_real, D] root-MBR upper bound
+    n_b: int
+    d: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MegaAssembly:
+    """Per-length megabatch leaf blocks + the staleness signature."""
+
+    blocks: dict                 # length -> MegaBlock
+    keys: frozenset              # {(sid, length)} for invalidation matching
+    assembled_bytes: int
+
+    def stale(self, live_trees: dict) -> bool:
+        """True iff any packed tree was replaced behind the cache's back
+        (``live_trees`` maps (sid, length) -> the live ARTree)."""
+        for blk in self.blocks.values():
+            for sid, tree in zip(blk.sids, blk.trees):
+                if live_trees.get((sid, blk.length)) is not tree:
+                    return True
+        return False
+
+
+@dataclasses.dataclass
+class MegaInFlight:
+    """A dispatched (not yet read back) megabatch probe.
+
+    ``finals`` stay device-resident until `mega_readback` gathers the
+    candidate-bearing lanes; holding this object is what lets the
+    workload loop overlap batch k+1's launch with batch k's join.
+    """
+
+    assembly: MegaAssembly
+    lengths: tuple               # block order of finals/counts
+    finals: tuple                # per length: jnp bool [S_b, Q_b, N_b]
+    counts_dev: tuple            # per length: jnp int32 [S_b, Q_b]
+    launches: int = 1
+
+
+@dataclasses.dataclass
+class MegaProbeResult:
+    """Readback of a megabatch launch: per-lane counts + packed
+    candidate bits for candidate-bearing lanes only (pre-filtered by the
+    in-kernel mask operand — the dense mask never crosses back)."""
+
+    assembly: MegaAssembly
+    counts: dict                 # length -> int32 [S_b, Q_b]
+    lane_of: dict                # (length, slot, qrow) -> packed row
+    packed: np.ndarray | None    # uint8 [K, N_max // 8]
+    d2h_bytes: int
+    launches: int
+
+    def candidates(self, length: int, sid: int, qrow: int) -> np.ndarray:
+        """Ascending PACKED-LEAF ids surviving dominance + the query's
+        label/degree masks for (sid, length, query row)."""
+        blk = self.assembly.blocks[length]
+        s = blk.slot[sid]
+        if int(self.counts[length][s, qrow]) == 0:
+            return np.zeros(0, np.int64)
+        row = self.packed[self.lane_of[(length, s, qrow)]]
+        bits = np.unpackbits(row, bitorder="little")[:blk.n_b]
+        return np.flatnonzero(bits)
+
+
 class ClusterPlanes:
     """Per-cluster plane cache: build -> resident -> invalidate.
 
@@ -283,8 +374,11 @@ class ClusterPlanes:
     def __init__(self) -> None:
         self._planes: dict[tuple[int, int], TreePlane] = {}
         self._assembled: OrderedDict[tuple, AssembledPlanes] = OrderedDict()
+        self._mega: OrderedDict[tuple, MegaAssembly] = OrderedDict()
         self.stats = {"plane_builds": 0, "invalidations": 0,
                       "assembles": 0, "assemble_reuses": 0, "probes": 0,
+                      "mega_assembles": 0, "mega_assemble_reuses": 0,
+                      "mega_probes": 0,
                       "h2d_bytes": 0, "d2h_bytes": 0}
 
     def resident_bytes(self) -> int:
@@ -292,7 +386,10 @@ class ClusterPlanes:
         slab copies (each a padded stack of every included plane)."""
         return (sum(p.device_nbytes for p in self._planes.values())
                 + sum(int(a.slab.size) * 4
-                      for a in self._assembled.values()))
+                      for a in self._assembled.values())
+                + sum(sum(int(b.leaves.size) * 4 + int(b.gverts_dev.size) * 4
+                          for b in m.blocks.values())
+                      for m in self._mega.values()))
 
     def plane(self, sid: int, length: int, tree: ARTree) -> TreePlane:
         """The resident plane for (sid, length); rebuilt iff stale."""
@@ -325,6 +422,8 @@ class ClusterPlanes:
         for sig in [s for s, a in self._assembled.items()
                     if key in a.slot]:
             del self._assembled[sig]
+        for sig in [s for s, m in self._mega.items() if key in m.keys]:
+            del self._mega[sig]
 
     def assemble(self, entries: list[tuple[int, int, ARTree]]
                  ) -> AssembledPlanes:
@@ -357,3 +456,187 @@ class ClusterPlanes:
         self.stats["h2d_bytes"] += res.h2d_bytes
         self.stats["d2h_bytes"] += res.d2h_bytes
         return res
+
+    # ---------------------------------------------------------------- #
+    # megabatch path: leaf-only per-length assemblies, two-stage probe
+    # ---------------------------------------------------------------- #
+    def mega_assemble(self, entries: list[tuple[int, int, ARTree]],
+                      gverts_fn) -> MegaAssembly:
+        """Per-length leaf blocks for a megabatch launch; cached.
+
+        ``entries`` are (sid, length, live tree); ``gverts_fn(sid,
+        length, tree)`` returns the int32 [n_points, length+1] global
+        data-vertex ids of the tree's leaves in PACKED order (i.e.
+        already permuted by ``tree.perm``) — only called on a cold
+        assembly.  Leaf slabs are device-side slices of the resident
+        planes, so a warm-plane cold assembly moves only the gverts
+        tables host->device; a warm assembly moves nothing.
+        """
+        import jax.numpy as jnp
+
+        from repro.kernels.dominance.ops import (ROW_BUCKET, SHARD_BUCKET,
+                                                 bucket)
+
+        planes = {(sid, l): self.plane(sid, l, tree)
+                  for sid, l, tree in entries}
+        sig = tuple(sorted((k, p.token) for k, p in planes.items()))
+        hit = self._mega.get(sig)
+        if hit is not None:
+            self._mega.move_to_end(sig)
+            self.stats["mega_assemble_reuses"] += 1
+            return hit
+
+        moved = 0
+        blocks: dict[int, MegaBlock] = {}
+        by_length: dict[int, list] = defaultdict(list)
+        for sid, l, tree in entries:
+            by_length[l].append((sid, tree))
+        for l, group in sorted(by_length.items()):
+            group.sort(key=lambda e: e[0])
+            s_b = bucket(len(group), SHARD_BUCKET)
+            n_b = bucket(max(t.n_points for _, t in group), ROW_BUCKET)
+            d = int(group[0][1].dim)
+            leaf_slabs, gv_host = [], np.zeros((s_b, n_b, l + 1), np.int32)
+            counts = np.zeros(s_b, np.int32)
+            up_max = np.zeros((len(group), d), np.float32)
+            for i, (sid, tree) in enumerate(group):
+                p = planes[(sid, l)]
+                rows = p.rows[p.leaf_offset:p.leaf_offset + tree.n_points]
+                if tree.n_points < n_b:
+                    rows = jnp.pad(rows, ((0, n_b - tree.n_points), (0, 0)),
+                                   constant_values=-jnp.inf)
+                leaf_slabs.append(rows)
+                gv = np.asarray(gverts_fn(sid, l, tree), np.int32)
+                gv_host[i, :gv.shape[0]] = gv
+                counts[i] = tree.n_points
+                up_max[i] = (tree.uppers[0].max(axis=0) if tree.uppers
+                             else tree.points.max(axis=0))
+            if s_b > len(group):
+                leaf_slabs.append(jnp.full((s_b - len(group), n_b, d),
+                                           -jnp.inf, jnp.float32))
+                leaves = jnp.concatenate(
+                    [jnp.stack(leaf_slabs[:len(group)]), leaf_slabs[-1]],
+                    axis=0)
+            else:
+                leaves = jnp.stack(leaf_slabs)
+            moved += gv_host.nbytes + counts.nbytes
+            blocks[l] = MegaBlock(
+                length=l,
+                sids=tuple(sid for sid, _ in group),
+                slot={sid: i for i, (sid, _) in enumerate(group)},
+                trees=tuple(t for _, t in group),
+                leaves=leaves, counts_dev=jnp.asarray(counts),
+                gverts_dev=jnp.asarray(gv_host),
+                n_points=counts.astype(np.int64), gverts_host=gv_host,
+                up_max=up_max, n_b=n_b, d=d)
+        assembly = MegaAssembly(
+            blocks=blocks,
+            keys=frozenset((sid, l) for sid, l, _ in entries),
+            assembled_bytes=moved)
+        self._mega[sig] = assembly
+        while len(self._mega) > _MAX_MEGA:
+            self._mega.popitem(last=False)
+        self.stats["mega_assembles"] += 1
+        self.stats["h2d_bytes"] += moved
+        return assembly
+
+    def mega_dispatch(self, assembly: MegaAssembly,
+                      qmat: dict[int, np.ndarray],
+                      mask_rows: dict[int, np.ndarray],
+                      mask_bits: np.ndarray, eps: float = 1e-5,
+                      use_pallas: bool | None = None) -> MegaInFlight:
+        """Launch the fused multi-query probe WITHOUT blocking on it.
+
+        ``qmat[l]`` stacks every (path, orientation) embedding row of
+        length l across the batch (real rows first); ``mask_rows[l]``
+        gives each row's packed-mask row per position; ``mask_bits`` is
+        the batch's shared mask operand.  Returns a `MegaInFlight` whose
+        device arrays materialize asynchronously — the caller reads them
+        back later via `mega_readback`, overlapping this launch with
+        host-side work (JAX async dispatch).
+        """
+        import jax.numpy as jnp
+
+        from repro.kernels.dominance.ops import (megabatch_leaf_probe,
+                                                 mega_query_bucket)
+
+        lengths = tuple(sorted(l for l in qmat if l in assembly.blocks
+                               and qmat[l].shape[0]))
+        h2d = int(mask_bits.nbytes)
+        blocks = []
+        for l in lengths:
+            blk = assembly.blocks[l]
+            q = np.asarray(qmat[l], np.float32)
+            mr = np.asarray(mask_rows[l], np.int32)
+            q_b = mega_query_bucket(q.shape[0])
+            if q_b > q.shape[0]:
+                q = np.concatenate(
+                    [q, np.full((q_b - q.shape[0], q.shape[1]), np.inf,
+                                np.float32)])
+                mr = np.concatenate(
+                    [mr, np.zeros((q_b - mr.shape[0], mr.shape[1]),
+                                  np.int32)])
+            h2d += q.nbytes + mr.nbytes
+            blocks.append((jnp.asarray(q), blk.leaves, blk.counts_dev,
+                           blk.gverts_dev, jnp.asarray(mr)))
+        if not blocks:
+            return MegaInFlight(assembly=assembly, lengths=(), finals=(),
+                                counts_dev=(), launches=0)
+        out = megabatch_leaf_probe(blocks, jnp.asarray(mask_bits), eps=eps,
+                                   use_pallas=use_pallas)
+        self.stats["mega_probes"] += 1
+        self.stats["h2d_bytes"] += h2d
+        return MegaInFlight(
+            assembly=assembly, lengths=lengths,
+            finals=tuple(f for f, _ in out),
+            counts_dev=tuple(c for _, c in out))
+
+    def mega_readback(self, flight: MegaInFlight) -> MegaProbeResult:
+        """Block on a dispatched megabatch probe and ship the readback:
+        per-lane counts, then ONE gather launch packing only the
+        candidate-bearing lanes (8 leaf rows per byte)."""
+        import jax.numpy as jnp
+
+        from repro.kernels.dominance.ops import (LANE_BUCKET, bucket,
+                                                 gather_pack_lanes_jit)
+
+        counts: dict[int, np.ndarray] = {}
+        lane_of: dict[tuple, int] = {}
+        sel_s, sel_q, sel_finals = [], [], []
+        row = 0
+        d2h = 0
+        for l, cdev, fin in zip(flight.lengths, flight.counts_dev,
+                                flight.finals):
+            c = np.asarray(cdev)
+            counts[l] = c
+            d2h += c.nbytes
+            ls, lq = np.nonzero(c)
+            if not len(ls):          # no candidate-bearing lanes: the
+                continue             # block ships nothing at all
+            k_b = bucket(len(ls), LANE_BUCKET)
+            s_pad = np.zeros(k_b, np.int32)
+            q_pad = np.zeros(k_b, np.int32)
+            s_pad[:len(ls)] = ls
+            q_pad[:len(lq)] = lq
+            sel_s.append(s_pad)
+            sel_q.append(q_pad)
+            sel_finals.append(fin)
+            for s, q in zip(ls, lq):
+                lane_of[(l, int(s), int(q))] = row
+                row += 1
+            row += k_b - len(ls)
+        packed = None
+        launches = flight.launches
+        if lane_of:
+            packed = np.asarray(gather_pack_lanes_jit(
+                tuple(sel_finals),
+                tuple(jnp.asarray(s) for s in sel_s),
+                tuple(jnp.asarray(q) for q in sel_q)))
+            launches += 1
+            d2h += packed.nbytes
+            self.stats["h2d_bytes"] += sum(s.nbytes + q.nbytes
+                                           for s, q in zip(sel_s, sel_q))
+        self.stats["d2h_bytes"] += d2h
+        return MegaProbeResult(assembly=flight.assembly, counts=counts,
+                               lane_of=lane_of, packed=packed,
+                               d2h_bytes=d2h, launches=launches)

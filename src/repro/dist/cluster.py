@@ -17,6 +17,17 @@ Workload loop:    run_workload collects per-shard telemetry, fuses it
 into machine loads (§4.1), and when the sigma trigger fires plans and
 executes CRC-verified hot migrations (Algorithm 1).
 
+Megabatch mode:   run_workload(batch_size=B) (or query_batch directly)
+packs the plans of B consecutive queries into ONE multi-query fused
+leaf-dominance launch over the device-resident planes, with each
+query's label/degree candidate masks shipped as a packed bit operand so
+the readback is pre-filtered in-kernel; the stream is pipelined (batch
+k+1's launch is dispatched asynchronously while the host joins batch
+k).  Results, per-query counters, and comm-byte accounting are
+bit-identical to the serial plane path; the launch itself and its
+host<->device bytes are attributed to the FIRST query of each batch
+(QueryTelemetry.batch_size marks the batch).
+
 Caching:          a TwoLevelCache (master Top-V + per-machine slaves,
 Algorithms 3 & 4) keyed by query signature, valued by AW-ResNet fused
 path features (Algorithms 2 & 5).  `use_cache` toggles the whole layer.
@@ -26,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
+from collections import OrderedDict, defaultdict
 
 import numpy as np
 
@@ -55,6 +66,9 @@ __all__ = ["MachineSpec", "QueryTelemetry", "DistributedGNNPE",
            "EPOCH_VIRTUAL_S"]
 
 ROW_BYTES_PER_VERTEX = 4          # int32 candidate vertex ids on the wire
+
+PLAN_LRU_SIZE = 128               # memoized (tables, embeddings, orders)
+                                  # entries keyed by the query cache key
 
 # Rebalance clock: the engine runs on VIRTUAL time (queries carry virtual
 # latencies, not wall time), so the anti-thrash decay in
@@ -106,6 +120,9 @@ class QueryTelemetry:
     plan_mode: str = "pescore"
     probe_mode: str = "host"      # host | device | plane
     device_probe: bool = False
+    batch_size: int = 1           # queries sharing this query's launch
+    plan_cache_hits: int = 0      # plan-artifact LRU hits (tables+embeds
+                                  # reused from an earlier identical query)
 
 
 def _root_skip(tree, q_fwd: np.ndarray, q_rev: np.ndarray,
@@ -221,6 +238,17 @@ class DistributedGNNPE:
         self.use_cache = True
         self._slave_store: dict[int, dict] = {k: {}
                                               for k in range(n_machines)}
+
+        # 6b. per-query plan artifacts (paths_of_query + embed_query_paths
+        #     + ranked orders) are pure functions of (query, engine state
+        #     fixed at build), so repeated query shapes reuse them via a
+        #     small LRU keyed on the cache key (hits in QueryTelemetry)
+        self._plan_lru: OrderedDict = OrderedDict()
+        # 6c. AW-ResNet update batching: run_workload defers Algorithm-5
+        #     training to one update per epoch (observations still stream
+        #     per query); query() outside a workload trains immediately
+        self._defer_aw = False
+        self._aw_pending: list[tuple[float, float]] = []
 
         # 7. balancing state
         self.dead_machines: set[int] = set()
@@ -411,35 +439,28 @@ class DistributedGNNPE:
         key = (query.n_vertices, query.labels.tobytes(),
                query.edge_list.tobytes())
 
-        if self.use_cache:
-            res = self.cache.access(key, self._slave_store)
-            tel.latency_ms += res.latency_ms
-            if res.data is not None:
-                tel.cache_hits = 1
-                tel.n_matches = len(res.data)
-                self._observe_cache(key, hit=True, matched=bool(res.data),
-                                    latency_ms=tel.latency_ms)
-                return list(res.data), tel
+        cached = self._cache_lookup(key, tel)
+        if cached is not None:
+            return cached, tel
+        return self._execute_serial(query, key, tel, plan_mode, probe_mode)
 
+    def _execute_serial(self, query: LabeledGraph, key,
+                        tel: QueryTelemetry, plan_mode: str,
+                        probe_mode: str
+                        ) -> tuple[list[tuple], QueryTelemetry]:
+        """`query`'s post-cache-miss body (plan -> probe -> join).
+
+        Also the megabatch eviction-race fallback: a query whose cached
+        result vanished between dispatch and consume re-enters here, on
+        the already-bumped qclock and already-missed cache access.
+        """
         t_plan = time.perf_counter()
-        tables = paths_of_query(query, self.max_path_length)
-        if plan_mode == "pescore":
-            order = rank_query_plan(query, self.pe_model,
-                                    max_path_length=self.max_path_length,
-                                    tables=tables).order
-        elif plan_mode == "degree":
-            order = degree_based_plan(query, tables=tables).order
-        else:
-            order = [(ti, r) for ti, t in enumerate(tables)
-                     for r in range(t.n_paths)]
-        q_embs = [embed_query_paths(query, self.params, self.cfg, t)
-                  for t in tables]
+        tables, q_embs, order = self._plan_artifacts(query, key, plan_mode,
+                                                     tel)
         plan_ms = (time.perf_counter() - t_plan) * 1e3
 
         n_d = self.graph.n_vertices
-        deg_d, deg_q = self.graph.degrees, query.degrees
-        masks = [(self.graph.labels == query.labels[v])
-                 & (deg_d >= deg_q[v]) for v in range(query.n_vertices)]
+        masks = self._initial_masks(query)
         alive = all(m.any() for m in masks)
 
         machine_ms: dict[int, float] = defaultdict(float)
@@ -515,35 +536,97 @@ class DistributedGNNPE:
                     probe_ms[sid] = (time.perf_counter() - t0) * 1e3
                     tel.probe_launches += 1
             for sid, shard in probes:
-                mk = self.routing[sid]
-                service_ms = probe_ms[sid] / self.cpu_w[mk]
-                gverts = shard.global_ids[verts_of[sid]]
                 # shard-side filter against the candidate masks the
                 # master shipped with the probe: only surviving rows
                 # cross the network (what PE-score ordering optimizes)
-                if gverts.shape[0]:
-                    ok = np.ones(gverts.shape[0], dtype=bool)
-                    for i in range(l + 1):
-                        ok &= masks[qv[i]][gverts[:, i]]
-                    gverts = gverts[ok]
-                n_rows = int(gverts.shape[0])
-                tx_bytes = n_rows * ROW_BYTES_PER_VERTEX * (l + 1)
-                machine_ms[mk] += service_ms
-                self._cpu[sid] += service_ms
-                self._comm[sid] += tx_bytes
-                if n_rows:
-                    self._touch[sid].add(qid)
-                    rows_by_machine[mk] += n_rows
-                tel.comm_bytes += tx_bytes
-                tel.cross_shard_rows += n_rows
-                for i in range(l + 1):
-                    pos_mask[i, gverts[:, i]] = True
+                self._account_rows(sid, l, qv,
+                                   shard.global_ids[verts_of[sid]],
+                                   masks, probe_ms[sid], machine_ms,
+                                   rows_by_machine, qid, tel, pos_mask)
             for i, qvi in enumerate(qv):
                 masks[qvi] &= pos_mask[i]
                 if not masks[qvi].any():
                     alive = False
             tel.paths_executed += 1
 
+        return self._finish_query(query, key, tel, masks, alive,
+                                  machine_ms, rows_by_machine, plan_ms)
+
+    # -------------------------------------------------------------- #
+    # shared per-query execution pieces.  The serial probe paths and
+    # megabatch consume BOTH run these — the megabatch bit-identity
+    # contract depends on them staying single-sourced.
+    # -------------------------------------------------------------- #
+    def _initial_masks(self, query: LabeledGraph) -> list[np.ndarray]:
+        """Per-query-vertex label + degree candidate masks over n_d."""
+        deg_d, deg_q = self.graph.degrees, query.degrees
+        return [(self.graph.labels == query.labels[v])
+                & (deg_d >= deg_q[v]) for v in range(query.n_vertices)]
+
+    def _cache_lookup(self, key, tel: QueryTelemetry):
+        """Cache access at query start; returns the hit or None."""
+        if not self.use_cache:
+            return None
+        res = self.cache.access(key, self._slave_store)
+        tel.latency_ms += res.latency_ms
+        if res.data is None:
+            return None
+        tel.cache_hits = 1
+        tel.n_matches = len(res.data)
+        self._observe_cache(key, hit=True, matched=bool(res.data),
+                            latency_ms=tel.latency_ms)
+        return list(res.data)
+
+    def _cache_peek(self, key) -> bool:
+        """Read-only: would `cache.access` return data right now?
+
+        No LRU / statistics mutation — megabatch dispatch uses it to
+        skip speculative probe packing for queries the consume-time
+        (authoritative, mutating) lookup will serve from cache.
+        """
+        return self.use_cache and self.cache.peek(key, self._slave_store)
+
+    def _account_rows(self, sid: int, l: int, qv, gverts, masks,
+                      probe_ms: float, machine_ms, rows_by_machine,
+                      qid: int, tel: QueryTelemetry, pos_mask) -> None:
+        """One probed shard's running-mask filter + comm/CPU accounting.
+
+        ``gverts`` are the shard's raw (or in-kernel pre-filtered)
+        candidate rows as GLOBAL vertex ids aligned to query path `qv`;
+        only rows surviving the running masks count as network traffic.
+        """
+        mk = self.routing[sid]
+        service_ms = probe_ms / self.cpu_w[mk]
+        if gverts.shape[0]:
+            ok = np.ones(gverts.shape[0], dtype=bool)
+            for i in range(l + 1):
+                ok &= masks[qv[i]][gverts[:, i]]
+            gverts = gverts[ok]
+        n_rows = int(gverts.shape[0])
+        tx_bytes = n_rows * ROW_BYTES_PER_VERTEX * (l + 1)
+        machine_ms[mk] += service_ms
+        self._cpu[sid] += service_ms
+        self._comm[sid] += tx_bytes
+        if n_rows:
+            self._touch[sid].add(qid)
+            rows_by_machine[mk] += n_rows
+        tel.comm_bytes += tx_bytes
+        tel.cross_shard_rows += n_rows
+        for i in range(l + 1):
+            pos_mask[i, gverts[:, i]] = True
+
+    def _finish_query(self, query: LabeledGraph, key,
+                      tel: QueryTelemetry, masks, alive: bool,
+                      machine_ms, rows_by_machine, plan_ms: float
+                      ) -> tuple[list[tuple], QueryTelemetry]:
+        """Join + latency attribution + cache homing/admission.
+
+        Homing rule: the cached result lands on the LIVE machine that
+        produced the most candidate rows; never onto a dead machine (a
+        query that probed nothing must not default to machine 0 if 0 is
+        dead).  With no live machine at all there is nowhere to cache:
+        home is None and admission is skipped.
+        """
         t_join = time.perf_counter()
         matches = backtrack_join(query, self.graph, masks) if alive else []
         join_ms = (time.perf_counter() - t_join) * 1e3
@@ -552,12 +635,6 @@ class DistributedGNNPE:
         comm_ms = tel.comm_bytes / LINK_BYTES_PER_MS
         tel.latency_ms += (max(machine_ms.values(), default=0.0)
                            + comm_ms + plan_ms + join_ms + 0.05)
-
-        # home the cached result on the LIVE machine that produced the
-        # most candidate rows; never onto a dead machine (a query that
-        # probed nothing must not default to machine 0 if 0 is dead).
-        # With no live machine at all there is nowhere to cache: home is
-        # None and admission is skipped.
         live_rows = {k: v for k, v in rows_by_machine.items()
                      if k not in self.dead_machines}
         if live_rows:
@@ -570,6 +647,44 @@ class DistributedGNNPE:
                             latency_ms=tel.latency_ms,
                             result=matches, slave_id=home)
         return matches, tel
+
+    # -------------------------------------------------------------- #
+    def _plan_artifacts(self, query: LabeledGraph, key, plan_mode: str,
+                        tel: QueryTelemetry):
+        """(tables, q_embs, order) for a query, memoized on `key`.
+
+        Path decomposition, path embeddings and ranked orders are pure
+        in (query, params, pe_model) — all fixed after build — so
+        repeated query shapes skip paths_of_query + embed_query_paths
+        entirely; `tel.plan_cache_hits` counts the reuse.  Orders are
+        cached per plan_mode inside the entry.
+        """
+        ent = self._plan_lru.get(key)
+        if ent is None:
+            tables = paths_of_query(query, self.max_path_length)
+            q_embs = [embed_query_paths(query, self.params, self.cfg, t)
+                      for t in tables]
+            ent = {"tables": tables, "q_embs": q_embs, "orders": {}}
+            self._plan_lru[key] = ent
+            while len(self._plan_lru) > PLAN_LRU_SIZE:
+                self._plan_lru.popitem(last=False)
+        else:
+            self._plan_lru.move_to_end(key)
+            tel.plan_cache_hits += 1
+        order = ent["orders"].get(plan_mode)
+        if order is None:
+            if plan_mode == "pescore":
+                order = rank_query_plan(
+                    query, self.pe_model,
+                    max_path_length=self.max_path_length,
+                    tables=ent["tables"]).order
+            elif plan_mode == "degree":
+                order = degree_based_plan(query, tables=ent["tables"]).order
+            else:
+                order = [(ti, r) for ti, t in enumerate(ent["tables"])
+                         for r in range(t.n_paths)]
+            ent["orders"][plan_mode] = order
+        return ent["tables"], ent["q_embs"], order
 
     # -------------------------------------------------------------- #
     def _plan_probe(self, tables, order, q_embs, tel: QueryTelemetry):
@@ -634,8 +749,219 @@ class DistributedGNNPE:
                              slave_id=slave_id,
                              hit_rate=self.cache.hit_rate,
                              latency_ms=latency_ms)
-        if self.aw.should_train(self.cache.hit_rate):
+        if self._defer_aw:
+            # epoch-batched Algorithm-5: record the training signal; one
+            # update is applied at the end of the run_workload epoch
+            self._aw_pending.append((self.cache.hit_rate, latency_ms))
+        elif self.aw.should_train(self.cache.hit_rate):
             self.aw.train_once(self.cache.hit_rate, latency_ms)
+
+    # ------------------------------------------------------------------ #
+    # megabatch execution (multi-query fused probe launches)
+    # ------------------------------------------------------------------ #
+    def query_batch(self, queries: list[LabeledGraph],
+                    plan_mode: str = "pescore"
+                    ) -> list[tuple[list[tuple], QueryTelemetry]]:
+        """Execute B queries with ONE fused multi-query probe launch.
+
+        All (path, orientation) rows of every query plan in the batch are
+        packed per length and probed against the device-resident shard
+        planes in a single leaf-dominance launch whose readback is
+        pre-filtered in-kernel by each query's label/degree candidate
+        masks (shipped as a packed bit operand).  Joins then run
+        sequentially in stream order, so matches, per-query counters and
+        comm-byte accounting are bit-identical to calling `query(q,
+        probe_mode="plane")` per query; the launch and its host<->device
+        bytes are attributed to the batch's FIRST query.  If a migration
+        or failover replaced a shard index between dispatch and consume,
+        the whole batch transparently re-runs on the serial plane path.
+        """
+        return self._mb_consume(self._mb_dispatch(list(queries), plan_mode))
+
+    def _mb_dispatch(self, batch: list[LabeledGraph], plan_mode: str) -> dict:
+        """Plan every query of a batch and launch the fused probe
+        WITHOUT blocking on it (JAX async dispatch): the returned flight
+        is consumed later, overlapping device probing with host work."""
+        items = []
+        for query in batch:
+            tel = QueryTelemetry(plan_mode=plan_mode, probe_mode="plane",
+                                 device_probe=True, batch_size=len(batch))
+            key = (query.n_vertices, query.labels.tobytes(),
+                   query.edge_list.tobytes())
+            if self._cache_peek(key):
+                # consume's (authoritative) lookup will serve this from
+                # cache: skip planning and probe packing entirely.  If
+                # the entry is evicted before consume, _consume_query
+                # falls back to the serial plane path.
+                items.append(dict(query=query, key=key, tel=tel,
+                                  peeked=True, order=[], alive=False,
+                                  masks0=[], plan_ms=0.0, qrow_of={}))
+                continue
+            t0 = time.perf_counter()
+            tables, q_embs, order = self._plan_artifacts(query, key,
+                                                         plan_mode, tel)
+            plan_ms = (time.perf_counter() - t0) * 1e3
+            masks0 = self._initial_masks(query)
+            items.append(dict(query=query, key=key, tel=tel, tables=tables,
+                              q_embs=q_embs, order=order, masks0=masks0,
+                              alive=all(m.any() for m in masks0),
+                              plan_ms=plan_ms, qrow_of={}, peeked=False))
+
+        entries = []
+        for sid in sorted(self.shards):
+            for l, tree in sorted(self.shards[sid].index.trees.items()):
+                if tree is not None and tree.n_points:
+                    entries.append((sid, l, tree))
+        flight, h2d = None, 0
+        if entries and any(it["alive"] and it["order"] for it in items):
+            def gverts_fn(sid, l, tree):
+                shard = self.shards[sid]
+                return shard.global_ids[
+                    shard.index.embedded[l].vertices[tree.perm]]
+            h2d0 = self.planes.stats["h2d_bytes"]
+            assembly = self.planes.mega_assemble(entries, gverts_fn)
+            # the shared packed-mask operand: one bit row per (query,
+            # query-vertex); reversed-orientation rows index the same
+            # bits with their positions reversed
+            n_d = self.graph.n_vertices
+            w = -(-n_d // 32)
+            bases, all_masks = [], []
+            for it in items:
+                bases.append(len(all_masks))
+                all_masks.extend(it["masks0"])
+            arr = np.stack(all_masks)
+            by = np.packbits(arr, axis=1, bitorder="little")
+            words = np.zeros((arr.shape[0], w * 4), np.uint8)
+            words[:, :by.shape[1]] = by
+            mask_bits = words.view(np.uint32)
+            qmat: dict[int, list] = defaultdict(list)
+            mask_rows: dict[int, list] = defaultdict(list)
+            for qi, it in enumerate(items):
+                if not (it["alive"] and it["order"]):
+                    continue
+                for ti, r in it["order"]:
+                    table = it["tables"][ti]
+                    l = table.length
+                    if l not in assembly.blocks:
+                        continue
+                    qe = it["q_embs"][ti][r]
+                    rows = bases[qi] + table.vertices[r].astype(np.int32)
+                    it["qrow_of"][(ti, r)] = len(qmat[l])
+                    qmat[l].append(qe)
+                    mask_rows[l].append(rows)
+                    qmat[l].append(_reverse_embedding(qe[None, :],
+                                                      l + 1)[0])
+                    mask_rows[l].append(rows[::-1])
+            if qmat:
+                flight = self.planes.mega_dispatch(
+                    assembly,
+                    {l: np.stack(v) for l, v in qmat.items()},
+                    {l: np.stack(v) for l, v in mask_rows.items()},
+                    mask_bits)
+            h2d = self.planes.stats["h2d_bytes"] - h2d0
+        return {"items": items, "flight": flight, "plan_mode": plan_mode,
+                "h2d_bytes": h2d}
+
+    def _mb_consume(self, mb: dict
+                    ) -> list[tuple[list[tuple], QueryTelemetry]]:
+        """Read back a dispatched megabatch and finish every query in
+        stream order (cache access, running-mask filtering, comm
+        accounting, join, cache admission — the exact serial sequence)."""
+        items, flight = mb["items"], mb["flight"]
+        if flight is not None and flight.launches:
+            live = {(sid, l): tree
+                    for sid, shard in self.shards.items()
+                    for l, tree in shard.index.trees.items()}
+            if flight.assembly.stale(live):
+                # an index moved under the dispatched launch (migration /
+                # failover mid-batch): the serial plane path repacks and
+                # returns bit-identical results
+                return [self.query(it["query"], plan_mode=mb["plan_mode"],
+                                   probe_mode="plane") for it in items]
+        res = None
+        d2h, h2d_sel = 0, 0
+        if flight is not None and flight.launches:
+            h2d0 = self.planes.stats["h2d_bytes"]
+            res = self.planes.mega_readback(flight)
+            d2h = res.d2h_bytes
+            h2d_sel = self.planes.stats["h2d_bytes"] - h2d0
+        out = []
+        for i, it in enumerate(items):
+            matches, tel = self._consume_query(it, res)
+            if i == 0:
+                # batch-attribution rule: the fused launch, the gather
+                # launch and all their bytes land on the FIRST query
+                tel.probe_launches += res.launches if res else 0
+                tel.probe_h2d_bytes += mb["h2d_bytes"] + h2d_sel
+                tel.probe_d2h_bytes += d2h
+            out.append((matches, tel))
+        return out
+
+    def _consume_query(self, it: dict, res
+                       ) -> tuple[list[tuple], QueryTelemetry]:
+        """One query's post-probe execution, bit-identical to `query`."""
+        query, key, tel = it["query"], it["key"], it["tel"]
+        self._qclock += 1.0
+        cached = self._cache_lookup(key, tel)
+        if cached is not None:
+            return cached, tel
+        if it["peeked"]:
+            # the cached entry vanished between dispatch and consume
+            # (eviction race): nothing was packed for this query, so it
+            # re-enters the serial plane body on this same cache miss
+            return self._execute_serial(query, key, tel, tel.plan_mode,
+                                        "plane")
+        tables, q_embs = it["tables"], it["q_embs"]
+        masks = [m.copy() for m in it["masks0"]]
+        alive = it["alive"]
+        n_d = self.graph.n_vertices
+        machine_ms: dict[int, float] = defaultdict(float)
+        qid = int(self._qclock)
+        rows_by_machine: dict[int, int] = defaultdict(int)
+        eps = 1e-5
+        for ti, r in it["order"]:
+            if not alive:
+                tel.paths_skipped += 1
+                continue
+            table = tables[ti]
+            l = table.length
+            qv = table.vertices[r]
+            pos_mask = np.zeros((l + 1, n_d), dtype=bool)
+            blk = res.assembly.blocks.get(l) if res is not None else None
+            qrow = it["qrow_of"].get((ti, r))
+            if blk is not None and qrow is not None:
+                qe = q_embs[ti][r]
+                q_rev = _reverse_embedding(qe[None, :], l + 1)[0]
+                # vectorized root-MBR skip: same per-shard predicate the
+                # serial loop evaluates one tree at a time
+                skip = ((qe[None, :] > blk.up_max + eps).any(axis=1)
+                        & (q_rev[None, :] > blk.up_max + eps).any(axis=1))
+                tel.shards_skipped += int(skip.sum())
+                for s_i, sid in enumerate(blk.sids):
+                    if skip[s_i]:
+                        continue
+                    ids_f = res.candidates(l, sid, qrow)
+                    ids_r = res.candidates(l, sid, qrow + 1)
+                    # rows arrive pre-filtered by the INITIAL label/
+                    # degree masks (in-kernel); the running masks are a
+                    # subset, so re-filtering the smaller set yields
+                    # exactly the serial survivors and comm bytes
+                    gv = np.concatenate(
+                        [blk.gverts_host[s_i][ids_f],
+                         blk.gverts_host[s_i][ids_r][:, ::-1]])
+                    self._account_rows(
+                        sid, l, qv, gv, masks,
+                        float(blk.n_points[s_i]) * VIRTUAL_MS_PER_LEAF,
+                        machine_ms, rows_by_machine, qid, tel, pos_mask)
+            for i, qvi in enumerate(qv):
+                masks[qvi] &= pos_mask[i]
+                if not masks[qvi].any():
+                    alive = False
+            tel.paths_executed += 1
+
+        return self._finish_query(query, key, tel, masks, alive,
+                                  machine_ms, rows_by_machine,
+                                  it["plan_ms"])
 
     # ------------------------------------------------------------------ #
     # workload loop + balancing
@@ -643,8 +969,24 @@ class DistributedGNNPE:
     def run_workload(self, queries: list[LabeledGraph],
                      rebalance: bool = False,
                      corrupt_prob: float = 0.0,
-                     plan_mode: str = "pescore") -> list[QueryTelemetry]:
+                     plan_mode: str = "pescore",
+                     batch_size: int | None = None,
+                     probe_mode: str | None = None,
+                     cache_update_mode: str = "epoch"
+                     ) -> list[QueryTelemetry]:
         """Execute a query stream (one epoch); optionally rebalance.
+
+        batch_size=B (with the plane probe path) enables MEGABATCH
+        execution: B-query fused probe launches, pipelined so batch
+        k+1's launch runs on device while the host joins batch k.
+        Results and deterministic per-query counters are bit-identical
+        to the serial path; launches/bytes are attributed to each
+        batch's first query.
+
+        cache_update_mode="epoch" (default) batches AW-ResNet cache-
+        policy training: rewards accumulate during the epoch and at most
+        ONE Algorithm-5 update is applied at its end ("per_query"
+        restores the legacy train-inside-the-stream schedule).
 
         The rebalance clock advances EPOCH_VIRTUAL_S virtual seconds per
         epoch — see the constant's docstring; the anti-thrash boost in
@@ -654,7 +996,37 @@ class DistributedGNNPE:
         self._cpu.clear()
         self._comm.clear()
         self._touch.clear()
-        tels = [self.query(q, plan_mode=plan_mode)[1] for q in queries]
+        if cache_update_mode not in ("epoch", "per_query"):
+            raise ValueError(f"unknown cache_update_mode "
+                             f"{cache_update_mode!r}")
+        self._defer_aw = cache_update_mode == "epoch"
+        self._aw_pending = []
+        resolved = probe_mode if probe_mode is not None else self.probe_mode
+        try:
+            if batch_size and batch_size > 1 and resolved == "plane":
+                tels: list[QueryTelemetry] = []
+                chunks = [queries[i:i + batch_size]
+                          for i in range(0, len(queries), batch_size)]
+                mb = (self._mb_dispatch(chunks[0], plan_mode)
+                      if chunks else None)
+                for k in range(len(chunks)):
+                    # pipeline: launch batch k+1 before joining batch k
+                    nxt = (self._mb_dispatch(chunks[k + 1], plan_mode)
+                           if k + 1 < len(chunks) else None)
+                    tels.extend(t for _, t in self._mb_consume(mb))
+                    mb = nxt
+            else:
+                tels = [self.query(q, plan_mode=plan_mode,
+                                   probe_mode=probe_mode)[1]
+                        for q in queries]
+            if self._aw_pending:
+                hit_rate = self._aw_pending[-1][0]
+                latency = float(np.mean([l for _, l in self._aw_pending]))
+                if self.aw.should_train(hit_rate):
+                    self.aw.train_once(hit_rate, latency)
+                self._aw_pending = []
+        finally:
+            self._defer_aw = False
         self._epoch += 1
 
         tele = self._refresh_loads()

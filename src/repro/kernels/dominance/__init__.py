@@ -1,12 +1,22 @@
-from repro.kernels.dominance.ops import (DEPTH_BUCKET, QUERY_BUCKET,
-                                         ROW_BUCKET, SHARD_BUCKET,
+from repro.kernels.dominance.ops import (DEPTH_BUCKET, LANE_BUCKET,
+                                         QUERY_BUCKET, ROW_BUCKET,
+                                         SHARD_BUCKET,
                                          batched_dominance_mask,
-                                         dominance_mask, fused_plan_descent)
+                                         dominance_mask, fused_plan_descent,
+                                         gather_pack_lanes_jit,
+                                         megabatch_leaf_probe,
+                                         readback_id_dtype)
 from repro.kernels.dominance.ref import (dominance_mask_3d_ref,
                                          dominance_mask_ref,
+                                         megabatch_leaf_probe_ref,
+                                         packed_mask_pass_ref,
                                          survivor_propagation_ref)
 
 __all__ = ["dominance_mask", "dominance_mask_ref",
            "batched_dominance_mask", "dominance_mask_3d_ref",
            "fused_plan_descent", "survivor_propagation_ref",
-           "SHARD_BUCKET", "ROW_BUCKET", "QUERY_BUCKET", "DEPTH_BUCKET"]
+           "megabatch_leaf_probe", "megabatch_leaf_probe_ref",
+           "packed_mask_pass_ref", "gather_pack_lanes_jit",
+           "readback_id_dtype",
+           "SHARD_BUCKET", "ROW_BUCKET", "QUERY_BUCKET", "DEPTH_BUCKET",
+           "LANE_BUCKET"]

@@ -22,6 +22,8 @@ from repro.kernels.dominance.kernel import (dominance_pallas,
                                             dominance_pallas_3d)
 from repro.kernels.dominance.ref import (dominance_mask_3d_ref,
                                          dominance_mask_ref,
+                                         megabatch_leaf_probe_ref,
+                                         packed_mask_pass_ref,
                                          survivor_propagation_ref)
 
 # Slab-shape buckets.  The probed shard set, row counts, query-plan size
@@ -37,11 +39,44 @@ SHARD_BUCKET = 8
 ROW_BUCKET = 256
 QUERY_BUCKET = 8
 DEPTH_BUCKET = 4
+# megabatch: candidate-bearing (plane, query-row) lanes gathered by the
+# second stage are padded to this bucket, and the packed-bit readback
+# width is the row bucket (ROW_BUCKET is a multiple of 8, so the packed
+# byte axis is always exact)
+LANE_BUCKET = 64
+# megabatch query rows per length vary with every batch's plan mix, so
+# past QUERY_BUCKET * 4 rows they bucket much coarser: at B=16 a batch
+# packs hundreds of rows, so 64-row steps cap the padded compute at
+# ~15% while bounding distinct compiled shapes to a handful per length
+# block.  Small batches (B=1..2) keep the fine bucket so their counts
+# readback stays below the serial plane path's.
+MEGA_QUERY_BUCKET = 64
+
+
+def mega_query_bucket(n_rows: int) -> int:
+    """Bucketed megabatch query-row count: fine steps while small,
+    MEGA_QUERY_BUCKET steps beyond QUERY_BUCKET * 4 rows."""
+    if n_rows <= 4 * QUERY_BUCKET:
+        return bucket(n_rows, QUERY_BUCKET)
+    return bucket(n_rows, MEGA_QUERY_BUCKET)
 
 
 def bucket(n: int, b: int) -> int:
     """Round n up to a multiple of bucket size b (0 stays 0)."""
     return -(-n // b) * b
+
+
+def readback_id_dtype(n_rows: int):
+    """Smallest id dtype whose range holds every slab row id AND the
+    sentinel value ``n_rows`` used for non-candidates.
+
+    int16 halves the candidate-id readback, but is only safe while the
+    sentinel fits: n_rows <= int16 max (32767).  Row counts are bucketed
+    (ROW_BUCKET multiples), so the first unsafe slab is exactly 2**15
+    rows — callers must widen to int32 there, not overflow the sentinel
+    to -32768 (regression-tested in tests/test_megabatch.py).
+    """
+    return jnp.int16 if n_rows < 2 ** 15 else jnp.int32
 
 
 def dominance_mask(queries: jnp.ndarray, boxes: jnp.ndarray,
@@ -132,9 +167,9 @@ def fused_plan_descent_jit(queries: jnp.ndarray, slab: jnp.ndarray,
     # sentinel r, so the leading n_cand VALUES are the candidate rows in
     # ascending order — exactly the host flatnonzero order.  Sorting the
     # id values directly (not argsort) is ~7x faster, and int16 ids
-    # halve the readback whenever the row axis fits (it always does
-    # under ROW_BUCKET-padded shard trees).
-    id_dtype = jnp.int16 if r < 2 ** 15 else jnp.int32
+    # halve the readback whenever the sentinel fits the dtype (see
+    # readback_id_dtype for the 2**15 widening boundary).
+    id_dtype = readback_id_dtype(r)
     row_ids = jnp.arange(r, dtype=id_dtype)[None, None, :]
     order = jnp.sort(jnp.where(final, row_ids, id_dtype(r)), axis=-1)
     return n_cand, order, nodes_visited, nodes_pruned, leaves_tested
@@ -149,3 +184,90 @@ def fused_plan_descent(queries, slab, counts, parent, is_root, internal,
     return fused_plan_descent_jit(queries, slab, counts, parent, is_root,
                                   internal, leaf, pair_valid, eps=eps,
                                   n_iter=n_iter, use_pallas=use_pallas)
+
+
+# --------------------------------------------------------------------------- #
+# megabatch workload launches (multi-query fused probe, PR 4)
+# --------------------------------------------------------------------------- #
+
+@functools.partial(jax.jit, static_argnames=("eps", "use_pallas"))
+def megabatch_leaf_probe_jit(blocks: tuple, mask_bits: jnp.ndarray,
+                             *, eps: float, use_pallas: bool) -> tuple:
+    """ONE launch probing every query row of B query plans at once.
+
+    ``blocks`` holds one entry per path length in the megabatch —
+    ``(queries [Q_l, D_l], leaves [S_l, N_l, D_l], counts [S_l],
+    gverts [S_l, N_l, l+1], mask_rows [Q_l, l+1])`` — and ``mask_bits``
+    is the shared ``[B * V_max, W]`` packed candidate-mask operand
+    derived from each query's per-vertex label/degree masks.  Splitting
+    the slab per length (instead of one dense -inf-padded slab with a
+    pair_valid gate) removes the cross-length compute waste: each block
+    only compares rows of its own length and width.
+
+    Leaf-only slabs are sufficient for candidates: the aR-tree dominance
+    certificate guarantees an ancestor box can never fail for a passing
+    leaf, so the whole-tree descent reduces to the leaf's own box test
+    (the propagation/counters of `fused_plan_descent` are a traversal
+    diagnostic the megabatch path does not ship).
+
+    Returns one ``(final [S_l, Q_l, N_l] bool device-resident, n_cand
+    [S_l, Q_l] int32)`` pair per block.  Only the counts are meant to
+    cross back; candidate ids ship via `gather_pack_lanes` on the
+    candidate-bearing lanes only.
+    """
+    out = []
+    for queries, leaves, counts, gverts, mask_rows in blocks:
+        if use_pallas:
+            ok = dominance_pallas_3d(
+                queries, leaves, eps,
+                interpret=jax.default_backend() != "tpu").astype(bool)
+            n = leaves.shape[1]
+            valid = jnp.arange(n)[None, None, :] < counts[:, None, None]
+            final = (ok & valid
+                     & packed_mask_pass_ref(gverts, mask_rows, mask_bits))
+            out.append((final, final.sum(-1, dtype=jnp.int32)))
+        else:
+            out.append(megabatch_leaf_probe_ref(
+                queries, leaves, counts, gverts, mask_rows, mask_bits,
+                eps=eps))
+    return tuple(out)
+
+
+def megabatch_leaf_probe(blocks, mask_bits, eps: float = 1e-5,
+                         use_pallas: bool | None = None) -> tuple:
+    """See `megabatch_leaf_probe_jit`; resolves use_pallas=None by backend."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    return megabatch_leaf_probe_jit(tuple(tuple(b) for b in blocks),
+                                    mask_bits, eps=eps,
+                                    use_pallas=use_pallas)
+
+
+@jax.jit
+def gather_pack_lanes_jit(finals: tuple, lane_s: tuple, lane_q: tuple
+                          ) -> jnp.ndarray:
+    """Gather candidate-bearing (plane, query-row) lanes and bit-pack.
+
+    ``finals`` are the device-resident per-length masks from
+    `megabatch_leaf_probe`; ``lane_s[k]`` / ``lane_q[k]`` (int32,
+    LANE_BUCKET-padded — pads repeat lane 0 and are dropped on the host)
+    select the lanes of block k whose candidate count is nonzero.  Each
+    gathered lane is packed 8 leaf rows per byte (little bit order, so
+    ``np.unpackbits(..., bitorder="little")`` restores ascending leaf
+    ids) and every block is padded to the widest block's byte width.
+
+    The readback therefore scales with the number of lanes that HAVE
+    candidates, never with S * Q * N — this plus the in-kernel mask
+    filter is what ships megabatch candidate rows pre-filtered.
+    """
+    n_max = max(int(f.shape[2]) for f in finals)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))[None, None, :]
+    packed = []
+    for f, ls, lq in zip(finals, lane_s, lane_q):
+        rows = f[ls, lq]                                   # [K_b, N_l]
+        k_b, n_l = rows.shape
+        if n_l < n_max:
+            rows = jnp.pad(rows, ((0, 0), (0, n_max - n_l)))
+        by = rows.reshape(k_b, n_max // 8, 8).astype(jnp.uint8)
+        packed.append((by * weights).sum(-1).astype(jnp.uint8))
+    return jnp.concatenate(packed, axis=0)

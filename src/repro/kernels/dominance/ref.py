@@ -23,6 +23,65 @@ def dominance_mask_3d_ref(queries: jnp.ndarray, boxes: jnp.ndarray,
     return ok.astype(jnp.int8)
 
 
+def packed_mask_pass_ref(gverts: jnp.ndarray, mask_rows: jnp.ndarray,
+                         mask_bits: jnp.ndarray) -> jnp.ndarray:
+    """In-kernel candidate-mask filter over packed per-query vertex masks.
+
+    gverts    [S, N, P] int32  global data-vertex id at each position of
+                               every leaf path (pad rows/planes hold 0).
+    mask_rows [Q, P]    int32  row of `mask_bits` holding the candidate
+                               mask for the query vertex each position of
+                               query row q must match (reversed-orientation
+                               rows simply carry their positions reversed).
+    mask_bits [M, W]    uint32 bit-packed masks: bit (v & 31) of word
+                               [m, v >> 5] is mask m at data vertex v.
+
+    Returns bool [S, Q, N]: True iff every position's data vertex passes
+    its query vertex's mask — the same AND the host loop computes one
+    (path, shard) pair at a time from the dense [V, n_d] masks.
+    """
+    s, n, p = gverts.shape
+    w = mask_bits.shape[1]
+    flat = mask_bits.reshape(-1)                     # [M * W]
+    pass_all = None
+    for i in range(p):
+        gv = gverts[:, :, i]                         # [S, N]
+        rows = mask_rows[:, i]                       # [Q]
+        idx = rows[None, :, None] * w + (gv[:, None, :] >> 5)
+        word = jnp.take(flat, idx, axis=0)           # [S, Q, N]
+        bit = (word >> (gv[:, None, :] & 31).astype(jnp.uint32)) & 1
+        hit = bit.astype(bool)
+        pass_all = hit if pass_all is None else pass_all & hit
+    return pass_all
+
+
+def megabatch_leaf_probe_ref(queries: jnp.ndarray, leaves: jnp.ndarray,
+                             counts: jnp.ndarray, gverts: jnp.ndarray,
+                             mask_rows: jnp.ndarray, mask_bits: jnp.ndarray,
+                             eps: float = 1e-5
+                             ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One length-block of the megabatch probe: leaf dominance + mask.
+
+    By the aR-tree's zero-false-dismissal property a leaf passes the whole
+    root-to-leaf descent iff it passes its OWN box test (every ancestor
+    upper bound dominates the leaf point), so the megabatch path never
+    materializes internal rows or runs survivor propagation: candidates
+    are exactly ``dominated & mask_pass`` over the leaf slab.
+
+    queries [Q, D] (+inf pad rows match nothing), leaves [S, N, D] packed
+    leaf points (-inf pad rows match nothing), counts [S] valid leaves,
+    gverts/mask_rows/mask_bits as in `packed_mask_pass_ref`.
+
+    Returns (final [S, Q, N] bool, n_cand [S, Q] int32).
+    """
+    ok = jnp.all(queries[None, :, None, :] <= leaves[:, None, :, :] + eps,
+                 axis=-1)
+    n = leaves.shape[1]
+    valid = jnp.arange(n)[None, None, :] < counts[:, None, None]
+    final = ok & valid & packed_mask_pass_ref(gverts, mask_rows, mask_bits)
+    return final, final.sum(-1, dtype=jnp.int32)
+
+
 def survivor_propagation_ref(ok: jnp.ndarray, parent: jnp.ndarray,
                              is_root: jnp.ndarray, n_iter: int
                              ) -> tuple[jnp.ndarray, jnp.ndarray]:
