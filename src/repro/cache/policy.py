@@ -106,18 +106,30 @@ class ValueCache:
 
     # -------------------------------------------------------------- #
     def maybe_evict(self, hit_rate: float, latency_ms: float) -> int:
-        """Algorithm 4. Returns number of evicted entries."""
+        """Algorithm 4. Returns number of evicted entries.
+
+        ``self.store`` is the single source of truth throughout: tier
+        classification, the normal-tier sweep, and the hard-capacity
+        loop all iterate over store keys (reading V via ``value.get``
+        with a 0.0 default).  Keying any loop on ``self.value`` instead
+        used to spin forever / raise on an empty ``min()`` whenever the
+        two maps diverged (a store key missing from value, or vice
+        versa) — utilization is defined over the store, so only store
+        drops can ever make progress.
+        """
         t_up = dynamic_trigger(hit_rate, latency_ms)
         if self.utilization() <= t_up:
             return 0
         t_low = t_up - 0.1
-        max_v = max(self.value.values(), default=0.0)
+        max_v = max((self.value.get(k, 0.0) for k in self.store),
+                    default=0.0)
         top50 = set(sorted(self.freq, key=lambda k: -self.freq[k])[:50])
-        protected, normal, evictable = [], [], []
-        for k, v in self.value.items():
+        normal, evictable = [], []
+        for k in self.store:
+            v = self.value.get(k, 0.0)
             if v >= 0.5 * max_v and (k in top50
                                      or self.avg_deg.get(k, 0.0) >= self.theta_d):
-                protected.append(k)
+                continue                    # protected
             elif v >= 0.2 * max_v:
                 normal.append(k)
             else:
@@ -134,7 +146,7 @@ class ValueCache:
             i += 1
         # pathological: everything protected but still over hard capacity
         while len(self.store) > self.capacity:
-            k = min(self.value, key=self.value.get)
+            k = min(self.store, key=lambda k: self.value.get(k, 0.0))
             self._drop(k)
             n_evicted += 1
         self.evictions += n_evicted
@@ -169,50 +181,67 @@ class TwoLevelCache:
         self.location: dict[Hashable, int] = {}
         self.cross_node_accesses = 0
         self.total_accesses = 0
+        self.serves = 0             # accesses that returned data (any tier)
 
     def register(self, key: Hashable, slave_id: int) -> None:
         self.location[key] = slave_id
 
     # -------------------------------------------------------------- #
     def peek(self, key: Hashable,
-             slave_data: dict[int, dict[Hashable, Any]]) -> bool:
+             slave_data: dict[int, dict[Hashable, Any]],
+             dead: "set[int] | frozenset[int]" = frozenset()) -> bool:
         """Read-only twin of `access`: True iff it would return data.
 
         Touches no LRU order and no hit/miss statistics — callers that
         only need to know whether a key is servable (e.g. megabatch
         dispatch deciding what to pack speculatively) must not perturb
         the cache state the authoritative access sequence will replay.
-        Keep the tier order in lockstep with `access` below.
+        Keep the tier order — including the dead-machine gate — in
+        lockstep with `access` below: a divergence means dispatch skips
+        packing for a query the consume step then cannot serve.
         """
         if self.master.get(key, peek=True) is not None:
             return True
         sid = self.location.get(key)
-        if sid is None:
+        if sid is None or sid in dead:
             return False
         if self.slaves[sid].get(key, peek=True) is not None:
             return True
         return key in slave_data.get(sid, {})
 
     def access(self, key: Hashable, slave_data: dict[int, dict[Hashable, Any]],
+               dead: "set[int] | frozenset[int]" = frozenset()
                ) -> AccessResult:
-        """Algorithm 3: strict priority access."""
+        """Algorithm 3: strict priority access.
+
+        ``dead`` holds unreachable slave ids: a key whose owning slave
+        is dead cannot be fetched (neither its slave cache nor its
+        memory tier exists anymore), so the lookup stops at the master
+        memory index — the master cache (tier 1) still serves, since it
+        lives on the master node.
+        """
         self.total_accesses += 1
         # Step 1: master cache
         d = self.master.get(key)
         if d is not None:
+            self.serves += 1
             return AccessResult(d, "master_cache", LAT_MASTER_CACHE, False)
         # Step 2: master memory index
         if key not in self.location:
             return AccessResult(None, "not_found", LAT_MASTER_MEMORY, False)
         sid = self.location[key]
+        if sid in dead:             # owner unreachable: nothing to fetch
+            return AccessResult(None, "not_found", LAT_MASTER_MEMORY, False)
         self.cross_node_accesses += 1
         # Step 3: slave cache
         d = self.slaves[sid].get(key)
         if d is not None:
+            self.serves += 1
             return AccessResult(d, "slave_cache", LAT_SLAVE_CACHE, True)
         # Step 4: slave memory (full path storage)
         store = slave_data.get(sid, {})
         if key in store:
+            self.serves += 1
             return AccessResult(store[key], "slave_memory", LAT_SLAVE_MEMORY,
                                 True)
         return AccessResult(None, "not_found", LAT_SLAVE_MEMORY, True)
@@ -228,10 +257,32 @@ class TwoLevelCache:
 
     @property
     def hit_rate(self) -> float:
-        h = self.master.hits + sum(s.hits for s in self.slaves)
-        m = self.master.misses
+        """Fraction of accesses SERVED: data returned from ANY tier.
+
+        A hit is an access the hierarchy satisfied without re-executing
+        the query — master cache, slave cache, OR slave memory (tier 4
+        of Algorithm 3 is still a serve: the path data exists and ships,
+        it just pays the memory latency).  This matches the engine,
+        whose `QueryTelemetry.cache_hits` flags every served lookup.
+        Only `not_found` accesses count as misses.
+        """
         t = self.total_accesses
-        return h / t if t else 0.0
+        return self.serves / t if t else 0.0
+
+    def purge(self, predicate) -> int:
+        """Drop every key matching ``predicate`` from all tiers (both
+        cache levels + the master memory index).  Used by the engine to
+        retire result keys from superseded index epochs; returns the
+        number of distinct keys removed."""
+        stale = [k for k in self.location if predicate(k)]
+        for k in stale:
+            del self.location[k]
+        removed = set(stale)
+        for vc in (self.master, *self.slaves):
+            for k in [k for k in vc.store if predicate(k)]:
+                vc._drop(k)
+                removed.add(k)
+        return len(removed)
 
 
 # --------------------------------------------------------------------------- #

@@ -24,8 +24,8 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["ARTree", "build_artree", "query_dominating", "query_stats",
-           "batched_query_dominating"]
+__all__ = ["ARTree", "build_artree", "reload_artree", "query_dominating",
+           "query_stats", "batched_query_dominating"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +131,23 @@ def build_artree(points: np.ndarray, branching: int = 16) -> ARTree:
         counts.append(cur_ct)
     lowers.reverse(); uppers.reverse(); counts.reverse()
     return ARTree(lowers, uppers, counts, pts, perm, branching)
+
+
+def reload_artree(old: ARTree | None, points: np.ndarray) -> ARTree:
+    """Bulk reload for the incremental update path.
+
+    Packed level-order aR-trees have no cheap in-place insert (children
+    of node i must stay exactly [i*B, (i+1)*B)), so index maintenance is
+    a BULK RELOAD of the touched tree from its refreshed point set —
+    R-tree folklore: bulk loading beats repeated insertion long before
+    the update batch reaches the leaf count.  The builder is the same
+    deterministic `build_artree`, so a reloaded tree is bit-identical to
+    a from-scratch build on the same embedding matrix (the property the
+    rebuild-equivalence test pins); `old` only carries the branching
+    factor forward.
+    """
+    branching = old.branching if old is not None else 16
+    return build_artree(points, branching=branching)
 
 
 def query_dominating(tree: ARTree, q: np.ndarray, eps: float = 1e-5

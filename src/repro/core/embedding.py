@@ -26,7 +26,7 @@ from repro.core.graph import LabeledGraph
 from repro.core.paths import PathTable, enumerate_paths
 
 __all__ = ["EmbeddedPaths", "embed_shard_paths", "train_dominance_gnn",
-           "dominates", "mine_negative_pairs"]
+           "dominates", "mine_negative_pairs", "splice_embedding_rows"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +55,44 @@ def dominates(q: jnp.ndarray, z: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
     matches (which satisfy <= exactly in exact arithmetic) are never lost.
     """
     return jnp.all(q[None, :] <= z + eps, axis=-1)
+
+
+def splice_embedding_rows(new_keys: list[bytes], clean_row: np.ndarray,
+                          old_keys: list[bytes],
+                          old_embeddings: np.ndarray, d: int,
+                          fresh_fn) -> tuple[np.ndarray, int]:
+    """Assemble a path-embedding matrix reusing clean rows from the
+    previous index epoch.
+
+    ``new_keys[i]`` identifies row i of the fresh canonical enumeration
+    (global-id byte keys from `paths.path_row_keys`); a row is REUSED
+    when ``clean_row[i]`` (no dirty vertex on the path) and the same key
+    existed in the old table — its old embedding row is bit-identical
+    to a recomputation because every input (the vertex embeddings of
+    its clean vertices, their labels, and the per-row interleave) is
+    unchanged.  All other rows are recomputed via ``fresh_fn(idx) ->
+    float32 [len(idx), d]``.  Returns (embeddings [P, d], n_reused).
+
+    This is the update path's entire embedding cost model: re-embed
+    ONLY paths through dirty vertices (plus genuinely new paths), never
+    the whole shard.
+    """
+    p = len(new_keys)
+    emb = np.empty((p, d), np.float32)
+    old_of = {k: i for i, k in enumerate(old_keys)}
+    fresh_idx = []
+    n_reused = 0
+    for i, key in enumerate(new_keys):
+        j = old_of.get(key) if clean_row[i] else None
+        if j is None:
+            fresh_idx.append(i)
+        else:
+            emb[i] = old_embeddings[j]
+            n_reused += 1
+    if fresh_idx:
+        idx = np.asarray(fresh_idx, np.int64)
+        emb[idx] = fresh_fn(idx)
+    return emb, n_reused
 
 
 # --------------------------------------------------------------------------- #

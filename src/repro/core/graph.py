@@ -12,7 +12,24 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-__all__ = ["LabeledGraph", "degree_stats", "power_law_exponent"]
+__all__ = ["LabeledGraph", "GraphDelta", "apply_graph_delta",
+           "degree_stats", "power_law_exponent"]
+
+
+def _canon_edges(edges: np.ndarray) -> np.ndarray:
+    """Canonical undirected edge set: u < v, unique, no self loops.
+
+    The ONE canonical form, shared by `LabeledGraph.from_edges` and
+    `apply_graph_delta`'s no-op detection — they must never diverge."""
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    u = np.minimum(edges[:, 0], edges[:, 1])
+    v = np.maximum(edges[:, 0], edges[:, 1])
+    keep = u != v
+    if not keep.all():
+        u, v = u[keep], v[keep]
+    if u.size == 0:
+        return np.zeros((0, 2), np.int64)
+    return np.unique(np.stack([u, v], axis=1), axis=0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,11 +62,7 @@ class LabeledGraph:
         if labels.shape[0] != n_vertices:
             raise ValueError("labels length must equal n_vertices")
         # canonicalize: undirected, no self loops, dedup, u < v
-        u = np.minimum(edges[:, 0], edges[:, 1])
-        v = np.maximum(edges[:, 0], edges[:, 1])
-        keep = u != v
-        u, v = u[keep], v[keep]
-        uniq = np.unique(np.stack([u, v], axis=1), axis=0)
+        uniq = _canon_edges(edges)
         if uniq.size and (uniq.min() < 0 or uniq.max() >= n_vertices):
             raise ValueError("edge endpoint out of range")
         # symmetric CSR
@@ -180,6 +193,128 @@ class LabeledGraph:
             int(m), 2
         ).copy()
         return LabeledGraph.from_edges(int(n), edges, labels)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphDelta:
+    """A streaming update batch against a LabeledGraph.
+
+    Semantics (global vertex ids are STABLE — the invariant every shard
+    index, owner rule, and cached embedding relies on):
+
+      * ``add_vertex_labels``: new vertices appended with ids
+        n .. n+k-1 and the given labels;
+      * ``del_vertices``: DETACH — all incident edges are removed and
+        the label is kept as a tombstone (a detached vertex can no
+        longer match any query vertex with degree >= 1, which is every
+        vertex of a connected query).  At the graph level a detached id
+        is just an isolated vertex; RETIREMENT across batches (no later
+        edge may re-attach it) is enforced by the engine
+        (`DistributedGNNPE.apply_updates` tracks `retired_ids`) — this
+        function only rejects re-attachment within the same delta;
+      * ``add_edges`` / ``del_edges``: undirected edge inserts/deletes,
+        canonicalized like `LabeledGraph.from_edges` (u < v, self-loops
+        dropped, duplicates collapsed).  Inserting a present edge or
+        deleting an absent one is a recorded no-op, not an error.
+    """
+
+    add_vertex_labels: np.ndarray    # int32 [k] labels of appended vertices
+    del_vertices: np.ndarray         # int64 [j] ids to detach
+    add_edges: np.ndarray            # int32 [a, 2]
+    del_edges: np.ndarray            # int32 [d, 2]
+
+    @staticmethod
+    def make(add_vertex_labels=(), del_vertices=(), add_edges=(),
+             del_edges=()) -> "GraphDelta":
+        return GraphDelta(
+            add_vertex_labels=np.asarray(add_vertex_labels,
+                                         np.int32).reshape(-1),
+            del_vertices=np.asarray(del_vertices, np.int64).reshape(-1),
+            add_edges=np.asarray(add_edges, np.int32).reshape(-1, 2),
+            del_edges=np.asarray(del_edges, np.int32).reshape(-1, 2))
+
+    @property
+    def is_empty(self) -> bool:
+        return (self.add_vertex_labels.size == 0
+                and self.del_vertices.size == 0
+                and self.add_edges.size == 0 and self.del_edges.size == 0)
+
+
+def apply_graph_delta(graph: LabeledGraph, delta: GraphDelta
+                      ) -> tuple[LabeledGraph, dict]:
+    """Apply a GraphDelta; returns (new_graph, info).
+
+    ``info`` reports what actually changed:
+      * ``seeds``: int64 global ids whose local structure changed —
+        endpoints of every inserted/deleted edge, detached vertices,
+        and appended vertices.  These drive both the dirty-vertex
+        forcing and the touched-shard blast zone of the incremental
+        re-index.
+      * ``n_added_edges`` / ``n_removed_edges``: effective counts after
+        no-op filtering;
+      * ``n_added_vertices`` / ``n_detached_vertices``.
+
+    Raises ValueError on out-of-range endpoints or detach targets (an
+    update referencing a vertex that does not exist is a routing bug,
+    not a no-op).
+    """
+    n_old = graph.n_vertices
+    n_new = n_old + int(delta.add_vertex_labels.size)
+    det = np.unique(delta.del_vertices)
+    if det.size and (det.min() < 0 or det.max() >= n_new):
+        raise ValueError("detach target out of range")
+    for e in (delta.add_edges, delta.del_edges):
+        if e.size and (e.min() < 0 or e.max() >= n_new):
+            raise ValueError("edge endpoint out of range")
+
+    old = graph.edge_list.astype(np.int64)
+    old_keys = old[:, 0] * n_new + old[:, 1]
+    adds = _canon_edges(delta.add_edges)
+    dels = _canon_edges(delta.del_edges)
+    # edges incident to a detached vertex are deleted implicitly
+    if det.size:
+        det_mask = np.zeros(n_new, bool)
+        det_mask[det] = True
+        implicit = old[det_mask[old[:, 0]] | det_mask[old[:, 1]]]
+        dels = _canon_edges(np.concatenate([dels, implicit])) \
+            if dels.size else implicit
+        if adds.size:               # adding an edge onto a detached id
+            bad = det_mask[adds[:, 0]] | det_mask[adds[:, 1]]
+            if bad.any():
+                raise ValueError("cannot add an edge on a detached vertex")
+    del_keys = dels[:, 0] * n_new + dels[:, 1] if dels.size else \
+        np.zeros(0, np.int64)
+    add_keys = adds[:, 0] * n_new + adds[:, 1] if adds.size else \
+        np.zeros(0, np.int64)
+    # an edge in BOTH lists has no well-defined outcome (it would
+    # depend on whether the edge was already present): reject instead
+    # of silently picking a state-dependent winner.  Note implicit
+    # detach-deletes are exempt — adds onto detached ids already raised.
+    if np.isin(add_keys, del_keys).any():
+        raise ValueError("edge listed in both add_edges and del_edges")
+
+    removed = np.isin(old_keys, del_keys)          # present AND deleted
+    really_added = ~np.isin(add_keys, old_keys)    # absent AND inserted
+    kept = old[~removed]
+    new_edges = np.concatenate([kept, adds[really_added]]) if adds.size \
+        else kept
+    labels = np.concatenate([graph.labels,
+                             delta.add_vertex_labels.astype(np.int32)])
+    new_graph = LabeledGraph.from_edges(n_new, new_edges, labels)
+
+    changed = np.concatenate([
+        old[removed].ravel(),
+        adds[really_added].ravel() if adds.size else np.zeros(0, np.int64),
+        det,
+        np.arange(n_old, n_new, dtype=np.int64)])
+    info = {
+        "seeds": np.unique(changed),
+        "n_added_edges": int(really_added.sum()),
+        "n_removed_edges": int(removed.sum()),
+        "n_added_vertices": int(delta.add_vertex_labels.size),
+        "n_detached_vertices": int(det.size),
+    }
+    return new_graph, info
 
 
 def degree_stats(graph: LabeledGraph) -> dict[str, float]:

@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.core.graph import LabeledGraph
 
-__all__ = ["PathTable", "enumerate_paths", "paths_of_query"]
+__all__ = ["PathTable", "enumerate_paths", "paths_of_query",
+           "path_row_keys"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +105,20 @@ def enumerate_paths(
         sel = np.sort(rng.permutation(table.n_paths)[:max_paths])
         table = PathTable(vertices=table.vertices[sel], length=length)
     return table
+
+
+def path_row_keys(vertices: np.ndarray) -> list[bytes]:
+    """One hashable key per path row (the row's int64 ids, as bytes).
+
+    The incremental re-index matches a freshly enumerated table's rows
+    against the previous epoch's table to reuse embeddings of unchanged
+    (clean) paths: rows are keyed by their GLOBAL vertex-id sequence, so
+    the caller maps shard-local ids through `global_ids` first.  A path
+    and its reverse get distinct keys on purpose — enumeration is
+    canonical (`canonical_mask`), so equal subgraphs produce equal rows.
+    """
+    a = np.ascontiguousarray(np.asarray(vertices, np.int64))
+    return [r.tobytes() for r in a]
 
 
 def paths_of_query(

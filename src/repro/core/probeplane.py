@@ -411,10 +411,25 @@ class ClusterPlanes:
             if tree.n_points:
                 self.plane(sid, length, tree)
 
-    def invalidate(self, sid: int) -> None:
-        """Drop every plane (and assembled slab) touching a shard."""
-        for key in [k for k in self._planes if k[0] == sid]:
+    def invalidate(self, sid: int, length: int | None = None) -> None:
+        """Drop planes (and assembled slabs) touching a shard.
+
+        ``length=None`` drops every length of the shard (migration /
+        failover replace the whole index); a specific length drops only
+        that tree's plane — the streaming-update path uses this so a
+        touched shard's UNCHANGED lengths keep their warm slabs (their
+        tree objects survive the re-index by identity, so the resident
+        rows are still exact).
+        """
+        for key in [k for k in self._planes
+                    if k[0] == sid and (length is None or k[1] == length)]:
             self._drop(key)
+
+    def tokens(self) -> dict[tuple[int, int], int]:
+        """(sid, length) -> resident plane token.  A token is unique per
+        pack, so an unchanged token across an update PROVES the slab
+        never left the device (the zero-h2d claim tests/CI assert)."""
+        return {k: p.token for k, p in self._planes.items()}
 
     def _drop(self, key: tuple[int, int]) -> None:
         self._planes.pop(key, None)

@@ -45,25 +45,30 @@ from repro.cache.awresnet import AWResNet
 from repro.cache.features import FeatureTracker
 from repro.cache.policy import TwoLevelCache, protected_degree_threshold
 from repro.core import gnn as gnn_lib
-from repro.core.artree import build_artree
+from repro.core.artree import reload_artree
 from repro.core.embedding import (EmbeddedPaths, embed_query_paths,
+                                  splice_embedding_rows,
                                   train_dominance_gnn)
-from repro.core.graph import LabeledGraph
+from repro.core.graph import GraphDelta, LabeledGraph, apply_graph_delta
 from repro.core.matching import (MatchStats, ShardIndex, backtrack_join,
                                  batched_path_candidates, path_candidates,
                                  _reverse_embedding, _scatter_hits)
-from repro.core.paths import PathTable, enumerate_paths, paths_of_query
+from repro.core.paths import (PathTable, enumerate_paths, path_row_keys,
+                              paths_of_query)
 from repro.core.probeplane import ClusterPlanes
 from repro.core.pescore import (PEScoreModel, aggregate_global_features,
                                 path_feature_vector, shard_features)
 from repro.core.plan import degree_based_plan, rank_query_plan
 from repro.dist import loadbalance as lb
-from repro.dist.migration import LINK_BYTES_PER_MS, hot_migrate
-from repro.dist.partition import edge_cut, metis_like_partition, size_balance
-from repro.dist.shard import Shard, make_shards
+from repro.dist.migration import (LINK_BYTES_PER_MS, crc_transfer,
+                                  hot_migrate)
+from repro.dist.partition import (Partition, edge_cut, metis_like_partition,
+                                  size_balance)
+from repro.dist.shard import (Shard, apply_shard_delta, halo_region,
+                              make_shard, make_shards, shard_delta)
 
-__all__ = ["MachineSpec", "QueryTelemetry", "DistributedGNNPE",
-           "EPOCH_VIRTUAL_S"]
+__all__ = ["MachineSpec", "QueryTelemetry", "UpdateReport",
+           "DistributedGNNPE", "EPOCH_VIRTUAL_S"]
 
 ROW_BYTES_PER_VERTEX = 4          # int32 candidate vertex ids on the wire
 
@@ -125,6 +130,29 @@ class QueryTelemetry:
                                   # reused from an earlier identical query)
 
 
+@dataclasses.dataclass
+class UpdateReport:
+    """Telemetry of one `apply_updates` batch (feeds BENCH_updates)."""
+
+    data_epoch: int               # engine-wide epoch AFTER this batch
+    n_added_edges: int = 0
+    n_removed_edges: int = 0
+    n_added_vertices: int = 0
+    n_detached_vertices: int = 0
+    touched_shards: list = dataclasses.field(default_factory=list)
+    n_shards: int = 0
+    paths_total: int = 0          # paths in the touched shards' new tables
+    paths_reused: int = 0         # embedding rows spliced from the old epoch
+    paths_reembedded: int = 0     # rows actually recomputed (dirty/new)
+    delta_bytes: int = 0          # CRC'd delta images shipped
+    full_image_bytes: int = 0     # what a full-cluster rebuild would ship
+    retransmissions: int = 0
+    virtual_ms: float = 0.0
+    planes_invalidated: int = 0   # (sid, length) slabs dropped (changed only)
+    results_purged: int = 0       # pre-update cached results retired
+    noop: bool = False
+
+
 def _root_skip(tree, q_fwd: np.ndarray, q_rev: np.ndarray,
                eps: float = 1e-5) -> bool:
     """True iff the shard's root MBR proves zero candidates (both
@@ -151,12 +179,26 @@ class DistributedGNNPE:
               seed: int = 0, halo_hops: int = 2,
               max_path_length: int = 2,
               device_probe: bool = False,
-              probe_mode: str | None = None) -> "DistributedGNNPE":
+              probe_mode: str | None = None,
+              assignment: np.ndarray | None = None,
+              params: dict | None = None) -> "DistributedGNNPE":
+        """Offline build.  `assignment` / `params` inject a fixed
+        partition assignment and pretrained GNN params instead of
+        running the partitioner / trainer — the rebuild-equivalence
+        oracle for streaming updates (`rebuild_reference`) uses them to
+        build a from-scratch engine on the live engine's updated graph
+        that is bit-comparable index for index."""
         self = object.__new__(cls)
         t_build = time.perf_counter()
         rng = np.random.default_rng(seed)
         self.graph = graph
         self.max_path_length = max_path_length
+        self._seed = seed
+        self._build_cfg = dict(n_machines=n_machines,
+                               shards_per_machine=shards_per_machine,
+                               gnn_train_steps=gnn_train_steps, seed=seed,
+                               halo_hops=halo_hops,
+                               max_path_length=max_path_length)
         # default probe path: "host" (per-(path, shard) traversal),
         # "device" (PR-2 per-path slab launch), or "plane" (device-
         # resident planes, one fused launch per query plan).  The legacy
@@ -171,22 +213,29 @@ class DistributedGNNPE:
 
         # 1. partition into ultra-fine shards with halo context
         n_shards = n_machines * shards_per_machine
-        part = metis_like_partition(graph, n_shards, seed=seed)
-        self.assignment = part.assignment
+        if assignment is None:
+            part = metis_like_partition(graph, n_shards, seed=seed)
+            self.assignment = part.assignment
+        else:
+            self.assignment = np.asarray(assignment)
+            part = Partition(assignment=self.assignment, n_parts=n_shards)
         # the halo must cover both the GNN receptive field and the
         # longest indexed path, or the canonical owner of a path could
         # be unable to enumerate it (silent false dismissals)
-        shard_list = make_shards(graph, part.assignment, n_shards,
-                                 halo_hops=max(halo_hops, self.cfg.n_hops,
-                                               max_path_length))
+        self._halo_eff = max(halo_hops, self.cfg.n_hops, max_path_length)
+        shard_list = make_shards(graph, self.assignment, n_shards,
+                                 halo_hops=self._halo_eff)
 
         # 2. dominance GNN (shared across shards so cross-shard paths
         #    embed consistently) + full-context vertex embeddings
-        self.params = train_dominance_gnn(graph, self.cfg,
-                                          path_length=max_path_length,
-                                          n_steps=gnn_train_steps,
-                                          seed=seed)
+        self.params = params if params is not None else \
+            train_dominance_gnn(graph, self.cfg,
+                                path_length=max_path_length,
+                                n_steps=gnn_train_steps, seed=seed)
         vemb = self._encode_data_graph()
+        # kept for streaming updates: the dirty-vertex rule re-embeds a
+        # path iff any of its vertices' rows changed vs this snapshot
+        self._vemb = vemb
 
         # 3. per-shard path tables + aR-trees (canonical-owner rule);
         #    each index is also packed onto device as a resident probe
@@ -200,8 +249,19 @@ class DistributedGNNPE:
             self.shards[shard.sid] = shard
             build_weight[shard.sid] = 1.0 + sum(
                 ep.n_paths for ep in shard.index.embedded.values())
+        # streaming-update consistency state: per-shard index epochs
+        # (bumped when apply_updates re-indexes a shard) + the global
+        # data epoch baked into every result-cache key
+        self.index_epoch: dict[int, int] = {sid: 0 for sid in self.shards}
+        self._data_epoch = 0
+        self.update_reports: list[UpdateReport] = []
+        self.retired_ids: set[int] = set()   # detached: never re-attach
         self._shard_bytes = {sid: float(s.nbytes())
                              for sid, s in self.shards.items()}
+        # full replica-image sizes for UpdateReport's delta-vs-full
+        # comparison; filled lazily by the first apply_updates so a
+        # build that never streams updates pays no serialization
+        self._image_bytes: dict[int, int] = {}
         self._label_hist = {sid: s.label_histogram(self.cfg.n_labels)
                             for sid, s in self.shards.items()}
 
@@ -219,16 +279,7 @@ class DistributedGNNPE:
         # 5. PE-score model: shard features -> global features; labels
         #    from sampled offline probes
         self.pe_model = PEScoreModel()
-        self.pe_model.label_freq = (
-            np.bincount(graph.labels, minlength=self.cfg.n_labels)
-            / max(graph.n_vertices, 1)).astype(np.float32)
-        per_shard = [
-            shard_features(s.graph,
-                           {l: PathTable(ep.vertices, l)
-                            for l, ep in s.index.embedded.items()})
-            for s in self.shards.values()]
-        self.pe_model.global_features = aggregate_global_features(per_shard)
-        self._fit_pe_model(seed)
+        self._refit_pe_model()
 
         # 6. caching layer (Algorithms 2-5)
         theta_d = protected_degree_threshold(graph.degrees)
@@ -278,9 +329,10 @@ class DistributedGNNPE:
         return self
 
     # -------------------------------------------------------------- #
-    def _encode_data_graph(self) -> np.ndarray:
+    def _encode_data_graph(self, graph: LabeledGraph | None = None
+                           ) -> np.ndarray:
         import jax.numpy as jnp
-        g = self.graph
+        g = graph if graph is not None else self.graph
         src = jnp.asarray(np.repeat(np.arange(g.n_vertices),
                                     np.diff(g.indptr)))
         dst = jnp.asarray(g.indices.astype(np.int64))
@@ -289,7 +341,11 @@ class DistributedGNNPE:
                                     jnp.asarray(g.degrees), src, dst)
         return np.asarray(vemb)
 
-    def _build_shard_index(self, shard: Shard, vemb: np.ndarray) -> None:
+    def _build_shard_index(self, shard: Shard, vemb: np.ndarray,
+                           reuse_from: Shard | None = None,
+                           dirty_gmask: np.ndarray | None = None,
+                           stats: dict | None = None,
+                           build_trees: bool = True) -> None:
         """Index the shard's *owned* paths with full-context embeddings.
 
         A path is owned by the shard owning its min-global-id endpoint
@@ -298,10 +354,28 @@ class DistributedGNNPE:
         Structural embeddings are taken from the full-graph vertex
         embeddings, so shard-local indexing never weakens the dominance
         certificate (halo vertices keep their exact global context).
+
+        Incremental mode (``reuse_from`` + ``dirty_gmask``, the
+        streaming-update path): the path table is still enumerated in
+        CANONICAL order (so tables/trees stay bit-identical to a
+        from-scratch build), but embedding rows whose vertices are all
+        clean are SPLICED from the previous epoch's table instead of
+        recomputed — only paths through dirty vertices (or genuinely
+        new paths) re-embed, and each tree is a bulk reload.  ``stats``
+        accumulates paths_total/paths_reused/paths_reembedded.
+
+        ``build_trees=False`` (update staging only) skips aR-tree
+        construction entirely — the delta protocol never ships trees
+        (the receiver bulk-reloads them from the embeddings), so
+        sender-side builds would be pure waste for carried lengths and
+        a double build for changed ones.  The resulting index's
+        ``trees`` is EMPTY; such a shard must never be installed.
         """
         import jax.numpy as jnp
         gi = shard.global_ids
         labels = jnp.asarray(shard.graph.labels)
+        old_index = reuse_from.index if reuse_from is not None else None
+        old_gi = reuse_from.global_ids if reuse_from is not None else None
         embedded: dict[int, EmbeddedPaths] = {}
         trees = {}
         for l in range(1, self.max_path_length + 1):
@@ -313,21 +387,46 @@ class DistributedGNNPE:
                 canon = np.where(g_first <= g_last, verts[:, 0],
                                  verts[:, -1])
                 verts = verts[shard.owned_mask[canon]]
+            d_emb = (l + 1) * self.cfg.d_vertex
+            n_reused = 0
             if verts.shape[0]:
-                struct = vemb[gi[verts]].reshape(verts.shape[0], -1)
-                lab = gnn_lib.label_embeddings(labels, jnp.asarray(verts),
-                                               self.cfg.n_labels,
-                                               self.cfg.d_label)
-                emb = np.asarray(gnn_lib.interleave_path_embedding(
-                    jnp.asarray(struct), lab, l + 1), dtype=np.float32)
+                def fresh(rows: np.ndarray) -> np.ndarray:
+                    vv = verts[rows]
+                    struct = vemb[gi[vv]].reshape(vv.shape[0], -1)
+                    lab = gnn_lib.label_embeddings(
+                        labels, jnp.asarray(vv), self.cfg.n_labels,
+                        self.cfg.d_label)
+                    return np.asarray(gnn_lib.interleave_path_embedding(
+                        jnp.asarray(struct), lab, l + 1), dtype=np.float32)
+                old_ep = (old_index.embedded.get(l)
+                          if old_index is not None else None)
+                if old_ep is not None and dirty_gmask is not None:
+                    clean = ~dirty_gmask[gi[verts]].any(axis=1)
+                    emb, n_reused = splice_embedding_rows(
+                        path_row_keys(gi[verts]), clean,
+                        path_row_keys(old_gi[old_ep.vertices]),
+                        old_ep.embeddings, d_emb, fresh)
+                else:
+                    emb = fresh(np.arange(verts.shape[0], dtype=np.int64))
             else:
                 verts = np.zeros((0, l + 1), np.int32)
-                emb = np.zeros((0, (l + 1) * self.cfg.d_vertex), np.float32)
+                emb = np.zeros((0, d_emb), np.float32)
+            if stats is not None:
+                stats["paths_total"] += int(verts.shape[0])
+                stats["paths_reused"] += n_reused
+                stats["paths_reembedded"] += int(verts.shape[0]) - n_reused
             embedded[l] = EmbeddedPaths(vertices=verts, embeddings=emb,
                                         length=l)
-            trees[l] = build_artree(emb)
+            if build_trees:
+                old_tree = (old_index.trees.get(l)
+                            if old_index is not None else None)
+                trees[l] = reload_artree(old_tree, emb)
         shard.index = ShardIndex(embedded=embedded, trees=trees)
-        self.planes.build_shard(shard.sid, shard.index)
+        if reuse_from is None:
+            # fresh build packs planes eagerly; the update path instead
+            # invalidates only the CHANGED (sid, length) slabs after the
+            # delta installs (untouched lengths stay warm by identity)
+            self.planes.build_shard(shard.sid, shard.index)
 
     def _lpt_alloc(self, weights: dict[int, float]
                    ) -> tuple[dict[int, int], float]:
@@ -342,6 +441,24 @@ class DistributedGNNPE:
         norm = loads / self.cpu_w
         imbalance = float(norm.max() / max(norm.mean(), 1e-9) - 1.0)
         return alloc, imbalance
+
+    def _refit_pe_model(self) -> None:
+        """(Re)fit the whole PE-score pipeline on the CURRENT graph and
+        shard indexes: label frequencies -> per-shard/global features ->
+        deterministic offline-probe labels.  Build step 5 AND the
+        streaming-update refit run exactly this — a single code path is
+        what keeps post-update plan ranking bit-identical to a fresh
+        build's (the rebuild-equivalence invariant)."""
+        self.pe_model.label_freq = (
+            np.bincount(self.graph.labels, minlength=self.cfg.n_labels)
+            / max(self.graph.n_vertices, 1)).astype(np.float32)
+        per_shard = [
+            shard_features(s.graph,
+                           {l: PathTable(ep.vertices, l)
+                            for l, ep in s.index.embedded.items()})
+            for s in self.shards.values()]
+        self.pe_model.global_features = aggregate_global_features(per_shard)
+        self._fit_pe_model(self._seed)
 
     def _fit_pe_model(self, seed: int, n_queries: int = 6) -> None:
         """Offline PE-score labels from sampled probes (§6.2.1).
@@ -436,8 +553,7 @@ class DistributedGNNPE:
         tel = QueryTelemetry(plan_mode=plan_mode, probe_mode=probe_mode,
                              device_probe=probe_mode != "host")
         self._qclock += 1.0
-        key = (query.n_vertices, query.labels.tobytes(),
-               query.edge_list.tobytes())
+        key = self._query_key(query)
 
         cached = self._cache_lookup(key, tel)
         if cached is not None:
@@ -563,11 +679,29 @@ class DistributedGNNPE:
         return [(self.graph.labels == query.labels[v])
                 & (deg_d >= deg_q[v]) for v in range(query.n_vertices)]
 
+    def _query_key(self, query: LabeledGraph) -> tuple:
+        """Result-cache / plan-LRU key: data epoch + query signature.
+
+        The leading `_data_epoch` component is the exactness-preserving
+        consistency stamp for streaming updates: every `apply_updates`
+        bumps it, so a post-update query can NEVER be served a
+        pre-update answer — the old epoch's keys simply stop matching
+        (and are purged).  The scope is deliberately engine-global, not
+        per-shard: a cached RESULT depends on the whole data graph
+        through the cross-shard join (an edge inserted in shard A can
+        create matches for a query whose candidates all live in shard
+        B), so per-shard epochs can only scope the index/plane
+        invalidation, never result validity.
+        """
+        return (self._data_epoch, query.n_vertices, query.labels.tobytes(),
+                query.edge_list.tobytes())
+
     def _cache_lookup(self, key, tel: QueryTelemetry):
         """Cache access at query start; returns the hit or None."""
         if not self.use_cache:
             return None
-        res = self.cache.access(key, self._slave_store)
+        res = self.cache.access(key, self._slave_store,
+                                dead=self.dead_machines)
         tel.latency_ms += res.latency_ms
         if res.data is None:
             return None
@@ -582,9 +716,12 @@ class DistributedGNNPE:
 
         No LRU / statistics mutation — megabatch dispatch uses it to
         skip speculative probe packing for queries the consume-time
-        (authoritative, mutating) lookup will serve from cache.
+        (authoritative, mutating) lookup will serve from cache.  Both
+        sides thread `dead_machines`, so a key homed on a dead machine
+        is unservable to dispatch AND consume alike.
         """
-        return self.use_cache and self.cache.peek(key, self._slave_store)
+        return self.use_cache and self.cache.peek(key, self._slave_store,
+                                                  dead=self.dead_machines)
 
     def _account_rows(self, sid: int, l: int, qv, gverts, masks,
                       probe_ms: float, machine_ms, rows_by_machine,
@@ -786,8 +923,7 @@ class DistributedGNNPE:
         for query in batch:
             tel = QueryTelemetry(plan_mode=plan_mode, probe_mode="plane",
                                  device_probe=True, batch_size=len(batch))
-            key = (query.n_vertices, query.labels.tobytes(),
-                   query.edge_list.tobytes())
+            key = self._query_key(query)
             if self._cache_peek(key):
                 # consume's (authoritative) lookup will serve this from
                 # cache: skip planning and probe packing entirely.  If
@@ -860,7 +996,7 @@ class DistributedGNNPE:
                     mask_bits)
             h2d = self.planes.stats["h2d_bytes"] - h2d0
         return {"items": items, "flight": flight, "plan_mode": plan_mode,
-                "h2d_bytes": h2d}
+                "h2d_bytes": h2d, "data_epoch": self._data_epoch}
 
     def _mb_consume(self, mb: dict
                     ) -> list[tuple[list[tuple], QueryTelemetry]]:
@@ -868,16 +1004,25 @@ class DistributedGNNPE:
         stream order (cache access, running-mask filtering, comm
         accounting, join, cache admission — the exact serial sequence)."""
         items, flight = mb["items"], mb["flight"]
-        if flight is not None and flight.launches:
+        # a streaming update between dispatch and consume invalidates the
+        # WHOLE in-flight batch, not just its probe slabs: the packed
+        # label/degree mask operand, the planned keys and the join all
+        # reference the pre-update graph.  The epoch stamp catches every
+        # update (even ones that happen to leave all packed trees
+        # intact); the assembly identity check below remains the
+        # migration/failover backstop.
+        stale = mb.get("data_epoch") != self._data_epoch
+        if not stale and flight is not None and flight.launches:
             live = {(sid, l): tree
                     for sid, shard in self.shards.items()
                     for l, tree in shard.index.trees.items()}
-            if flight.assembly.stale(live):
-                # an index moved under the dispatched launch (migration /
-                # failover mid-batch): the serial plane path repacks and
-                # returns bit-identical results
-                return [self.query(it["query"], plan_mode=mb["plan_mode"],
-                                   probe_mode="plane") for it in items]
+            stale = flight.assembly.stale(live)
+        if stale:
+            # an index moved under the dispatched launch (migration /
+            # failover / apply_updates mid-batch): the serial plane path
+            # repacks on live state and returns bit-identical results
+            return [self.query(it["query"], plan_mode=mb["plan_mode"],
+                               probe_mode="plane") for it in items]
         res = None
         d2h, h2d_sel = 0, 0
         if flight is not None and flight.launches:
@@ -962,6 +1107,239 @@ class DistributedGNNPE:
         return self._finish_query(query, key, tel, masks, alive,
                                   machine_ms, rows_by_machine,
                                   it["plan_ms"])
+
+    # ------------------------------------------------------------------ #
+    # streaming graph updates (exactness-preserving incremental re-index)
+    # ------------------------------------------------------------------ #
+    def apply_updates(self, delta: GraphDelta, corrupt_prob: float = 0.0,
+                      refit_pe: bool = True) -> UpdateReport:
+        """Apply a streaming update batch without a full rebuild.
+
+        Pipeline (owner routing -> incremental re-index -> CRC'd deltas
+        -> epoch bump -> scoped invalidation):
+
+          1. the batch mutates the data graph (ids stable: vertices
+             append, deletes detach — see `GraphDelta`);
+          2. vertex embeddings are re-encoded once on the updated graph;
+             a vertex is DIRTY iff its embedding row (or structure)
+             actually changed — the update's blast zone plus any float
+             drift, detected by comparison, never modeled;
+          3. the canonical-owner rule routes the re-index: a shard is
+             TOUCHED iff its owned region intersects the update's
+             halo-radius blast zone or its region holds a dirty vertex.
+             Touched shards re-enumerate in canonical order, splice
+             clean embedding rows from the previous epoch (re-embedding
+             ONLY paths through dirty vertices) and bulk-reload their
+             aR-trees;
+          4. each touched shard's changes ship as a CRC32-verified
+             delta image over the migration transfer/retry machinery;
+             unchanged path lengths are carried by identity, so their
+             resident probe planes stay warm — only changed (sid,
+             length) slabs are invalidated.  Untouched shards are never
+             repacked (their planes keep their tokens: zero slab h2d);
+          5. the global data epoch bumps: every result-cache key embeds
+             it, so post-update queries can never be served pre-update
+             answers; superseded results are purged, the plan LRU is
+             cleared, and an in-flight megabatch spanning the update
+             falls back to the serial plane path via its epoch stamp;
+          6. the PE-score model refits on the updated index (same
+             deterministic labels as an offline build), so plan ranking
+             matches a from-scratch engine.
+
+        The whole pipeline is pinned by the rebuild-equivalence
+        property: update-then-query is bit-identical (matches, node
+        counters, comm bytes) to a fresh `build` on the updated graph
+        with the same assignment/params, in all three probe modes.
+        """
+        if delta.is_empty:
+            return UpdateReport(data_epoch=self._data_epoch, noop=True,
+                                n_shards=len(self.shards))
+        if delta.add_vertex_labels.size and (
+                int(delta.add_vertex_labels.max()) >= self.cfg.n_labels
+                or int(delta.add_vertex_labels.min()) < 0):
+            raise ValueError(
+                f"new vertex label outside [0, {self.cfg.n_labels}); the "
+                f"label vocabulary is fixed at build time")
+        if self.retired_ids and delta.add_edges.size:
+            bad = self.retired_ids.intersection(
+                int(v) for v in np.unique(delta.add_edges))
+            if bad:
+                # `apply_graph_delta` only rejects same-batch
+                # re-attachment; retirement across batches is the
+                # engine's invariant (a retired id resurfacing is an
+                # upstream routing bug, not a no-op)
+                raise ValueError(
+                    f"edge endpoints {sorted(bad)} were retired by an "
+                    f"earlier update batch")
+        old_graph = self.graph
+        n_old = old_graph.n_vertices
+        new_graph, info = apply_graph_delta(old_graph, delta)
+        n_new = new_graph.n_vertices
+        if info["seeds"].size == 0:
+            # effectively empty: every insert/delete was a no-op, the
+            # graph content is unchanged — keep the epoch, caches and
+            # planes intact (idempotent upserts must not purge anything)
+            return UpdateReport(data_epoch=self._data_epoch, noop=True,
+                                n_shards=len(self.shards))
+
+        # owner routing for appended vertices: deterministic
+        # smallest-assigned-neighbor rule (isolated: round-robin) — the
+        # rebuild oracle receives the SAME extended assignment
+        asg = self.assignment
+        if n_new > n_old:
+            asg = np.concatenate([
+                asg, np.zeros(n_new - n_old, asg.dtype)])
+            n_shards = len(self.shards)
+            for v in range(n_old, n_new):
+                nbrs = new_graph.neighbors(v)
+                nbrs = nbrs[nbrs < v]
+                asg[v] = asg[int(nbrs.min())] if nbrs.size \
+                    else v % n_shards
+
+        # dirty vertices: re-encode once, diff against the previous
+        # epoch's embedding snapshot; update seeds are forced dirty
+        new_vemb = self._encode_data_graph(new_graph)
+        dirty = np.zeros(n_new, bool)
+        dirty[info["seeds"]] = True
+        dirty[:n_old] |= (new_vemb[:n_old] != self._vemb).any(axis=1)
+
+        # blast zone: halo-radius ball around the seeds in BOTH graphs
+        # (a shard's region can only change if a seed lies within halo
+        # range of its owned set in the old or the new topology)
+        z_mask = np.zeros(n_new, bool)
+        for g in (old_graph, new_graph):
+            seeds = info["seeds"][info["seeds"] < g.n_vertices]
+            if seeds.size:
+                z_mask[halo_region(g, seeds.astype(np.int64),
+                                   self._halo_eff)] = True
+
+        touched = []
+        for sid, shard in self.shards.items():
+            if ((asg == sid) & z_mask).any() \
+                    or dirty[shard.global_ids].any():
+                touched.append(sid)
+
+        report = UpdateReport(
+            data_epoch=self._data_epoch + 1,
+            n_added_edges=info["n_added_edges"],
+            n_removed_edges=info["n_removed_edges"],
+            n_added_vertices=info["n_added_vertices"],
+            n_detached_vertices=info["n_detached_vertices"],
+            touched_shards=sorted(touched), n_shards=len(self.shards))
+        stats = {"paths_total": 0, "paths_reused": 0, "paths_reembedded": 0}
+
+        # STAGE: all fallible work (region cut, re-index, delta build,
+        # CRC'd transfer, install decode) runs before any engine state
+        # mutates — a failure here leaves the engine fully on the old
+        # epoch, never half-updated with still-valid old cache keys
+        staged = []
+        for sid in sorted(touched):
+            old_shard = self.shards[sid]
+            new_shard = make_shard(new_graph, asg, sid,
+                                   halo_hops=self._halo_eff)
+            self._build_shard_index(new_shard, new_vemb,
+                                    reuse_from=old_shard,
+                                    dirty_gmask=dirty, stats=stats,
+                                    build_trees=False)
+            # CRC'd delta over the migration transfer machinery; the
+            # hosting machine installs the verified image on top of its
+            # replica (carried lengths keep identity -> warm planes)
+            blob = shard_delta(old_shard, new_shard)
+            tr = crc_transfer(blob, rng=self._rng,
+                              corrupt_prob=corrupt_prob)
+            report.retransmissions += tr.retransmissions
+            report.virtual_ms += tr.virtual_ms
+            report.delta_bytes += len(blob)
+            if not tr.ok:
+                # unreachable with the simulator's bounded retry (the
+                # final attempt is clean by construction) — but if that
+                # invariant ever breaks, BOTH installing a corrupt image
+                # and silently skipping the shard would serve wrong
+                # answers, so fail loudly — BEFORE anything installed
+                raise RuntimeError(
+                    f"shard {sid} update delta failed CRC after retries")
+            staged.append((sid, old_shard,
+                           apply_shard_delta(old_shard, tr.received)))
+
+        # COMMIT: installs, epoch flip, cache scoping (no fallible
+        # serialization/compute below — only assignments + invalidation)
+        self.graph = new_graph
+        self.assignment = asg
+        self.retired_ids.update(int(v) for v in delta.del_vertices)
+        self._vemb = new_vemb
+        inval_before = self.planes.stats["invalidations"]
+        for sid, old_shard, installed in staged:
+            old_trees = (old_shard.index.trees
+                         if old_shard.index is not None else {})
+            for l, tree in installed.index.trees.items():
+                if old_trees.get(l) is not tree:
+                    self.planes.invalidate(sid, l)
+            self.shards[sid] = installed
+            self.index_epoch[sid] += 1
+            self._shard_bytes[sid] = float(installed.nbytes())
+            # one extra O(shard) npz serialize; bounded by the canonical
+            # re-enumeration + tree reload the staging loop already paid
+            self._image_bytes[sid] = len(installed.serialize())
+            self._label_hist[sid] = installed.label_histogram(
+                self.cfg.n_labels)
+        report.planes_invalidated = (self.planes.stats["invalidations"]
+                                     - inval_before)
+        report.paths_total = stats["paths_total"]
+        report.paths_reused = stats["paths_reused"]
+        report.paths_reembedded = stats["paths_reembedded"]
+        # untouched entries fill lazily (first update pays them once);
+        # no cluster-wide re-serialization on the steady-state path
+        for sid, s in self.shards.items():
+            if sid not in self._image_bytes:
+                self._image_bytes[sid] = len(s.serialize())
+        report.full_image_bytes = sum(self._image_bytes.values())
+
+        # epoch bump: retire every pre-update result key (plan artifacts
+        # too — ranked orders reference the superseded PE model/index)
+        self._data_epoch += 1
+        self._plan_lru.clear()
+        report.results_purged = self._purge_stale_results()
+
+        # fresh-build parity for the adaptive layers: eviction degree
+        # threshold + PE-score plan ranking track the updated graph
+        theta_d = protected_degree_threshold(new_graph.degrees)
+        for vc in (self.cache.master, *self.cache.slaves):
+            vc.theta_d = theta_d
+        if refit_pe:
+            self._refit_pe_model()
+        self.update_reports.append(report)
+        return report
+
+    def _purge_stale_results(self) -> int:
+        """Drop every cached result keyed to a superseded data epoch
+        from the two-level cache AND the slave memory stores."""
+        epoch = self._data_epoch
+
+        def stale(k) -> bool:
+            return (isinstance(k, tuple) and len(k) == 4
+                    and k[0] != epoch)
+
+        purged = self.cache.purge(stale)
+        for store in self._slave_store.values():
+            for k in [k for k in store if stale(k)]:
+                del store[k]
+        return purged
+
+    def rebuild_reference(self) -> "DistributedGNNPE":
+        """From-scratch engine on the CURRENT graph with this engine's
+        partition assignment and GNN params — the rebuild-equivalence
+        oracle: its shard indexes, plan ranking, matches, counters and
+        comm accounting must be bit-identical to this engine's
+        post-update state (property-tested in tests/test_updates.py)."""
+        cfg = self._build_cfg
+        return DistributedGNNPE.build(
+            self.graph, cfg["n_machines"],
+            shards_per_machine=cfg["shards_per_machine"],
+            gnn_train_steps=cfg["gnn_train_steps"], seed=cfg["seed"],
+            halo_hops=cfg["halo_hops"],
+            max_path_length=cfg["max_path_length"],
+            probe_mode=self.probe_mode,
+            assignment=self.assignment, params=self.params)
 
     # ------------------------------------------------------------------ #
     # workload loop + balancing

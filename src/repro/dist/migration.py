@@ -26,12 +26,56 @@ import numpy as np
 
 from repro.dist.shard import Shard, shard_crc32
 
-__all__ = ["MigrationResult", "hot_migrate", "LINK_BYTES_PER_MS",
-           "HANDSHAKE_MS"]
+__all__ = ["MigrationResult", "TransferResult", "crc_transfer",
+           "hot_migrate", "LINK_BYTES_PER_MS", "HANDSHAKE_MS"]
 
 LINK_BYTES_PER_MS = 125_000.0    # 1 Gbps simulated inter-machine link
 HANDSHAKE_MS = 5.0               # per-transfer setup + CRC check
 MAX_RETRIES = 16
+
+
+@dataclasses.dataclass
+class TransferResult:
+    """One CRC-verified blob delivery over the simulated link."""
+
+    received: bytes
+    ok: bool                     # delivered bytes match the source CRC
+    retransmissions: int
+    virtual_ms: float
+
+
+def crc_transfer(blob: bytes, rng: np.random.Generator | None = None,
+                 corrupt_prob: float = 0.0,
+                 max_retries: int = MAX_RETRIES) -> TransferResult:
+    """Ship one byte image over the simulated link with CRC32 + retry.
+
+    The shared transfer half of Algorithm 1, reused by both hot shard
+    migration and the streaming-update delta protocol: attempts
+    1..max_retries may be corrupted in flight (`corrupt_prob` injects
+    byte flips); attempt max_retries+1 is clean by construction,
+    bounding the loop.  (A real deployment would abort instead; in the
+    simulator only injected corruption exists, so delivery of the
+    source-identical image is guaranteed.)
+    """
+    rng = rng if rng is not None else np.random.default_rng(0)
+    crc = shard_crc32(blob)
+    retrans = 0
+    virtual_ms = 0.0
+    received = blob
+    for attempt in range(1, max_retries + 2):
+        virtual_ms += len(blob) / LINK_BYTES_PER_MS + HANDSHAKE_MS
+        received = blob
+        if (corrupt_prob > 0.0 and attempt <= max_retries
+                and rng.random() < corrupt_prob):
+            bad = bytearray(blob)
+            bad[int(rng.integers(len(bad)))] ^= 0xFF
+            received = bytes(bad)
+        if shard_crc32(received) == crc:
+            break
+        retrans += 1
+    return TransferResult(received=received,
+                          ok=shard_crc32(received) == crc,
+                          retransmissions=retrans, virtual_ms=virtual_ms)
 
 
 @dataclasses.dataclass
@@ -42,6 +86,13 @@ class MigrationResult:
     CRC-confirmed delivery; the bounded retransmission loop guarantees
     this in the simulator (only injected corruption exists), so a False
     here would indicate a bug, not a lossy network.
+
+    ``skipped`` lists (sid, reason) moves the batch dropped instead of
+    executing: a sid absent from `shards` (removed by failover between
+    plan and execute) or whose routing no longer matches the planned
+    source (stale plan / the same sid listed twice).  Skipping keeps
+    `routing` consistent — a crash mid-batch used to leave earlier moves
+    applied and later ones not, with no record of either.
     """
 
     migrated: list
@@ -49,6 +100,7 @@ class MigrationResult:
     retransmissions: int
     bytes_moved: int
     virtual_ms: float
+    skipped: list = dataclasses.field(default_factory=list)
 
 
 def hot_migrate(shards: dict, moves: list, routing: dict,
@@ -61,43 +113,45 @@ def hot_migrate(shards: dict, moves: list, routing: dict,
     at the target — provably identical to the source image) and `routing`
     (flipped to the target only after CRC verification).  Returns batch
     telemetry including the simulated retransmission count.
+
+    Stale moves are skipped, never raised: a planner emitting the same
+    shard twice, or a shard removed/re-homed by failover between plan
+    and execute, must not crash the batch halfway (leaving `routing`
+    half-applied).  Each skip is recorded in ``MigrationResult.skipped``
+    with its reason.
     """
     rng = rng if rng is not None else np.random.default_rng(0)
     migrated: list = []
+    skipped: list = []
     retrans = 0
     bytes_moved = 0
     virtual_ms = 0.0
     crc_ok = True
 
     for sid, src, tgt in moves:
-        shard = shards[sid]
-        blob = shard.serialize()
-        crc = shard_crc32(blob)
-        # attempts 1..max_retries may be corrupted in flight; attempt
-        # max_retries+1 is clean by construction, bounding the loop.
-        # (A real deployment would abort the move instead; in the
-        # simulator only injected corruption exists, so delivery of the
-        # source-identical image is guaranteed.)
-        for attempt in range(1, max_retries + 2):
-            virtual_ms += len(blob) / LINK_BYTES_PER_MS + HANDSHAKE_MS
-            received = blob
-            if (corrupt_prob > 0.0 and attempt <= max_retries
-                    and rng.random() < corrupt_prob):
-                bad = bytearray(blob)
-                bad[int(rng.integers(len(bad)))] ^= 0xFF
-                received = bytes(bad)
-            if shard_crc32(received) == crc:
-                break
-            retrans += 1
-        delivered = shard_crc32(received) == crc
-        crc_ok = crc_ok and delivered
-        if not delivered:       # defensive: shard stays at the source
+        shard = shards.get(sid)
+        if shard is None:
+            skipped.append((sid, "unknown shard"))
             continue
-        shards[sid] = Shard.deserialize(received)
+        if routing.get(sid, src) != src:
+            # the plan's source is stale: a duplicate move in this very
+            # batch already flipped it, or failover re-homed the shard
+            skipped.append((sid, "stale source machine"))
+            continue
+        blob = shard.serialize()
+        tr = crc_transfer(blob, rng=rng, corrupt_prob=corrupt_prob,
+                          max_retries=max_retries)
+        retrans += tr.retransmissions
+        virtual_ms += tr.virtual_ms
+        crc_ok = crc_ok and tr.ok
+        if not tr.ok:           # defensive: shard stays at the source
+            continue
+        shards[sid] = Shard.deserialize(tr.received)
         routing[sid] = tgt
         bytes_moved += len(blob)
         migrated.append(sid)
 
     return MigrationResult(migrated=migrated, crc_ok=crc_ok,
                            retransmissions=retrans,
-                           bytes_moved=bytes_moved, virtual_ms=virtual_ms)
+                           bytes_moved=bytes_moved, virtual_ms=virtual_ms,
+                           skipped=skipped)

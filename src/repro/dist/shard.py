@@ -27,12 +27,13 @@ import zlib
 
 import numpy as np
 
-from repro.core.artree import ARTree
+from repro.core.artree import ARTree, build_artree
 from repro.core.embedding import EmbeddedPaths
 from repro.core.graph import LabeledGraph
 from repro.core.matching import ShardIndex
 
-__all__ = ["Shard", "make_shards", "shard_crc32", "halo_region"]
+__all__ = ["Shard", "make_shard", "make_shards", "shard_crc32",
+           "halo_region", "shard_delta", "apply_shard_delta"]
 
 
 def shard_crc32(blob: bytes) -> int:
@@ -142,6 +143,24 @@ def halo_region(graph: LabeledGraph, owned: np.ndarray,
     return np.flatnonzero(in_region)
 
 
+def make_shard(graph: LabeledGraph, assignment: np.ndarray, sid: int,
+               halo_hops: int = 2) -> Shard:
+    """Cut ONE shard (owned region + halo) out of the data graph.
+
+    Single-shard twin of `make_shards`, so the streaming-update path can
+    rebuild exactly the touched shards of a mutated graph — the result
+    is bit-identical to the shard a full `make_shards` on the same
+    (graph, assignment) would produce at position `sid`.
+    """
+    assignment = np.asarray(assignment)
+    owned = np.flatnonzero(assignment == sid).astype(np.int64)
+    region = halo_region(graph, owned, halo_hops)
+    local, vids = graph.induced_subgraph(region)
+    owned_mask = assignment[vids] == sid
+    return Shard(sid=sid, graph=local, global_ids=vids.astype(np.int64),
+                 owned_mask=owned_mask)
+
+
 def make_shards(graph: LabeledGraph, assignment: np.ndarray, n_parts: int,
                 halo_hops: int = 2) -> list[Shard]:
     """Cut the data graph into shards with `halo_hops` rings of context.
@@ -151,14 +170,108 @@ def make_shards(graph: LabeledGraph, assignment: np.ndarray, n_parts: int,
     halo guarantees the owning shard actually contains the edge and the
     full message-passing context of its owned vertices.
     """
-    assignment = np.asarray(assignment)
-    shards: list[Shard] = []
-    for sid in range(n_parts):
-        owned = np.flatnonzero(assignment == sid).astype(np.int64)
-        region = halo_region(graph, owned, halo_hops)
-        local, vids = graph.induced_subgraph(region)
-        owned_mask = assignment[vids] == sid
-        shards.append(Shard(sid=sid, graph=local,
-                            global_ids=vids.astype(np.int64),
-                            owned_mask=owned_mask))
-    return shards
+    return [make_shard(graph, assignment, sid, halo_hops)
+            for sid in range(n_parts)]
+
+
+# --------------------------------------------------------------------------- #
+# streaming-update delta images (CRC'd like migration replicas)
+# --------------------------------------------------------------------------- #
+def shard_delta(old: Shard, new: Shard) -> bytes:
+    """Canonical delta image: only the components that changed.
+
+    Compares ``new`` (the re-indexed shard) against ``old`` (the replica
+    the hosting machine already holds) and serializes just the changed
+    parts: the region (graph + global_ids + owned_mask) if membership or
+    edges moved, and each path length whose table/embeddings changed.
+    Unchanged lengths ship a carry marker instead of bytes — applying
+    the delta keeps the OLD objects for them (identity preserved, so
+    their resident probe planes stay warm).  Changed lengths ship the
+    embedding matrix but NOT the aR-tree: `build_artree` is
+    deterministic and bit-stable, so the receiver bulk-reloads an
+    identical tree from the embeddings (+ the branching factor),
+    roughly halving changed-length delta bytes.  The blob is
+    npz-canonical: CRC32-able and byte-stable, exactly like the
+    migration replica format it rides next to.
+    """
+    arrays: dict[str, np.ndarray] = {"sid": np.int64(new.sid)}
+    ids_changed = not np.array_equal(old.global_ids, new.global_ids)
+    region_changed = (
+        ids_changed
+        or not np.array_equal(old.owned_mask, new.owned_mask)
+        or old.graph.n_vertices != new.graph.n_vertices
+        or not np.array_equal(old.graph.labels, new.graph.labels)
+        or not np.array_equal(old.graph.edge_list, new.graph.edge_list))
+    arrays["has_region"] = np.bool_(region_changed)
+    if region_changed:
+        arrays["global_ids"] = new.global_ids.astype(np.int64)
+        arrays["owned_mask"] = new.owned_mask.astype(np.bool_)
+        arrays["graph"] = np.frombuffer(new.graph.serialize(),
+                                        dtype=np.uint8)
+    lengths = sorted(new.index.embedded) if new.index is not None else []
+    changed, carried = [], []
+    for l in lengths:
+        ep_new = new.index.embedded[l]
+        ep_old = (old.index.embedded.get(l)
+                  if old.index is not None else None)
+        # carry is gated on the LOCAL-ID MAPPING (global_ids), not the
+        # whole region: an edge/label change inside the region leaves
+        # any length whose table + embeddings are bit-identical fully
+        # valid — it carries, and its resident probe plane stays warm
+        same = (not ids_changed and ep_old is not None
+                and np.array_equal(ep_old.vertices, ep_new.vertices)
+                and np.array_equal(ep_old.embeddings, ep_new.embeddings))
+        if same:
+            carried.append(l)
+        else:
+            changed.append(l)
+            arrays[f"pv{l}"] = ep_new.vertices.astype(np.int32)
+            arrays[f"pe{l}"] = ep_new.embeddings.astype(np.float32)
+            # the branching factor is the ONLY tree datum that ships;
+            # a tree-less staged index (cluster builds none sender-side)
+            # inherits it from the previous epoch's tree
+            tree = new.index.trees.get(l) or (
+                old.index.trees.get(l) if old.index is not None else None)
+            arrays[f"tb{l}"] = np.int64(tree.branching if tree is not None
+                                        else 16)
+    arrays["changed"] = np.asarray(changed, np.int64)
+    arrays["carried"] = np.asarray(carried, np.int64)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def apply_shard_delta(old: Shard, blob: bytes) -> Shard:
+    """Install a CRC-verified delta on top of the local replica.
+
+    Carried lengths keep the old EmbeddedPaths/ARTree OBJECTS (identity
+    intact — the plane cache's staleness check sees the same tree and
+    keeps the slab resident); changed components are decoded from the
+    delta.  The merged shard is byte-identical to the sender's
+    re-indexed shard (`Shard.serialize` equality is property-tested).
+    """
+    z = np.load(io.BytesIO(blob))
+    if int(z["sid"]) != old.sid:
+        raise ValueError("delta addressed to a different shard")
+    if bool(z["has_region"]):
+        graph = LabeledGraph.deserialize(z["graph"].tobytes())
+        global_ids = z["global_ids"].copy()
+        owned_mask = z["owned_mask"].copy()
+    else:
+        graph, global_ids, owned_mask = (old.graph, old.global_ids,
+                                         old.owned_mask)
+    embedded: dict[int, EmbeddedPaths] = {}
+    trees: dict[int, ARTree] = {}
+    for l in [int(x) for x in z["carried"]]:
+        embedded[l] = old.index.embedded[l]
+        trees[l] = old.index.trees[l]
+    for l in [int(x) for x in z["changed"]]:
+        emb = z[f"pe{l}"]
+        embedded[l] = EmbeddedPaths(vertices=z[f"pv{l}"],
+                                    embeddings=emb, length=l)
+        # receiver-side bulk reload: bit-identical to the sender's tree
+        # (build_artree is deterministic), so the tree never ships
+        trees[l] = build_artree(emb, branching=int(z[f"tb{l}"]))
+    index = ShardIndex(embedded=embedded, trees=trees) if embedded else None
+    return Shard(sid=old.sid, graph=graph, global_ids=global_ids,
+                 owned_mask=owned_mask, index=index)

@@ -125,6 +125,78 @@ def test_value_cache_beats_lru_on_skewed_workload():
     assert vc.hit_rate > lru.hit_rate, (vc.hit_rate, lru.hit_rate)
 
 
+@settings(max_examples=10, deadline=None)
+@given(cap=st.integers(1, 8), extra=st.integers(1, 6),
+       orphan=st.integers(0, 3))
+def test_value_cache_evict_survives_diverged_maps(cap, extra, orphan):
+    """Regression: the hard-capacity loop keyed on `self.value` while
+    checking `len(self.store)` — with the maps diverged (store keys
+    missing from value, value keys missing from store) it either raised
+    on an empty min() or spun forever dropping keys that never shrank
+    the store.  Eviction must operate on the store alone."""
+    vc = ValueCache(capacity=cap)
+    for i in range(cap + extra):
+        vc.store[f"s{i}"] = i               # store-only keys: no V entry
+    for i in range(orphan):
+        vc.value[f"orphan{i}"] = 0.9        # value-only keys: no store entry
+    n = vc.maybe_evict(hit_rate=1.0, latency_ms=1.0)   # t_up=0.95
+    assert len(vc.store) <= vc.capacity
+    assert n >= extra
+
+
+def test_value_cache_evict_single_source_of_truth_counts():
+    """Orphan value keys must not inflate eviction counts (they are not
+    cached entries) — only store drops count."""
+    vc = ValueCache(capacity=2)
+    vc.put("a", 1, value=0.9, avg_deg=100.0)
+    vc.value["ghost"] = 0.01                # diverged: no store entry
+    vc.put("b", 2, value=0.8, avg_deg=100.0)
+    vc.put("c", 3, value=0.7, avg_deg=100.0)
+    assert len(vc.store) <= 2
+    assert "ghost" not in vc.store
+
+
+def test_two_level_hit_rate_counts_memory_serves():
+    """Regression: a slave_memory serve was counted as a miss while
+    `access` reported it found (and the engine flags it cache_hits=1).
+    The documented definition: hit_rate = fraction of accesses that
+    returned data from ANY tier; only not_found is a miss."""
+    tl = TwoLevelCache(n_slaves=1, master_capacity=2, slave_capacity=2)
+    tl.register("a", 0)
+    slave_data = {0: {"a": 42}}
+    r = tl.access("a", slave_data)          # slave_memory serve
+    assert r.source == "slave_memory" and r.data == 42
+    assert tl.hit_rate == 1.0
+    r2 = tl.access("nope", slave_data)      # genuine miss
+    assert r2.source == "not_found"
+    assert tl.hit_rate == pytest.approx(0.5)
+    tl.admit("a", 42, value=1.0, avg_deg=1.0, slave_id=0, hit_rate=0.5,
+             latency_ms=5.0)
+    assert tl.access("a", slave_data).source == "master_cache"
+    assert tl.hit_rate == pytest.approx(2 / 3)
+
+
+def test_two_level_peek_and_access_skip_dead_slaves():
+    """Regression: `peek` said True for a key homed on a dead machine
+    while the authoritative path could not serve it — dispatch would
+    skip packing for a query consume then re-executes.  Both sides now
+    take the dead set and stay in lockstep (master cache still serves:
+    it lives on the master node)."""
+    tl = TwoLevelCache(n_slaves=2, master_capacity=2, slave_capacity=2)
+    tl.register("a", 1)
+    slave_data = {1: {"a": 7}}
+    assert tl.peek("a", slave_data)
+    assert tl.access("a", slave_data).data == 7
+    dead = {1}
+    assert not tl.peek("a", slave_data, dead=dead)
+    r = tl.access("a", slave_data, dead=dead)
+    assert r.data is None and r.source == "not_found"
+    # master-cache entries survive the slave's death
+    tl.master.put("a", 7, value=1.0)
+    assert tl.peek("a", slave_data, dead=dead)
+    assert tl.access("a", slave_data, dead=dead).source == "master_cache"
+
+
 def test_two_level_access_priority():
     tl = TwoLevelCache(n_slaves=2, master_capacity=4, slave_capacity=2)
     tl.register("a", 0)

@@ -15,9 +15,10 @@ from repro.core.artree import build_artree
 from repro.core.embedding import EmbeddedPaths
 from repro.core.graph import LabeledGraph
 from repro.core.matching import ShardIndex
-from repro.dist.migration import hot_migrate
+from repro.dist.migration import crc_transfer, hot_migrate
 from repro.dist.partition import metis_like_partition
-from repro.dist.shard import Shard, make_shards, shard_crc32
+from repro.dist.shard import (Shard, apply_shard_delta, make_shards,
+                              shard_crc32, shard_delta)
 
 
 def _random_graph(n: int, m: int, n_labels: int, seed: int) -> LabeledGraph:
@@ -77,6 +78,64 @@ def test_crc32_detects_any_single_byte_flip(data, pos_seed, flip):
     bad[pos] ^= flip
     assert shard_crc32(bytes(bad)) != crc
     assert shard_crc32(data) == crc        # pure function
+
+
+def _indexed_shard(n_points: int, dim: int, seed: int, sid: int = 0) -> Shard:
+    rng = np.random.default_rng(seed)
+    g = _random_graph(10, 20, 3, seed)
+    embedded, trees = {}, {}
+    for l in (1, 2):
+        emb = rng.uniform(0, 1, (n_points, dim * (l + 1))).astype(np.float32)
+        verts = rng.integers(0, 10, size=(n_points, l + 1)).astype(np.int32)
+        embedded[l] = EmbeddedPaths(vertices=verts, embeddings=emb, length=l)
+        trees[l] = build_artree(emb)
+    return Shard(sid=sid, graph=g, global_ids=np.arange(10, dtype=np.int64),
+                 owned_mask=np.ones(10, dtype=bool),
+                 index=ShardIndex(embedded=embedded, trees=trees))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_points=st.integers(1, 40), dim=st.integers(2, 6),
+       seed=st.integers(0, 99))
+def test_shard_delta_roundtrip_carries_unchanged_lengths(n_points, dim, seed):
+    """The streaming-update delta protocol: only changed components
+    ship; unchanged lengths are carried BY IDENTITY (the property that
+    keeps their resident probe planes warm), and the merged shard is
+    byte-identical to the sender's re-indexed shard."""
+    rng = np.random.default_rng(seed + 1)
+    old = _indexed_shard(n_points, dim, seed)
+    # new epoch: length 2 re-embedded, length 1 untouched
+    emb2 = rng.uniform(0, 1, (n_points + 3, dim * 3)).astype(np.float32)
+    verts2 = rng.integers(0, 10, size=(n_points + 3, 3)).astype(np.int32)
+    new = Shard(sid=old.sid, graph=old.graph, global_ids=old.global_ids,
+                owned_mask=old.owned_mask,
+                index=ShardIndex(
+                    embedded={1: old.index.embedded[1],
+                              2: EmbeddedPaths(vertices=verts2,
+                                               embeddings=emb2, length=2)},
+                    trees={1: build_artree(old.index.embedded[1].embeddings),
+                           2: build_artree(emb2)}))
+    blob = shard_delta(old, new)
+    assert len(blob) < len(new.serialize()), "delta must beat the full image"
+    # ride the migration CRC machinery, then install
+    tr = crc_transfer(blob, rng=np.random.default_rng(seed),
+                      corrupt_prob=0.6)
+    assert tr.ok
+    merged = apply_shard_delta(old, tr.received)
+    assert merged.serialize() == new.serialize()
+    assert merged.index.trees[1] is old.index.trees[1], \
+        "unchanged length must carry the old tree object (warm plane)"
+    assert merged.index.embedded[1] is old.index.embedded[1]
+    assert merged.index.trees[2] is not new.index.trees[2]
+
+
+def test_shard_delta_rejects_wrong_sid():
+    a = _indexed_shard(5, 3, seed=0, sid=0)
+    b = _indexed_shard(5, 3, seed=0, sid=1)
+    blob = shard_delta(a, a)
+    import pytest
+    with pytest.raises(ValueError):
+        apply_shard_delta(b, blob)
 
 
 @settings(max_examples=5, deadline=None)

@@ -127,6 +127,37 @@ def test_migration_fault_injection_retransmits(engine):
     assert total_retrans > 0, "corruption should force retransmissions"
 
 
+def test_hot_migrate_skips_stale_and_duplicate_moves(engine):
+    """Regression: a move list naming the same shard twice (planner
+    double-emit), or a sid that no longer exists (removed between plan
+    and execute), raised KeyError mid-batch and left `routing`
+    half-applied with no record.  Stale moves are skipped and reported;
+    valid moves in the same batch still execute."""
+    shards = dict(engine.shards)
+    routing = dict(engine.routing)
+    sids = sorted(shards)
+    a, b = sids[0], sids[1]
+    n_m = len(engine.specs)
+    src_a, src_b = routing[a], routing[b]
+    tgt = (src_a + 1) % n_m                 # guaranteed != src_a
+    ghost = max(sids) + 999
+    moves = [
+        (ghost, 0, 1),                      # unknown shard: skip
+        (a, src_a, tgt),                    # valid: executes
+        (a, src_a, (src_a + 2) % n_m),      # duplicate: src now stale
+        (b, (src_b + 1) % n_m, tgt),        # stale source: skip
+    ]
+    res = hot_migrate(shards, moves, routing,
+                      rng=np.random.default_rng(0))
+    assert res.migrated == [a]
+    assert routing[a] == tgt, "the valid move must still land"
+    assert routing[b] == src_b, "stale-source move must not touch routing"
+    skipped = {sid: reason for sid, reason in res.skipped}
+    assert set(skipped) == {ghost, a, b}
+    assert skipped[ghost] == "unknown shard"
+    assert res.crc_ok
+
+
 def test_crc32_detects_flip():
     blob = b"hello world" * 100
     crc = shard_crc32(blob)
@@ -212,12 +243,41 @@ def test_dead_machine_never_homes_cache(nws_small):
                                 np.zeros(k + 1, dtype=np.int64))
     matches, tel = eng.query(q)
     assert matches == [] and tel.cross_shard_rows == 0
-    key = (q.n_vertices, q.labels.tobytes(), q.edge_list.tobytes())
+    key = eng._query_key(q)
     home = eng.cache.location[key]
     assert home != 0, "cache must never home onto a dead machine"
     assert home not in eng.dead_machines
     assert key in eng._slave_store[home]
     assert key not in eng._slave_store[0]
+
+
+def test_dead_machine_cache_entry_never_serves(nws_small):
+    """Regression: a result homed on a machine that later died kept
+    serving from its (unreachable) slave tiers — and `peek` said True,
+    so megabatch dispatch skipped probe packing for a query the consume
+    step should re-execute.  Peek and access are dead-aware in
+    lockstep: the query re-executes exactly, with no cache hit."""
+    from repro.data.synthetic import make_workload
+    eng = _mini_cluster(nws_small)
+    q = make_workload(nws_small, 1, seed=17)[0]
+    m0, _ = eng.query(q)
+    key = eng._query_key(q)
+    home = eng.cache.location[key]
+    # evict any master-cache copy so only the (dying) slave tiers hold
+    # the result, then drop the machine without purging its stores
+    eng.cache.master._drop(key)
+    eng.dead_machines.add(home)
+    assert not eng._cache_peek(key), \
+        "peek must not promise a result only a dead machine holds"
+    # megabatch path first (before anything re-homes the result):
+    # dispatch must pack probes and consume must re-execute exactly
+    (m1, t1), = eng.query_batch([q])
+    assert t1.cache_hits == 0, "dead machine's entry must not serve"
+    assert m1 == m0
+    # the re-executed result re-homed onto a LIVE machine: serves again
+    m2, t2 = eng.query(q)
+    assert m2 == m0 and t2.cache_hits == 1
+    assert eng.cache.location[key] not in eng.dead_machines
 
 
 def test_all_machines_dead_skips_cache_admission(nws_small):
@@ -231,7 +291,7 @@ def test_all_machines_dead_skips_cache_admission(nws_small):
                                 np.zeros(k + 1, dtype=np.int64))
     matches, _ = eng.query(q)
     assert matches == []
-    key = (q.n_vertices, q.labels.tobytes(), q.edge_list.tobytes())
+    key = eng._query_key(q)
     assert key not in eng.cache.location
     assert all(key not in store for store in eng._slave_store.values())
 

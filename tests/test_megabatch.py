@@ -256,7 +256,7 @@ def test_plan_artifact_lru_counts_hits():
     _, t3 = eng.query(q2, probe_mode="plane")
     assert t3.plan_cache_hits == 0
     # artifacts are reused, not recomputed: identical object identity
-    key = (q.n_vertices, q.labels.tobytes(), q.edge_list.tobytes())
+    key = eng._query_key(q)
     ent = eng._plan_lru[key]
     _, t4 = eng.query(q, probe_mode="plane")
     assert eng._plan_lru[key] is ent and t4.plan_cache_hits == 1

@@ -1,0 +1,436 @@
+"""Streaming graph updates (ISSUE 5).
+
+Contracts under test:
+
+  * rebuild equivalence — `apply_updates` followed by `query` /
+    `query_batch` is bit-identical (matches, node counters, comm bytes,
+    and the shard byte images themselves) to a freshly built engine on
+    the updated graph with the same partition assignment and GNN
+    params, in all of probe_mode {host, device, plane};
+  * invalidation scope — only touched shards repack their resident
+    probe planes after an update; untouched shards keep their warm
+    slabs (plane tokens unchanged, zero slab h2d bytes);
+  * epoch consistency — result-cache keys embed the data epoch, so a
+    post-update query can never be served a pre-update answer, and
+    superseded results are purged from every tier;
+  * in-flight megabatch — a batch dispatched before an update and
+    consumed after it falls back to the serial plane path (epoch stamp
+    + stale-assembly backstop) and returns post-update answers;
+  * updates under concurrent rebalancing — interleaving apply_updates
+    with rebalancing workload epochs preserves the rebuild-equivalence
+    invariant and exactness (offline-hypothesis property).
+
+The test graphs are built from disjoint communities with the partition
+assignment injected along community lines: with 2-hop halos a
+small-world update touches every shard (the halo legitimately spans the
+graph), so locality claims need a topology that HAS locality.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.graph import GraphDelta, LabeledGraph, apply_graph_delta
+from tests.conftest import vf2_oracle
+
+_COUNTERS = ("comm_bytes", "cross_shard_rows", "shards_skipped",
+             "paths_executed", "paths_skipped", "n_matches", "cache_hits")
+_MODES = ("host", "device", "plane")
+
+
+def clustered_graph(n_comp=4, size=55, n_labels=5, seed=0) -> LabeledGraph:
+    """Disjoint ring-plus-chords communities (one shard each)."""
+    rng = np.random.default_rng(seed)
+    edges, labels = [], []
+    for c in range(n_comp):
+        base = c * size
+        for i in range(size):
+            edges.append([base + i, base + (i + 1) % size])
+        extra = rng.integers(0, size, (size, 2)) + base
+        edges.extend(extra.tolist())
+        labels.extend(rng.integers(0, n_labels, size).tolist())
+    return LabeledGraph.from_edges(n_comp * size, np.asarray(edges),
+                                   np.asarray(labels))
+
+
+def _build(seed=1, n_comp=4, size=55):
+    from repro.dist.cluster import DistributedGNNPE
+    g = clustered_graph(n_comp=n_comp, size=size, seed=seed)
+    assignment = np.repeat(np.arange(n_comp), size).astype(np.int32)
+    eng = DistributedGNNPE.build(g, 2, shards_per_machine=n_comp // 2,
+                                 gnn_train_steps=8, seed=seed,
+                                 assignment=assignment)
+    return g, eng
+
+
+_ENGINE = None
+
+
+def _engine():
+    """Module-shared engine for READ-ONLY tests (no-op delta,
+    validation errors).  Tests that apply real updates or flip engine
+    flags must call `_build()` for a private instance — shared mutable
+    state would make their assertions order-dependent."""
+    global _ENGINE
+    if _ENGINE is None:
+        _ENGINE = _build()
+    return _ENGINE
+
+
+def random_delta(graph: LabeledGraph, rng: np.random.Generator,
+                 component=0, size=55, n_labels=5,
+                 with_vertices=True) -> GraphDelta:
+    """A random insert+delete mix confined to one community."""
+    base = component * size
+    comp_edges = graph.edge_list[
+        (graph.edge_list[:, 0] >= base)
+        & (graph.edge_list[:, 0] < base + size)]
+    n_del = int(rng.integers(1, 4))
+    dels = comp_edges[rng.choice(comp_edges.shape[0],
+                                 min(n_del, comp_edges.shape[0]),
+                                 replace=False)]
+    adds = rng.integers(base, base + size, (int(rng.integers(1, 4)), 2))
+    deleted = {tuple(sorted(e)) for e in dels.tolist()}
+    adds = np.asarray([e for e in adds.tolist()
+                       if tuple(sorted(e)) not in deleted],
+                      np.int64).reshape(-1, 2)
+    add_labels, extra_edges = (), []
+    if with_vertices and rng.random() < 0.5:
+        n0 = graph.n_vertices
+        add_labels = rng.integers(0, n_labels, 1)
+        extra_edges = [[n0, int(rng.integers(base, base + size))]]
+    return GraphDelta.make(
+        add_vertex_labels=add_labels,
+        add_edges=np.concatenate([adds, np.asarray(extra_edges,
+                                                   np.int64).reshape(-1, 2)])
+        if len(extra_edges) else adds,
+        del_edges=dels)
+
+
+def assert_engines_equivalent(eng, ref, queries, modes=_MODES):
+    """matches + deterministic counters + shard images bit-identical."""
+    for sid in eng.shards:
+        assert eng.shards[sid].serialize() == ref.shards[sid].serialize(), \
+            f"shard {sid} byte image diverged from the rebuild oracle"
+    for mode in modes:
+        for q in queries:
+            m1, t1 = eng.query(q, probe_mode=mode)
+            m2, t2 = ref.query(q, probe_mode=mode)
+            assert m1 == m2, f"matches diverged in {mode}"
+            for f in _COUNTERS:
+                assert getattr(t1, f) == getattr(t2, f), (mode, f)
+
+
+# --------------------------------------------------------------------------- #
+# tentpole: rebuild equivalence
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_update_rebuild_equivalence_property(seed):
+    """For random insert+delete batches, update-then-query is
+    bit-identical to a from-scratch build on the updated graph — all
+    probe modes, plus the exactness oracle."""
+    from repro.data.synthetic import make_workload
+    rng = np.random.default_rng(seed)
+    g, eng = _build(seed=2)
+    eng.use_cache = False
+    for component in (0, int(rng.integers(0, 4))):
+        rep = eng.apply_updates(random_delta(eng.graph, rng,
+                                             component=component))
+        assert rep.data_epoch == eng._data_epoch
+    ref = eng.rebuild_reference()
+    ref.use_cache = False
+    qs = make_workload(eng.graph, 3, seed=seed)
+    assert_engines_equivalent(eng, ref, qs)
+    # exactness against the VF2 oracle on the UPDATED graph
+    m, _ = eng.query(qs[0])
+    assert set(m) == vf2_oracle(eng.graph, qs[0])
+
+
+def test_update_query_batch_matches_serial_and_reference():
+    from repro.data.synthetic import make_workload
+    g, eng = _build(seed=3)
+    eng.use_cache = False
+    eng.apply_updates(random_delta(g, np.random.default_rng(5)))
+    ref = eng.rebuild_reference()
+    ref.use_cache = False
+    qs = make_workload(eng.graph, 4, seed=11)
+    got = eng.query_batch(qs)
+    want = [ref.query(q, probe_mode="plane") for q in qs]
+    for (m_b, t_b), (m_s, t_s) in zip(got, want):
+        assert m_b == m_s
+        for f in _COUNTERS:
+            assert getattr(t_b, f) == getattr(t_s, f), f
+
+
+def test_update_reuses_clean_paths_and_ships_deltas():
+    """The perf contract: only paths through dirty vertices re-embed,
+    and the CRC'd delta is a fraction of the full-cluster image."""
+    g, eng = _build(seed=11)
+    u, v = map(int, g.edge_list[3])
+    rep = eng.apply_updates(GraphDelta.make(del_edges=[[u, v]]))
+    assert rep.touched_shards and len(rep.touched_shards) < rep.n_shards
+    assert rep.paths_reused > 0, "clean paths must be spliced, not recomputed"
+    assert rep.delta_bytes < rep.full_image_bytes / 2
+    assert rep.retransmissions == 0
+
+
+def test_update_delta_transfer_retransmits_under_corruption():
+    """The delta protocol rides the migration CRC/retry machinery:
+    injected corruption must retransmit, never install a bad image."""
+    _, eng = _build(seed=4, n_comp=2, size=40)
+    eng.use_cache = False
+    rng = np.random.default_rng(0)
+    total_retrans = 0
+    for k in range(4):      # corruption is stochastic; sample several
+        # a corrupted delta must never install: apply_updates raises
+        # before any commit if delivery fails CRC, so returning at all
+        # certifies every installed image was verified
+        rep = eng.apply_updates(
+            random_delta(eng.graph, rng,
+                         component=k % 2, size=40,
+                         n_labels=5, with_vertices=False),
+            corrupt_prob=0.8)
+        total_retrans += rep.retransmissions
+    assert total_retrans > 0, "corruption should force retransmissions"
+    ref = eng.rebuild_reference()
+    for sid in eng.shards:
+        assert eng.shards[sid].serialize() == ref.shards[sid].serialize()
+
+
+# --------------------------------------------------------------------------- #
+# invalidation scope: untouched shards keep warm slabs
+# --------------------------------------------------------------------------- #
+
+
+def test_untouched_shards_keep_warm_slabs():
+    from repro.data.synthetic import make_workload
+    g, eng = _build(seed=12)
+    eng.use_cache = False
+    qs = make_workload(eng.graph, 2, seed=5)
+    for q in qs:
+        eng.query(q, probe_mode="plane")        # pack + warm every plane
+    tokens_before = dict(eng.planes.tokens())
+    builds_before = eng.planes.stats["plane_builds"]
+
+    e = eng.graph.edge_list
+    u, v = map(int, e[int(e.shape[0] // 2)])
+    rep = eng.apply_updates(GraphDelta.make(del_edges=[[u, v]]))
+    touched = set(rep.touched_shards)
+    assert touched and touched < set(eng.shards), \
+        "fixture must leave untouched shards"
+
+    for q in qs:
+        eng.query(q, probe_mode="plane")        # repack only what changed
+    tokens_after = eng.planes.tokens()
+    untouched_keys = [k for k in tokens_before if k[0] not in touched]
+    assert untouched_keys
+    for k in untouched_keys:
+        assert tokens_after.get(k) == tokens_before[k], \
+            f"untouched plane {k} was repacked (slab h2d > 0)"
+    # every new pack belongs to a touched shard
+    repacked = [k for k, t in tokens_after.items()
+                if tokens_before.get(k) != t]
+    assert all(k[0] in touched for k in repacked)
+    assert eng.planes.stats["plane_builds"] - builds_before == len(repacked)
+
+
+# --------------------------------------------------------------------------- #
+# epoch consistency: caches can never serve pre-update answers
+# --------------------------------------------------------------------------- #
+
+
+def test_cache_epoch_never_serves_stale_answer():
+    from repro.data.synthetic import random_walk_query
+    g, eng = _build(seed=6, n_comp=2, size=40)
+    assert eng.use_cache
+    q = random_walk_query(eng.graph, 3, seed=3)
+    m0, t0 = eng.query(q)
+    m_cached, t_cached = eng.query(q)
+    assert t_cached.cache_hits == 1 and m_cached == m0
+
+    # delete an edge of an actual match (guaranteed answer change
+    # candidate) — or any edge if the query had no matches
+    if m0:
+        qe = q.edge_list[0]
+        mapped = [[m[qe[0]], m[qe[1]]] for m in m0]
+        delta = GraphDelta.make(del_edges=mapped)
+    else:
+        delta = GraphDelta.make(del_edges=[eng.graph.edge_list[0]])
+    rep = eng.apply_updates(delta)
+    assert rep.results_purged >= 1
+
+    m1, t1 = eng.query(q)
+    assert t1.cache_hits == 0, \
+        "post-update query must re-execute, never hit a pre-update entry"
+    assert set(m1) == vf2_oracle(eng.graph, q)
+    if m0:
+        assert set(m1) != set(m0), "fixture should have changed the answer"
+    # stale keys are gone from every tier
+    assert all(k[0] == eng._data_epoch for store in eng._slave_store.values()
+               for k in store)
+    assert all(k[0] == eng._data_epoch for k in eng.cache.location)
+
+
+def test_inflight_megabatch_spanning_update_falls_back_serially():
+    """Dispatch -> apply_updates -> consume: the flight's epoch stamp
+    (and the stale-assembly backstop) force the serial plane path, so
+    every answer reflects the POST-update graph."""
+    from repro.data.synthetic import make_workload
+    g, eng = _build(seed=7)
+    eng.use_cache = False
+    qs = make_workload(eng.graph, 3, seed=13)
+    mb = eng._mb_dispatch(qs, "pescore")
+    rep = eng.apply_updates(
+        GraphDelta.make(add_vertex_labels=[1],
+                        add_edges=[[eng.graph.n_vertices, 0]],
+                        del_edges=[eng.graph.edge_list[0]]))
+    assert rep.data_epoch == eng._data_epoch
+    got = eng._mb_consume(mb)
+    ref = eng.rebuild_reference()
+    ref.use_cache = False
+    for (m_b, t_b), q in zip(got, qs):
+        m_s, t_s = ref.query(q, probe_mode="plane")
+        assert m_b == m_s
+        for f in _COUNTERS:
+            assert getattr(t_b, f) == getattr(t_s, f), f
+        assert set(m_b) == vf2_oracle(eng.graph, q)
+
+
+# --------------------------------------------------------------------------- #
+# property: updates under concurrent rebalancing epochs
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=2, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_updates_interleaved_with_rebalancing_property(seed):
+    """apply_updates interleaved with rebalancing (and megabatch)
+    workload epochs keeps the rebuild-equivalence invariant and never
+    leaves a plane or cached result epoch-stale."""
+    from repro.data.synthetic import make_workload
+    rng = np.random.default_rng(seed)
+    g, eng = _build(seed=8)
+    for step in range(2):
+        qs = make_workload(eng.graph, 6, seed=seed + step,
+                           hot_fraction=0.5)
+        eng.run_workload(qs, rebalance=True,
+                         batch_size=3 if step else None,
+                         probe_mode="plane")
+        eng.apply_updates(random_delta(eng.graph, rng,
+                                       component=int(rng.integers(0, 4))))
+        # post-update stream is served fresh and exactly
+        q = make_workload(eng.graph, 1, seed=seed + 91)[0]
+        m, tel = eng.query(q, probe_mode="plane")
+        assert tel.cache_hits == 0
+        assert set(m) == vf2_oracle(eng.graph, q)
+    eng.use_cache = False
+    ref = eng.rebuild_reference()
+    ref.use_cache = False
+    assert_engines_equivalent(eng, ref,
+                              make_workload(eng.graph, 2, seed=seed + 7),
+                              modes=("plane",))
+    assert all(k[0] == eng._data_epoch for k in eng.cache.location)
+
+
+# --------------------------------------------------------------------------- #
+# GraphDelta semantics + guardrails
+# --------------------------------------------------------------------------- #
+
+
+def test_graph_delta_semantics():
+    g = LabeledGraph.from_edges(4, [[0, 1], [1, 2], [2, 3]], [0, 1, 0, 1])
+    new, info = apply_graph_delta(g, GraphDelta.make(
+        add_vertex_labels=[1], add_edges=[[4, 0], [0, 1]],
+        del_edges=[[2, 3], [0, 3]], del_vertices=[2]))
+    # [0,1] existed (no-op add), [0,3] absent (no-op del); vertex 2
+    # detaches (removes [1,2] implicitly, [2,3] was deleted anyway)
+    assert new.n_vertices == 5
+    assert info["n_added_edges"] == 1 and info["n_removed_edges"] == 2
+    assert sorted(map(tuple, new.edge_list.tolist())) == [(0, 1), (0, 4)]
+    assert new.degrees[2] == 0 and new.labels[2] == 0    # tombstone
+    assert 2 in info["seeds"] and 4 in info["seeds"]
+
+
+def test_graph_delta_validation():
+    g = LabeledGraph.from_edges(3, [[0, 1], [1, 2]], [0, 1, 0])
+    with pytest.raises(ValueError):
+        apply_graph_delta(g, GraphDelta.make(add_edges=[[0, 7]]))
+    with pytest.raises(ValueError):
+        apply_graph_delta(g, GraphDelta.make(del_vertices=[9]))
+    with pytest.raises(ValueError):
+        apply_graph_delta(g, GraphDelta.make(del_vertices=[1],
+                                             add_edges=[[0, 1]]))
+    # an edge in BOTH lists would resolve state-dependently: reject
+    # (either orientation — canonicalization runs first)
+    with pytest.raises(ValueError):
+        apply_graph_delta(g, GraphDelta.make(add_edges=[[0, 1]],
+                                             del_edges=[[1, 0]]))
+    with pytest.raises(ValueError):
+        apply_graph_delta(g, GraphDelta.make(add_edges=[[0, 2]],
+                                             del_edges=[[0, 2]]))
+
+
+def test_empty_delta_is_noop():
+    g, eng = _engine()
+    epoch = eng._data_epoch
+    tokens = dict(eng.planes.tokens())
+    rep = eng.apply_updates(GraphDelta.make())
+    assert rep.noop and eng._data_epoch == epoch
+    assert eng.planes.tokens() == tokens
+
+
+def test_effectively_empty_delta_keeps_caches():
+    """Idempotent upserts (insert an existing edge, delete an absent
+    one) change nothing: no epoch bump, no cache purge, no PE refit —
+    a streaming-ingest upsert storm must not destroy the warm state."""
+    g, eng = _engine()
+    u, v = map(int, eng.graph.edge_list[0])
+    epoch = eng._data_epoch
+    graph_before = eng.graph
+    tokens = dict(eng.planes.tokens())
+    rep = eng.apply_updates(GraphDelta.make(add_edges=[[u, v]],
+                                            del_edges=[[0, 0]]))
+    assert rep.noop and rep.touched_shards == []
+    assert eng._data_epoch == epoch and eng.graph is graph_before
+    assert eng.planes.tokens() == tokens
+
+
+def test_new_label_out_of_vocabulary_raises():
+    g, eng = _engine()
+    epoch = eng._data_epoch
+    with pytest.raises(ValueError):
+        eng.apply_updates(GraphDelta.make(
+            add_vertex_labels=[eng.cfg.n_labels]))
+    with pytest.raises(ValueError):
+        eng.apply_updates(GraphDelta.make(add_vertex_labels=[-1]))
+    # validation precedes mutation: nothing half-applied
+    assert eng._data_epoch == epoch and eng.graph is g
+
+
+def test_vertex_add_and_detach_exactness():
+    from repro.data.synthetic import random_walk_query
+    _, eng = _build(seed=9, n_comp=2, size=40)
+    eng.use_cache = False
+    n0 = eng.graph.n_vertices
+    hub = int(np.argmax(eng.graph.degrees))
+    eng.apply_updates(GraphDelta.make(
+        add_vertex_labels=[0, 1],
+        add_edges=[[n0, hub], [n0 + 1, n0], [n0 + 1, hub]],
+        del_vertices=[int(eng.graph.edge_list[5][0])]))
+    assert eng.graph.n_vertices == n0 + 2
+    for s in range(3):
+        q = random_walk_query(eng.graph, 3, seed=s)
+        m, _ = eng.query(q)
+        assert set(m) == vf2_oracle(eng.graph, q)
+    # retirement is enforced ACROSS batches: a later delta may not
+    # re-attach the detached id (same-batch rejection alone would let
+    # an id-mix-up silently resurrect it)
+    retired = next(iter(eng.retired_ids))
+    epoch = eng._data_epoch
+    with pytest.raises(ValueError):
+        eng.apply_updates(GraphDelta.make(add_edges=[[retired, hub]]))
+    assert eng._data_epoch == epoch, "rejected batch must not mutate"
