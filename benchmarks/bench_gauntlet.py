@@ -1,0 +1,160 @@
+"""Gauntlet benchmark matrix -> BENCH_gauntlet.json (ISSUE 6 part c/d).
+
+Emits a stable-schema JSON matrix future perf PRs must not regress:
+
+  gauntlet.schema_version     int (bump only on layout changes)
+  gauntlet.cells[cell]        wall_ms, matches_per_sec, launches_per_query,
+                              prune_ratio, n_matches, counters
+  gauntlet.plans[family]      ranked (pescore) vs degree vs random plan
+                              wall-clock + deterministic virtual latency
+
+`--smoke` runs 2 cells of one topology with ALL THREE oracles asserted
+(the CI gate) and fails if the ranked plan's wall-clock regresses >20%
+vs the degree baseline (with a small absolute floor so micro-cells don't
+flake on timer noise).  The full run covers the standing matrix.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import merge_json
+from repro.core.matching import build_shard_index, exact_match
+from repro.data.gauntlet import (TOPOLOGY_BUILDERS, CellSpec, Gauntlet,
+                                 build_topology, default_matrix)
+
+SCHEMA_VERSION = 1
+PLAN_MODES = ("pescore", "degree", "random")
+SMOKE_CELLS = (CellSpec("community", "triangle_tail", "dense"),
+               CellSpec("community", "star", "free"))
+# smoke regression gate: ranked <= 1.2x degree, +20ms absolute slack
+PLAN_GATE_RATIO = 1.2
+PLAN_GATE_SLACK_MS = 20.0
+
+
+def _median_wall_ms(fn, n: int = 3) -> float:
+    fn()                                     # warm plan/JIT caches
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(ts))
+
+
+def bench_cell(gnt: Gauntlet, spec: CellSpec, global_index) -> dict:
+    """One cell's perf row; oracle checks live in run_cell/tests."""
+    eng = gnt.eng
+    query = gnt.make_query(spec)
+    matches, tel = eng.query(query, probe_mode="host")
+    wall_ms = _median_wall_ms(
+        lambda: eng.query(query, probe_mode="host"))
+    stats = exact_match(query, gnt.graph, global_index, eng.params,
+                        eng.cfg, max_path_length=eng.max_path_length)[1]
+    return {
+        "n_matches": len(matches),
+        "wall_ms": round(wall_ms, 3),
+        "matches_per_sec": round(len(matches) / max(wall_ms, 1e-6) * 1e3, 1),
+        "launches_per_query": tel.probe_launches,
+        "prune_ratio": round(stats.pruning_rate, 4),
+        "counters": Gauntlet.counters(tel),
+    }
+
+
+def bench_plans(gnt: Gauntlet, queries) -> dict:
+    """Ranked-vs-degree-vs-random wall-clock over one family's queries."""
+    eng = gnt.eng
+    out = {}
+    for mode in PLAN_MODES:
+        def run_all(mode=mode):
+            for q in queries:
+                eng.query(q, plan_mode=mode, probe_mode="host")
+        wall = _median_wall_ms(run_all)
+        virt = sum(eng.query(q, plan_mode=mode, probe_mode="host")[1]
+                   .latency_ms for q in queries)
+        comm = sum(eng.query(q, plan_mode=mode, probe_mode="host")[1]
+                   .comm_bytes for q in queries)
+        out[mode] = {"wall_ms": round(wall, 3),
+                     "virtual_ms": round(virt, 3),
+                     "comm_bytes": comm}
+    return out
+
+
+def run_matrix(cells, scale: float = 1.0, oracles: bool = False) -> dict:
+    """Benchmark the given cells, one engine per topology (engines are
+    shared across a topology's cells, matching how tests exercise
+    accumulated migration/update state when oracles=True)."""
+    report = {"schema_version": SCHEMA_VERSION, "scale": scale,
+              "cells": {}, "plans": {}}
+    by_topo: dict[str, list[CellSpec]] = {}
+    for spec in cells:
+        by_topo.setdefault(spec.topology, []).append(spec)
+    for tname, specs in by_topo.items():
+        graph = build_topology(tname, scale=scale)
+        gnt = Gauntlet(graph, seed=0)
+        gidx = build_shard_index(graph, gnt.eng.params, gnt.eng.cfg,
+                                 max_length=gnt.eng.max_path_length)
+        for spec in specs:
+            if oracles:
+                rep = gnt.run_cell(spec, invariance=False)
+                assert rep.ok, f"oracle failed on {spec.name}"
+            report["cells"][spec.name] = bench_cell(gnt, spec, gidx)
+        dense_qs = [gnt.make_query(s) for s in specs if s.regime == "dense"]
+        if dense_qs:
+            report["plans"][tname] = bench_plans(gnt, dense_qs)
+    return report
+
+
+def check_plan_gate(report: dict) -> list[str]:
+    """Ranked-plan regression gate: >20% slower than degree fails."""
+    failures = []
+    for family, plans in report["plans"].items():
+        pe = plans["pescore"]["wall_ms"]
+        dg = plans["degree"]["wall_ms"]
+        if pe > dg * PLAN_GATE_RATIO + PLAN_GATE_SLACK_MS:
+            failures.append(
+                f"{family}: pescore {pe:.1f}ms > "
+                f"{PLAN_GATE_RATIO}x degree {dg:.1f}ms + "
+                f"{PLAN_GATE_SLACK_MS:.0f}ms slack")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="2-cell CI gate: oracles + plan regression check")
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--out", default="BENCH_gauntlet.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cells = list(SMOKE_CELLS)
+    else:
+        topos = {name: build_topology(name, scale=args.scale)
+                 for name in TOPOLOGY_BUILDERS}
+        cells = default_matrix(topos)
+    report = run_matrix(cells, scale=args.scale, oracles=args.smoke)
+    merge_json(args.out, "gauntlet", report)
+
+    for cell, row in report["cells"].items():
+        print(f"{cell}: {row['n_matches']} matches, {row['wall_ms']}ms, "
+              f"prune={row['prune_ratio']}, "
+              f"launches={row['launches_per_query']}")
+    for family, plans in report["plans"].items():
+        print(f"plans[{family}]: " + "  ".join(
+            f"{m}={plans[m]['wall_ms']}ms/{plans[m]['comm_bytes']}B"
+            for m in PLAN_MODES))
+
+    failures = check_plan_gate(report)
+    for f in failures:
+        print(f"PLAN GATE FAIL: {f}", file=sys.stderr)
+    print(f"wrote {args.out}" + (" (smoke)" if args.smoke else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -230,17 +230,28 @@ def aggregate_global_features(per_shard: list[ShardFeatures]) -> np.ndarray:
 
 
 N_GLOBAL_FEATURES = 2 * MAX_PATH_LEN + 3
-N_PATH_FEATURES = N_GLOBAL_FEATURES + 10
+N_PATH_FEATURES = N_GLOBAL_FEATURES + 12
 
 
 def path_feature_vector(query: LabeledGraph, path_vertices: np.ndarray,
                         cross_shard: bool, global_features: np.ndarray,
-                        label_freq: np.ndarray | None = None) -> np.ndarray:
+                        label_freq: np.ndarray | None = None,
+                        q_emb: np.ndarray | None = None,
+                        mbr_uppers: dict[int, np.ndarray] | None = None
+                        ) -> np.ndarray:
     """X_qi: global features + path-specific features (Algorithm 6 step 2).
 
     label_freq: normalized label histogram of the DATA graph — paths built
     from rare labels have few candidates and prune hard, which is the main
     signal the ranker can exploit before executing anything.
+
+    q_emb + mbr_uppers (per-length [S, D] root-MBR upper summaries) add
+    two shard-skip features: the fraction of shards whose root MBR
+    dominance-rejects this path in both orientations (predicted root
+    skips — the paths the ranker should fire first, they prune whole
+    shards for free), and the mean per-dimension exceed fraction (a soft
+    margin).  Both are 0 when the embedding or the summaries are absent,
+    keeping the feature layout fixed.
     """
     deg = query.degrees[path_vertices].astype(np.float64)
     labels = query.labels[path_vertices]
@@ -251,6 +262,18 @@ def path_feature_vector(query: LabeledGraph, path_vertices: np.ndarray,
         rare_max = float(-np.log(lf + 1e-9).max())
     else:
         rare_mean = rare_max = 0.0
+    skip_frac = exceed_mean = 0.0
+    if q_emb is not None and mbr_uppers:
+        up = mbr_uppers.get(length)
+        if up is not None and up.shape[0] and up.shape[1] == q_emb.shape[0]:
+            eps = 1e-5
+            d = q_emb.shape[0] // (length + 1)
+            q_rev = q_emb.reshape(length + 1, d)[::-1].reshape(-1)
+            f_ex = q_emb[None, :] > up + eps                   # [S, D]
+            r_ex = q_rev[None, :] > up + eps
+            skip_frac = float((f_ex.any(axis=1)
+                               & r_ex.any(axis=1)).mean())
+            exceed_mean = float(f_ex.mean())
     own = np.array([
         length,
         float(cross_shard),
@@ -258,6 +281,7 @@ def path_feature_vector(query: LabeledGraph, path_vertices: np.ndarray,
         len(set(labels.tolist())) / max(len(labels), 1),
         float(labels.mean()),
         rare_mean, rare_max,
+        skip_frac, exceed_mean,
     ], dtype=np.float32)
     return np.concatenate([global_features, own])
 
@@ -272,6 +296,10 @@ class PEScoreModel:
         self.gbdt: GBDT | None = None
         self.global_features = np.zeros(N_GLOBAL_FEATURES, np.float32)
         self.label_freq = np.zeros(0, np.float32)   # data-graph label hist
+        # per-length [S, D] root-MBR upper summaries (shard rows sorted by
+        # id; -inf rows for shards with no tree at that length) — lets the
+        # ranker predict root skips before launching anything
+        self.mbr_uppers: dict[int, np.ndarray] = {}
 
     @staticmethod
     def label_pe_score(n_valid: float, n_total: float,

@@ -19,7 +19,8 @@ from repro.core.graph import LabeledGraph
 from repro.core.paths import PathTable, paths_of_query
 from repro.core.pescore import PEScoreModel, path_feature_vector
 
-__all__ = ["RankedPlan", "rank_query_plan", "degree_based_plan"]
+__all__ = ["RankedPlan", "rank_query_plan", "degree_based_plan",
+           "random_plan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,10 +41,17 @@ def _main_shard(path_vertices: np.ndarray, shard_of: np.ndarray | None) -> int:
 def rank_query_plan(query: LabeledGraph, model: PEScoreModel,
                     shard_of: np.ndarray | None = None,
                     max_path_length: int = 3,
-                    tables: list[PathTable] | None = None) -> RankedPlan:
-    """Algorithm 6 end-to-end."""
+                    tables: list[PathTable] | None = None,
+                    q_embs: list[np.ndarray] | None = None) -> RankedPlan:
+    """Algorithm 6 end-to-end.
+
+    q_embs: per-table [n_paths, D] query path embeddings; when given (and
+    the model carries `mbr_uppers` root summaries) the features include
+    the predicted per-shard root-skip fraction for each path.
+    """
     tables = tables if tables is not None else \
         paths_of_query(query, max_path_length)
+    mbr_uppers = getattr(model, "mbr_uppers", None)
 
     # Steps 1-2: features
     rows: list[tuple[int, int]] = []
@@ -53,9 +61,12 @@ def rank_query_plan(query: LabeledGraph, model: PEScoreModel,
             pv = t.vertices[r]
             cross = bool(shard_of is not None
                          and len(set(shard_of[pv].tolist())) > 1)
+            qe = q_embs[ti][r] if q_embs is not None else None
             feats.append(path_feature_vector(query, pv, cross,
                                              model.global_features,
-                                             model.label_freq))
+                                             model.label_freq,
+                                             q_emb=qe,
+                                             mbr_uppers=mbr_uppers))
             rows.append((ti, r))
     if not rows:
         return RankedPlan([], {}, [])
@@ -106,3 +117,17 @@ def degree_based_plan(query: LabeledGraph,
             key[(ti, r)] = float(deg.mean())
     order = sorted(rows, key=lambda rc: -key[rc])
     return RankedPlan(order=order, scores=key, groups=[order])
+
+
+def random_plan(query: LabeledGraph, seed: int = 0,
+                tables: list[PathTable] | None = None,
+                max_path_length: int = 3) -> RankedPlan:
+    """Baseline: uniformly shuffled path order (gauntlet control arm)."""
+    tables = tables if tables is not None else \
+        paths_of_query(query, max_path_length)
+    rows = [(ti, r) for ti, t in enumerate(tables)
+            for r in range(t.n_paths)]
+    rng = np.random.default_rng(seed)
+    order = [rows[i] for i in rng.permutation(len(rows))]
+    scores = {rc: 0.0 for rc in rows}
+    return RankedPlan(order=order, scores=scores, groups=[order])

@@ -1,0 +1,310 @@
+"""Workload gauntlet (ISSUE 6): standing scenario matrix + three oracles.
+
+The gauntlet is the correctness-tooling layer every perf PR stands on: a
+matrix of (topology x query-shape x regime) cells, each verified against
+three independent oracles:
+
+  1. EXACTNESS — engine matches equal an independent brute-force
+     reference matcher on the global graph (no index, no dominance
+     pruning; pure label-filtered DFS).  This re-derives GNN-PE's
+     no-false-dismissal guarantee from scratch per cell.
+  2. MODE IDENTITY — matches (including order) and deterministic
+     per-query counters (comm bytes, cross-shard rows, root-MBR skips,
+     paths executed/skipped) are bit-identical across probe_mode
+     host / device / plane and megabatch `query_batch`.
+  3. INVARIANCE — answers stay equal to the (re-derived) brute-force
+     reference after a forced hot migration and after an
+     `apply_updates` delta batch mutates the graph.
+
+Cells are deterministic per seed; `default_matrix` builds the standing
+matrix used by tests/test_gauntlet.py and benchmarks/bench_gauntlet.py.
+A dense cell whose shape is structurally absent from a topology (e.g. a
+triangle in a bipartite graph) automatically degrades to the match-free
+regime — that degradation is itself an adversarial cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.graph import GraphDelta, LabeledGraph
+from repro.data.synthetic import (SHAPE_NAMES, bipartite_graph,
+                                  community_graph, near_clique_graph,
+                                  nws_graph, shape_query,
+                                  skewed_label_graph)
+
+__all__ = ["CellSpec", "CellReport", "TOPOLOGY_BUILDERS", "build_topology",
+           "brute_force_matches", "default_matrix", "Gauntlet",
+           "MODE_COUNTERS"]
+
+# deterministic per-query counters that must agree across probe modes
+MODE_COUNTERS = ("n_matches", "comm_bytes", "cross_shard_rows",
+                 "shards_skipped", "paths_executed", "paths_skipped")
+
+# scale=1.0 is the test-tier size; the benchmark tier passes scale>=2
+TOPOLOGY_BUILDERS: dict[str, Callable[[int, float], LabeledGraph]] = {
+    "community": lambda seed, scale: community_graph(
+        int(160 * scale), 4, 0.12, 0.004, 12, seed=seed),
+    "bipartite": lambda seed, scale: bipartite_graph(
+        int(80 * scale), int(80 * scale), 4, 12, seed=seed),
+    "nearclique": lambda seed, scale: near_clique_graph(
+        int(140 * scale), 10, 0.85, 2.5, 12, seed=seed),
+    "skewlabel": lambda seed, scale: skewed_label_graph(
+        int(160 * scale), 5, 10, skew=1.3, seed=seed),
+    "nws": lambda seed, scale: nws_graph(
+        int(150 * scale), 6, 0.1, 8, seed=seed),
+}
+
+
+def build_topology(name: str, seed: int = 0, scale: float = 1.0
+                   ) -> LabeledGraph:
+    return TOPOLOGY_BUILDERS[name](seed, scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """One gauntlet cell: (topology x shape x regime)."""
+
+    topology: str
+    shape: str
+    regime: str                  # "dense" | "free"
+    query_seed: int = 1
+    size: int | None = None     # shape size override (None = default)
+
+    @property
+    def name(self) -> str:
+        return f"{self.topology}/{self.shape}/{self.regime}"
+
+
+@dataclasses.dataclass
+class CellReport:
+    """Outcome of one cell's three-oracle verification."""
+
+    cell: str
+    family: str
+    n_matches: int
+    oracle_exact: bool = False
+    oracle_modes: bool = False
+    oracle_invariance: bool = False
+    counters: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return (self.oracle_exact and self.oracle_modes
+                and self.oracle_invariance)
+
+
+# --------------------------------------------------------------------------- #
+# oracle 1 reference: independent brute-force matcher
+# --------------------------------------------------------------------------- #
+def brute_force_matches(data: LabeledGraph, query: LabeledGraph,
+                        limit: int | None = None) -> set[tuple[int, ...]]:
+    """All injective label-preserving monomorphisms query -> data.
+
+    Deliberately independent of repro.core.matching: a plain recursive
+    DFS over label-filtered candidates with explicit edge verification
+    and NO pruning index — the ground truth the dominance pipeline's
+    no-false-dismissal claim is checked against.
+    """
+    n_q = query.n_vertices
+    cand = [np.flatnonzero(data.labels == query.labels[v])
+            for v in range(n_q)]
+    adj_q = [query.neighbors(v).astype(np.int64) for v in range(n_q)]
+    # static order: rarest label first, then ids (deterministic)
+    order = sorted(range(n_q), key=lambda v: (cand[v].size, v))
+    out: set[tuple[int, ...]] = set()
+    mapping = np.full(n_q, -1, np.int64)
+
+    def ok_edges(v: int, u_d: int) -> bool:
+        nbrs = data.neighbors(u_d)
+        for u in adj_q[v]:
+            b = mapping[u]
+            if b >= 0 and b not in nbrs:
+                return False
+        return True
+
+    def rec(depth: int) -> bool:
+        if depth == n_q:
+            out.add(tuple(int(x) for x in mapping))
+            return limit is not None and len(out) >= limit
+        v = order[depth]
+        for u_d in cand[v]:
+            u_d = int(u_d)
+            if (mapping == u_d).any() or not ok_edges(v, u_d):
+                continue
+            mapping[v] = u_d
+            if rec(depth + 1):
+                return True
+            mapping[v] = -1
+        return False
+
+    rec(0)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# standing matrix
+# --------------------------------------------------------------------------- #
+def default_matrix(topologies: dict[str, LabeledGraph],
+                   shapes: tuple[str, ...] = SHAPE_NAMES,
+                   regimes: tuple[str, ...] = ("dense", "free"),
+                   query_seed: int = 1) -> list[CellSpec]:
+    """Enumerate cells; a dense cell degrades to free when the shape is
+    structurally absent from the topology (checked by trying to mine it
+    with a few template seeds)."""
+    cells: list[CellSpec] = []
+    for tname, graph in topologies.items():
+        for shape in shapes:
+            # bipartite graphs have no odd cycles: use an even cycle
+            size = 6 if (shape == "cycle" and tname == "bipartite") else None
+            for regime in regimes:
+                spec = CellSpec(tname, shape, regime,
+                                query_seed=query_seed, size=size)
+                if regime == "dense":
+                    for s in range(query_seed, query_seed + 3):
+                        try:
+                            shape_query(graph, shape, "dense", size=size,
+                                        seed=s)
+                            spec = CellSpec(tname, shape, "dense",
+                                            query_seed=s, size=size)
+                            break
+                        except ValueError:
+                            spec = None
+                    if spec is None:
+                        continue        # the free cell still covers it
+                cells.append(spec)
+    return cells
+
+
+# --------------------------------------------------------------------------- #
+# harness
+# --------------------------------------------------------------------------- #
+class Gauntlet:
+    """One topology's oracle harness: an engine + the three oracles.
+
+    The engine is built once and deliberately MUTATES across cells
+    (oracle 3 migrates shards and applies graph deltas), so later cells
+    run against an engine with migration/update history — exactly the
+    state a long-lived serving deployment accumulates.  Exactness is
+    always checked against a fresh brute force on the engine's CURRENT
+    graph, so the dense/free regime promise is only asserted for the
+    pristine graph (tests do that separately via `brute_force_matches`
+    on the generator output).
+    """
+
+    def __init__(self, graph: LabeledGraph, seed: int = 0,
+                 n_machines: int = 2, shards_per_machine: int = 2,
+                 gnn_train_steps: int = 8, max_path_length: int = 2):
+        from repro.dist.cluster import DistributedGNNPE
+        self.graph = graph
+        self.eng = DistributedGNNPE.build(
+            graph, n_machines, shards_per_machine=shards_per_machine,
+            gnn_train_steps=gnn_train_steps, seed=seed,
+            max_path_length=max_path_length)
+        self.eng.use_cache = False      # raw cross-mode comparisons
+        self._n_machines = n_machines
+        self._invariance_clock = 0
+
+    # -- oracle helpers ------------------------------------------------ #
+    @staticmethod
+    def counters(tel) -> dict:
+        return {f: getattr(tel, f) for f in MODE_COUNTERS}
+
+    def check_exact(self, query: LabeledGraph) -> list[tuple]:
+        """Oracle 1: engine (host probe) vs brute force."""
+        matches, _ = self.eng.query(query, probe_mode="host")
+        ref = brute_force_matches(self.eng.graph, query)
+        assert set(matches) == ref, (
+            f"exactness violated: engine {len(matches)} vs "
+            f"brute force {len(ref)}")
+        assert len(matches) == len(set(matches)), "duplicate matches"
+        return matches
+
+    def check_modes(self, query: LabeledGraph,
+                    batch_fill: list[LabeledGraph] | None = None) -> dict:
+        """Oracle 2: bit-identity across host/device/plane/megabatch."""
+        runs = {m: self.eng.query(query, probe_mode=m)
+                for m in ("host", "device", "plane")}
+        batch = [query] + list(batch_fill or [])
+        mega = self.eng.query_batch(batch)
+        runs["megabatch"] = mega[0]
+        ref_matches, ref_tel = runs["host"]
+        ref_counters = self.counters(ref_tel)
+        for mode, (matches, tel) in runs.items():
+            assert matches == ref_matches, (
+                f"{mode}: matches diverge from host "
+                f"({len(matches)} vs {len(ref_matches)})")
+            got = self.counters(tel)
+            assert got == ref_counters, (
+                f"{mode}: counters diverge: {got} vs {ref_counters}")
+        return ref_counters
+
+    def check_invariance(self, query: LabeledGraph, seed: int = 0
+                         ) -> int:
+        """Oracle 3: a forced hot migration, then an `apply_updates`
+        delta, must both leave every probe mode equal to a fresh brute
+        force on the (current) graph."""
+        from repro.dist.migration import hot_migrate
+        eng = self.eng
+        rng = np.random.default_rng(seed * 313 + self._invariance_clock)
+        self._invariance_clock += 1
+
+        # a) rebalancing epoch: migrate one shard to another machine
+        sid = sorted(eng.shards)[
+            int(rng.integers(len(eng.shards)))]
+        src = eng.routing[sid]
+        tgt = (src + 1) % self._n_machines
+        res = hot_migrate(eng.shards, [(sid, src, tgt)], eng.routing,
+                          rng=rng)
+        assert res.crc_ok
+        ref = brute_force_matches(eng.graph, query)
+        for mode in ("host", "plane"):
+            matches, _ = eng.query(query, probe_mode=mode)
+            assert set(matches) == ref, f"post-migration {mode} diverged"
+
+        # b) streaming delta: insert 2 fresh edges, delete 1 existing
+        n = eng.graph.n_vertices
+        adds = []
+        while len(adds) < 2:
+            u, v = (int(x) for x in rng.integers(0, n, size=2))
+            if (u != v and not eng.graph.has_edge(u, v)
+                    and u not in eng.retired_ids
+                    and v not in eng.retired_ids):
+                adds.append((u, v))
+        del_e = eng.graph.edge_list[
+            int(rng.integers(eng.graph.n_edges))]
+        delta = GraphDelta.make(add_edges=adds, del_edges=[del_e])
+        eng.apply_updates(delta, refit_pe=False)
+        ref = brute_force_matches(eng.graph, query)
+        for mode in ("host", "plane"):
+            matches, _ = eng.query(query, probe_mode=mode)
+            assert set(matches) == ref, f"post-update {mode} diverged"
+        return len(ref)
+
+    # -- cell driver --------------------------------------------------- #
+    def make_query(self, spec: CellSpec) -> LabeledGraph:
+        return shape_query(self.graph, spec.shape, spec.regime,
+                           size=spec.size, seed=spec.query_seed)
+
+    def run_cell(self, spec: CellSpec, invariance: bool = True
+                 ) -> CellReport:
+        """All three oracles on one cell; raises AssertionError with the
+        cell name on any violation."""
+        query = self.make_query(spec)
+        rep = CellReport(cell=spec.name, family=spec.topology,
+                         n_matches=0)
+        try:
+            matches = self.check_exact(query)
+            rep.n_matches = len(matches)
+            rep.oracle_exact = True
+            rep.counters = self.check_modes(query)
+            rep.oracle_modes = True
+            if invariance:
+                self.check_invariance(query, seed=spec.query_seed)
+            rep.oracle_invariance = True
+        except AssertionError as ex:
+            raise AssertionError(f"[{spec.name}] {ex}") from ex
+        return rep

@@ -13,8 +13,11 @@ import numpy as np
 
 from repro.core.graph import LabeledGraph
 
-__all__ = ["nws_graph", "power_law_graph", "random_walk_query",
-           "make_workload", "DATASET_PRESETS", "make_dataset"]
+__all__ = ["nws_graph", "power_law_graph", "community_graph",
+           "bipartite_graph", "near_clique_graph", "skewed_label_graph",
+           "random_walk_query", "shape_query", "SHAPE_NAMES",
+           "is_connected", "make_workload", "DATASET_PRESETS",
+           "make_dataset"]
 
 # (n_vertices, avg_degree, n_labels) matched to the paper's datasets, scaled.
 DATASET_PRESETS = {
@@ -67,6 +70,162 @@ def power_law_graph(n: int, avg_deg: float, n_labels: int,
     return LabeledGraph.from_edges(n, np.stack([src, dst], 1), labels)
 
 
+# --------------------------------------------------------------------------- #
+# gauntlet topologies (ISSUE 6): adversarial scenario generators beyond the
+# label-uniform small-world seed.  All are deterministic per seed and take a
+# `connected=True` promise enforced by deterministic bridge edges.
+# --------------------------------------------------------------------------- #
+def _components(n: int, edges: np.ndarray) -> np.ndarray:
+    """Union-find component label per vertex (deterministic)."""
+    parent = np.arange(n, dtype=np.int64)
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = int(parent[x])
+        return x
+
+    for u, v in np.asarray(edges, np.int64).reshape(-1, 2):
+        ru, rv = find(int(u)), find(int(v))
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    return np.array([find(v) for v in range(n)], dtype=np.int64)
+
+
+def _bridge_components(n: int, edges: np.ndarray,
+                       side: np.ndarray | None = None) -> np.ndarray:
+    """Edges + deterministic bridges making the graph connected.
+
+    Every non-main component is bridged to the (lowest-root) main
+    component.  With `side` (bipartite left/right bool array) the bridge
+    endpoint inside the main component is chosen on the OPPOSITE side of
+    the attaching vertex, so bipartiteness survives.
+    """
+    comp = _components(n, edges)
+    roots = np.unique(comp)
+    if roots.size <= 1:
+        return edges
+    main = int(roots[0])
+    main_verts = np.flatnonzero(comp == main)
+    bridges = []
+    for r in roots[1:]:
+        u = int(np.flatnonzero(comp == r)[0])
+        if side is not None:
+            opp = main_verts[side[main_verts] != side[u]]
+            v = int(opp[0]) if opp.size else int(main_verts[0])
+        else:
+            v = int(main_verts[0])
+        bridges.append((u, v))
+    return np.concatenate([edges.reshape(-1, 2),
+                           np.asarray(bridges, edges.dtype)])
+
+
+def is_connected(graph: LabeledGraph) -> bool:
+    if graph.n_vertices == 0:
+        return True
+    return np.unique(
+        _components(graph.n_vertices, graph.edge_list)).size == 1
+
+
+def community_graph(n: int, n_communities: int, p_in: float, p_out: float,
+                    n_labels: int, seed: int = 0,
+                    connected: bool = True) -> LabeledGraph:
+    """Planted-partition graph with community-correlated labels.
+
+    Vertices are community-major (contiguous id blocks), so a locality-
+    aware partitioner can recover the communities; labels are drawn from
+    a per-community window of the label space, which concentrates label
+    mass per shard (the regime where root-MBR skips and plan ranking
+    actually differ between shards).
+    """
+    rng = np.random.default_rng(seed)
+    comm = (np.arange(n) * n_communities) // max(n, 1)
+    blocks = []
+    for c in range(n_communities):
+        vs = np.flatnonzero(comm == c)
+        if vs.size >= 2:
+            iu, iv = np.triu_indices(vs.size, k=1)
+            keep = rng.random(iu.size) < p_in
+            blocks.append(np.stack([vs[iu[keep]], vs[iv[keep]]], axis=1))
+    n_inter = rng.binomial(max(n * (n_communities - 1), 1), p_out)
+    if n_inter:
+        u = rng.integers(0, n, size=n_inter)
+        v = rng.integers(0, n, size=n_inter)
+        cross = comm[u] != comm[v]
+        blocks.append(np.stack([u[cross], v[cross]], axis=1))
+    edges = (np.concatenate(blocks) if blocks
+             else np.zeros((0, 2), np.int64))
+    if connected:
+        edges = _bridge_components(n, edges)
+    win = max(n_labels // n_communities, 2)
+    labels = (comm * win + rng.integers(0, win, size=n)) % n_labels
+    return LabeledGraph.from_edges(n, edges, labels.astype(np.int32))
+
+
+def bipartite_graph(n_left: int, n_right: int, avg_deg: float,
+                    n_labels: int, seed: int = 0,
+                    connected: bool = True) -> LabeledGraph:
+    """Random bipartite graph; labels are side-disjoint (left labels from
+    the lower half of the label space, right from the upper half), so any
+    odd cycle — and any query edge between two same-side labels — is
+    structurally match-free."""
+    rng = np.random.default_rng(seed)
+    n = n_left + n_right
+    m = int(avg_deg * n / 2)
+    u = rng.integers(0, n_left, size=m)
+    v = n_left + rng.integers(0, n_right, size=m)
+    edges = np.stack([u, v], axis=1)
+    side = np.zeros(n, bool)
+    side[n_left:] = True
+    if connected:
+        edges = _bridge_components(n, edges, side=side)
+    half = max(n_labels // 2, 1)
+    labels = np.where(side, half + rng.integers(0, max(n_labels - half, 1),
+                                                size=n),
+                      rng.integers(0, half, size=n))
+    return LabeledGraph.from_edges(n, edges, labels.astype(np.int32))
+
+
+def near_clique_graph(n: int, core_size: int, p_core: float,
+                      avg_deg_out: float, n_labels: int, seed: int = 0,
+                      connected: bool = True) -> LabeledGraph:
+    """Dense near-clique core + sparse periphery: the match-DENSE regime
+    (distributed enumeration papers' worst case — combinatorially many
+    embeddings concentrated in one region)."""
+    rng = np.random.default_rng(seed)
+    core_size = min(core_size, n)
+    iu, iv = np.triu_indices(core_size, k=1)
+    keep = rng.random(iu.size) < p_core
+    core_edges = np.stack([iu[keep], iv[keep]], axis=1)
+    blocks = [core_edges]
+    n_out = n - core_size
+    if n_out > 0:
+        m = int(avg_deg_out * n_out)
+        u = core_size + rng.integers(0, n_out, size=m)
+        v = rng.integers(0, n, size=m)
+        blocks.append(np.stack([u, v], axis=1))
+    edges = np.concatenate(blocks)
+    if connected:
+        edges = _bridge_components(n, edges)
+    labels = rng.integers(0, n_labels, size=n)
+    return LabeledGraph.from_edges(n, edges, labels.astype(np.int32))
+
+
+def skewed_label_graph(n: int, avg_deg: float, n_labels: int,
+                       skew: float = 1.2, seed: int = 0,
+                       connected: bool = True) -> LabeledGraph:
+    """Erdős–Rényi-style random graph with Zipf(1+skew) labels: a few
+    labels dominate while the tail is rare — rare-label paths prune
+    hard, the main signal PE-score plan ranking can exploit."""
+    rng = np.random.default_rng(seed)
+    m = int(avg_deg * n / 2)
+    edges = rng.integers(0, n, size=(m, 2))
+    if connected:
+        edges = _bridge_components(n, edges)
+    labels = np.minimum(rng.zipf(1.0 + skew, size=n) - 1, n_labels - 1)
+    return LabeledGraph.from_edges(n, edges, labels.astype(np.int32))
+
+
 def random_walk_query(graph: LabeledGraph, n_vertices: int,
                       seed: int = 0, avg_deg_range: tuple[float, float] = (3, 7),
                       max_tries: int = 50) -> LabeledGraph:
@@ -100,6 +259,196 @@ def random_walk_query(graph: LabeledGraph, n_vertices: int,
     e = graph.edge_list[int(rng.integers(graph.n_edges))]
     sub, _ = graph.induced_subgraph(e)
     return sub
+
+
+# --------------------------------------------------------------------------- #
+# gauntlet query shapes (ISSUE 6): structured patterns beyond random-walk
+# paths, with a controllable match-dense / match-free regime.
+#
+#   * dense: the shape is MINED from the data graph (an embedding is found
+#     and labels are inherited from it), so >= 1 match is guaranteed by
+#     construction — the witness mapping itself.
+#   * free: labels are rewritten under a ZERO-match certificate, tried in
+#     order of adversarial value: (1) an absent label PAIR on one query
+#     edge (candidates survive the label filter; the probe/join must
+#     prove emptiness), (2) a degree certificate (some label's max data
+#     degree < a query vertex degree), (3) an absent label id (the
+#     initial masks empty out), (4) a brute-force-verified random
+#     relabeling.  ValueError if no certificate can be established.
+# --------------------------------------------------------------------------- #
+SHAPE_NAMES = ("triangle_tail", "cycle", "star", "pattern8")
+
+
+def _shape_edges(shape: str, size: int, seed: int = 0
+                 ) -> tuple[int, np.ndarray]:
+    """(n_vertices, edges) template of a query shape.
+
+    Sizes: triangle_tail = 3 + tail (size >= 4), cycle = ring of `size`,
+    star = center + size-1 leaves, pattern8 = random connected pattern of
+    `size` (>= 8) vertices: a seeded random spanning tree + 2 extra edges.
+    """
+    if shape == "triangle_tail":
+        if size < 4:
+            raise ValueError("triangle_tail needs size >= 4")
+        edges = [(0, 1), (1, 2), (0, 2)]
+        edges += [(2 if i == 3 else i - 1, i) for i in range(3, size)]
+    elif shape == "cycle":
+        if size < 3:
+            raise ValueError("cycle needs size >= 3")
+        edges = [(i, (i + 1) % size) for i in range(size)]
+    elif shape == "star":
+        if size < 3:
+            raise ValueError("star needs size >= 3")
+        edges = [(0, i) for i in range(1, size)]
+    elif shape == "pattern8":
+        if size < 8:
+            raise ValueError("pattern8 needs size >= 8")
+        rng = np.random.default_rng(seed ^ 0x8A77)
+        edges = [(int(rng.integers(0, i)), i) for i in range(1, size)]
+        present = set(edges)
+        tries = 0
+        while len(edges) < size + 1 and tries < 100:
+            u, v = sorted(int(x) for x in rng.integers(0, size, size=2))
+            if u != v and (u, v) not in present:
+                edges.append((u, v))
+                present.add((u, v))
+            tries += 1
+    else:
+        raise ValueError(f"unknown shape {shape!r}")
+    return size, np.asarray(edges, np.int32)
+
+
+def _mine_embedding(graph: LabeledGraph, k: int, edges: np.ndarray,
+                    rng: np.random.Generator,
+                    max_nodes: int = 200_000) -> np.ndarray | None:
+    """Find one label-free monomorphism image of the shape in `graph`.
+
+    Randomized connected-expansion DFS with a bounded node budget;
+    returns int64 [k] data vertices (shape vertex i -> image[i]) or None.
+    """
+    adj = [set() for _ in range(k)]
+    for u, v in edges:
+        adj[int(u)].add(int(v))
+        adj[int(v)].add(int(u))
+    sdeg = np.array([len(a) for a in adj])
+    order = [int(np.argmax(sdeg))]
+    placed = {order[0]}
+    while len(order) < k:
+        frontier = [v for v in range(k) if v not in placed and
+                    adj[v] & placed]
+        if not frontier:
+            frontier = [v for v in range(k) if v not in placed]
+        v = max(frontier, key=lambda x: len(adj[x] & placed))
+        order.append(v)
+        placed.add(v)
+    mapping = np.full(k, -1, np.int64)
+    deg_d = graph.degrees
+    budget = [max_nodes]
+
+    def rec(depth: int) -> bool:
+        if depth == k:
+            return True
+        if budget[0] <= 0:
+            return False
+        v = order[depth]
+        back = [u for u in adj[v] if mapping[u] >= 0]
+        if back:
+            cand = graph.neighbors(int(mapping[back[0]]))
+            for u in back[1:]:
+                cand = cand[np.isin(cand,
+                                    graph.neighbors(int(mapping[u])))]
+        else:
+            cand = np.arange(graph.n_vertices, dtype=np.int32)
+        cand = cand[deg_d[cand] >= sdeg[v]]
+        cand = cand[~np.isin(cand, mapping[mapping >= 0])]
+        for u_d in rng.permutation(cand):
+            budget[0] -= 1
+            if budget[0] <= 0:
+                return False
+            mapping[v] = int(u_d)
+            if rec(depth + 1):
+                return True
+            mapping[v] = -1
+        return False
+
+    return mapping if rec(0) else None
+
+
+def _free_labels(graph: LabeledGraph, k: int, edges: np.ndarray,
+                 rng: np.random.Generator, verify_tries: int = 32
+                 ) -> np.ndarray:
+    """Labels giving the shape a CERTIFIED zero-match regime (see above)."""
+    n_labels = graph.n_labels
+    present = np.flatnonzero(np.bincount(graph.labels,
+                                         minlength=n_labels) > 0)
+    labels = present[rng.integers(0, present.size, size=k)].astype(np.int32)
+    qdeg = np.zeros(k, np.int64)
+    for u, v in edges:
+        qdeg[u] += 1
+        qdeg[v] += 1
+    # 1. absent label pair on a query edge (most adversarial: the label
+    #    filter passes, the system must prove emptiness downstream)
+    el = np.sort(graph.labels[graph.edge_list], axis=1)
+    pair_keys = set((el[:, 0] * n_labels + el[:, 1]).tolist())
+    absent_pairs = [(a, b) for a in present for b in present if a <= b
+                    and a * n_labels + b not in pair_keys]
+    if absent_pairs:
+        a, b = absent_pairs[int(rng.integers(len(absent_pairs)))]
+        eu, ev = edges[int(rng.integers(edges.shape[0]))]
+        labels[eu], labels[ev] = a, b
+        return labels
+    # 2. degree certificate: a label whose max data degree cannot host
+    #    the query's max-degree vertex
+    deg_d = graph.degrees
+    v_star = int(np.argmax(qdeg))
+    for lab in present:
+        sel = deg_d[graph.labels == lab]
+        if sel.size and int(sel.max()) < int(qdeg[v_star]):
+            labels[v_star] = lab
+            return labels
+    # 3. absent label id (in range, used by zero data vertices)
+    absent = np.setdiff1d(np.arange(n_labels), present)
+    if absent.size:
+        labels[0] = absent[0]
+        return labels
+    # 4. verified fallback: random relabelings checked with the matcher
+    from repro.core.matching import backtrack_join
+    for _ in range(verify_tries):
+        cand_labels = present[rng.integers(0, present.size,
+                                           size=k)].astype(np.int32)
+        q = LabeledGraph.from_edges(k, edges, cand_labels)
+        masks = [(graph.labels == q.labels[v]) & (deg_d >= q.degrees[v])
+                 for v in range(k)]
+        if not backtrack_join(q, graph, masks, max_matches=1):
+            return cand_labels
+    raise ValueError("could not certify a match-free labeling")
+
+
+def shape_query(graph: LabeledGraph, shape: str, regime: str = "dense",
+                size: int | None = None, seed: int = 0) -> LabeledGraph:
+    """Generate a structured query of `shape` against `graph`.
+
+    regime="dense" guarantees >= 1 embedding (mined witness; raises
+    ValueError when the shape does not occur in the graph — e.g. a
+    triangle in a bipartite graph); regime="free" guarantees 0 matches
+    via a certificate (see `_free_labels`).
+    """
+    if shape not in SHAPE_NAMES:
+        raise ValueError(f"unknown shape {shape!r}; one of {SHAPE_NAMES}")
+    if regime not in ("dense", "free"):
+        raise ValueError(f"unknown regime {regime!r}")
+    defaults = {"triangle_tail": 5, "cycle": 5, "star": 5, "pattern8": 8}
+    k, edges = _shape_edges(shape, size or defaults[shape], seed=seed)
+    rng = np.random.default_rng(seed * 9173 + 7)
+    if regime == "dense":
+        mapping = _mine_embedding(graph, k, edges, rng)
+        if mapping is None:
+            raise ValueError(
+                f"shape {shape!r} (size {k}) has no embedding in the "
+                f"graph — use regime='free' for this cell")
+        return LabeledGraph.from_edges(k, edges, graph.labels[mapping])
+    return LabeledGraph.from_edges(k, edges,
+                                   _free_labels(graph, k, edges, rng))
 
 
 def make_workload(graph: LabeledGraph, n_queries: int, size_range=(3, 6),

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import zlib
 from collections import OrderedDict, defaultdict
 
 import numpy as np
@@ -58,7 +59,8 @@ from repro.core.paths import (PathTable, enumerate_paths, path_row_keys,
 from repro.core.probeplane import ClusterPlanes
 from repro.core.pescore import (PEScoreModel, aggregate_global_features,
                                 path_feature_vector, shard_features)
-from repro.core.plan import degree_based_plan, rank_query_plan
+from repro.core.plan import (degree_based_plan, random_plan,
+                             rank_query_plan)
 from repro.dist import loadbalance as lb
 from repro.dist.migration import (LINK_BYTES_PER_MS, crc_transfer,
                                   hot_migrate)
@@ -458,7 +460,34 @@ class DistributedGNNPE:
                             for l, ep in s.index.embedded.items()})
             for s in self.shards.values()]
         self.pe_model.global_features = aggregate_global_features(per_shard)
+        self.pe_model.mbr_uppers = self._collect_mbr_uppers()
         self._fit_pe_model(self._seed)
+
+    def _collect_mbr_uppers(self) -> dict[int, np.ndarray]:
+        """Per-length [S, D] root-MBR upper summaries over shards sorted
+        by id — the same <1KB central-node metadata `_root_skip` reads,
+        exported so plan ranking can PREDICT shard skips per path.
+        Shards with no tree at a length get a -inf row (always
+        predicted-skipped, matching the probe loop's short-circuit)."""
+        out: dict[int, np.ndarray] = {}
+        sids = sorted(self.shards)
+        for length in range(1, self.max_path_length + 1):
+            rows, dim = [], 0
+            for sid in sids:
+                tree = self.shards[sid].index.trees.get(length)
+                if tree is None or tree.n_points == 0:
+                    rows.append(None)
+                    continue
+                up = (tree.uppers[0].max(axis=0) if tree.uppers
+                      else tree.points.max(axis=0))
+                rows.append(np.asarray(up, np.float32))
+                dim = up.shape[0]
+            if dim == 0:
+                continue            # no shard carries this length
+            out[length] = np.stack([
+                r if r is not None else np.full(dim, -np.inf, np.float32)
+                for r in rows])
+        return out
 
     def _fit_pe_model(self, seed: int, n_queries: int = 6) -> None:
         """Offline PE-score labels from sampled probes (§6.2.1).
@@ -493,7 +522,9 @@ class DistributedGNNPE:
                     xs.append(path_feature_vector(
                         q, table.vertices[r], False,
                         self.pe_model.global_features,
-                        self.pe_model.label_freq))
+                        self.pe_model.label_freq,
+                        q_emb=q_emb[r],
+                        mbr_uppers=self.pe_model.mbr_uppers))
                     ys.append(y)
         self.pe_fit_report = {
             "n_probes": len(wall_ms),
@@ -814,9 +845,14 @@ class DistributedGNNPE:
                 order = rank_query_plan(
                     query, self.pe_model,
                     max_path_length=self.max_path_length,
-                    tables=ent["tables"]).order
+                    tables=ent["tables"], q_embs=ent["q_embs"]).order
             elif plan_mode == "degree":
                 order = degree_based_plan(query, tables=ent["tables"]).order
+            elif plan_mode == "random":
+                # deterministic per query signature: hash() is process-
+                # randomized, crc32 of the cache key is not
+                order = random_plan(query, seed=zlib.crc32(repr(key).encode()),
+                                    tables=ent["tables"]).order
             else:
                 order = [(ti, r) for ti, t in enumerate(ent["tables"])
                          for r in range(t.n_paths)]

@@ -1,9 +1,28 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests see 1 device."""
 
+import os
+
 import numpy as np
 import pytest
 
 from repro.core.graph import LabeledGraph
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--run-gauntlet", action="store_true", default=False,
+        help="run the full @gauntlet matrix (otherwise skipped; "
+             "RUN_GAUNTLET=1 also enables it)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-gauntlet") or os.environ.get("RUN_GAUNTLET"):
+        return
+    skip = pytest.mark.skip(
+        reason="gauntlet tier: pass --run-gauntlet (or RUN_GAUNTLET=1)")
+    for item in items:
+        if "gauntlet" in item.keywords:
+            item.add_marker(skip)
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,299 @@
+"""Workload gauntlet (ISSUE 6).
+
+Tier-1 (always on): two full three-oracle smoke cells, generator/query
+property tests, degenerate-query contracts through the whole engine,
+and a backtrack_join table-vs-recursive regression on a high-match
+cell.
+
+`@pytest.mark.gauntlet` (opt in with --run-gauntlet / RUN_GAUNTLET=1):
+the full standing matrix — every (topology x shape x regime) cell
+verified against all three oracles, the pristine-graph regime promises,
+and a megabatch `run_workload` counter-identity sweep.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.graph import LabeledGraph
+from repro.core import matching
+from repro.data.gauntlet import (MODE_COUNTERS, TOPOLOGY_BUILDERS, CellSpec,
+                                 Gauntlet, brute_force_matches,
+                                 build_topology)
+from repro.data.synthetic import (SHAPE_NAMES, bipartite_graph,
+                                  community_graph, is_connected,
+                                  near_clique_graph, shape_query,
+                                  skewed_label_graph)
+
+# one engine per topology, shared across this module's cells; the
+# harness is designed to accumulate migration/update state (see
+# repro.data.gauntlet docstring)
+_GAUNTLETS: dict[str, Gauntlet] = {}
+
+
+def _gauntlet(topology: str) -> Gauntlet:
+    if topology not in _GAUNTLETS:
+        _GAUNTLETS[topology] = Gauntlet(build_topology(topology), seed=0)
+    return _GAUNTLETS[topology]
+
+
+def _resolve_cell(topo: str, shape: str, regime: str) -> CellSpec:
+    """Mirror default_matrix's per-cell resolution: even cycles on
+    bipartite graphs, dense cells retried over 3 template seeds and
+    skipped when the shape is structurally absent."""
+    size = 6 if (shape == "cycle" and topo == "bipartite") else None
+    if regime == "free":
+        return CellSpec(topo, shape, "free", size=size)
+    graph = _gauntlet(topo).graph
+    for s in range(1, 4):
+        try:
+            shape_query(graph, shape, "dense", size=size, seed=s)
+            return CellSpec(topo, shape, "dense", query_seed=s, size=size)
+        except ValueError:
+            continue
+    pytest.skip(f"{topo}/{shape}: no dense embedding (structurally absent)")
+
+
+# --------------------------------------------------------------------------- #
+# tier-1 smoke: full three-oracle verification on 2 cells
+# --------------------------------------------------------------------------- #
+SMOKE_CELLS = (CellSpec("community", "triangle_tail", "dense"),
+               CellSpec("community", "star", "free"))
+
+
+@pytest.mark.parametrize("spec", SMOKE_CELLS, ids=lambda s: s.name)
+def test_smoke_cell_three_oracles(spec):
+    rep = _gauntlet(spec.topology).run_cell(spec)
+    assert rep.ok
+    assert set(rep.counters) == set(MODE_COUNTERS)
+    if spec.regime == "dense":
+        assert rep.n_matches >= 1
+    else:
+        assert rep.n_matches == 0
+
+
+# --------------------------------------------------------------------------- #
+# property tests: generators (offline-hypothesis)
+# --------------------------------------------------------------------------- #
+_GENERATORS = {
+    "community": lambda seed: community_graph(60, 3, 0.2, 0.02, 8,
+                                              seed=seed),
+    "bipartite": lambda seed: bipartite_graph(30, 30, 3, 8, seed=seed),
+    "nearclique": lambda seed: near_clique_graph(50, 8, 0.8, 2.0, 8,
+                                                 seed=seed),
+    "skewlabel": lambda seed: skewed_label_graph(60, 4, 8, skew=1.4,
+                                                 seed=seed),
+}
+
+
+@settings(max_examples=10, deadline=None)
+@given(name=st.sampled_from(sorted(_GENERATORS)),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_generators_valid_and_deterministic(name, seed):
+    g1 = _GENERATORS[name](seed)
+    g2 = _GENERATORS[name](seed)
+    # deterministic per seed
+    assert g1.n_vertices == g2.n_vertices
+    assert np.array_equal(g1.edge_list, g2.edge_list)
+    assert np.array_equal(g1.labels, g2.labels)
+    # valid LabeledGraph: no self-loops, labels in range, connected
+    # (every generator above promises connected=True by default)
+    assert (g1.edge_list[:, 0] != g1.edge_list[:, 1]).all()
+    assert g1.labels.min() >= 0 and g1.labels.max() < 8
+    assert is_connected(g1)
+
+
+def test_bipartite_sides_disjoint():
+    g = bipartite_graph(25, 25, 3, 8, seed=3)
+    side = (np.arange(50) >= 25)
+    u, v = g.edge_list[:, 0], g.edge_list[:, 1]
+    assert (side[u] != side[v]).all()           # edges only cross sides
+
+
+@settings(max_examples=8, deadline=None)
+@given(shape=st.sampled_from(SHAPE_NAMES),
+       seed=st.integers(min_value=1, max_value=50))
+def test_query_regimes_and_determinism(shape, seed):
+    g = _GENERATORS["community"](seed % 4)
+    q_free = shape_query(g, shape, "free", seed=seed)
+    assert np.array_equal(
+        q_free.labels, shape_query(g, shape, "free", seed=seed).labels)
+    assert len(brute_force_matches(g, q_free, limit=1)) == 0
+    try:
+        q_dense = shape_query(g, shape, "dense", seed=seed)
+    except ValueError:
+        return                                  # unminable on this graph
+    assert np.array_equal(
+        q_dense.labels, shape_query(g, shape, "dense", seed=seed).labels)
+    assert np.array_equal(
+        q_dense.edge_list, shape_query(g, shape, "dense",
+                                       seed=seed).edge_list)
+    assert len(brute_force_matches(g, q_dense, limit=1)) >= 1
+
+
+# --------------------------------------------------------------------------- #
+# degenerate queries through the full engine
+# --------------------------------------------------------------------------- #
+_DEGEN: list = []
+
+
+def _degen_engine():
+    """Small engine whose data graph leaves label 1 unused (in-range but
+    absent) — the label-absent degenerate case."""
+    if not _DEGEN:
+        from repro.data.synthetic import nws_graph
+        from repro.dist.cluster import DistributedGNNPE
+        g0 = nws_graph(80, 4, 0.1, 6, seed=2)
+        labels = g0.labels.copy()
+        labels[labels == 1] = 0                 # label 1: in range, unused
+        labels[0] = 5                           # keep n_labels = 6
+        g = LabeledGraph.from_edges(g0.n_vertices, g0.edge_list, labels)
+        eng = DistributedGNNPE.build(g, 2, shards_per_machine=2,
+                                     gnn_train_steps=8, seed=0,
+                                     max_path_length=2)
+        eng.use_cache = False
+        _DEGEN.append((g, eng))
+    return _DEGEN[0]
+
+
+def _assert_all_modes_match_brute(eng, g, q):
+    ref = brute_force_matches(g, q)
+    for mode in ("host", "device", "plane"):
+        matches, _ = eng.query(q, probe_mode=mode)
+        assert set(matches) == ref, f"{mode} diverged from brute force"
+        assert len(matches) == len(set(matches))
+    mega, _ = eng.query_batch([q])[0]
+    assert set(mega) == ref
+    return ref
+
+
+def test_degenerate_single_edge_query():
+    g, eng = _degen_engine()
+    u, v = (int(x) for x in g.edge_list[0])
+    q = LabeledGraph.from_edges(
+        2, [(0, 1)], [int(g.labels[u]), int(g.labels[v])])
+    ref = _assert_all_modes_match_brute(eng, g, q)
+    assert len(ref) >= 2                        # (u,v) and (v,u) at least
+
+
+def test_degenerate_disconnected_query():
+    """Contract pin: disconnected patterns are SUPPORTED and exact —
+    the planner decomposes per component and the join enforces global
+    injectivity across components."""
+    g, eng = _degen_engine()
+    (u, v), (x, y) = g.edge_list[0], g.edge_list[10]
+    q = LabeledGraph.from_edges(
+        4, [(0, 1), (2, 3)],
+        [int(g.labels[u]), int(g.labels[v]),
+         int(g.labels[x]), int(g.labels[y])])
+    ref = _assert_all_modes_match_brute(eng, g, q)
+    assert len(ref) >= 1
+
+
+def test_degenerate_query_larger_than_decomposition():
+    """A 6-vertex path: every decomposed piece is <= max_path_length=2
+    edges, the full pattern is re-verified by the join."""
+    g, eng = _degen_engine()
+    q = shape_query(g, "cycle", "dense", size=6, seed=1)
+    _assert_all_modes_match_brute(eng, g, q)
+
+
+def test_degenerate_label_absent_query_empty():
+    g, eng = _degen_engine()
+    q = LabeledGraph.from_edges(2, [(0, 1)], [1, 1])    # label 1 unused
+    for mode in ("host", "device", "plane"):
+        matches, tel = eng.query(q, probe_mode=mode)
+        assert matches == []
+        assert tel.n_matches == 0
+    mega, _ = eng.query_batch([q])[0]
+    assert mega == []
+
+
+# --------------------------------------------------------------------------- #
+# backtrack_join: frontier-table vs recursive fallback (high-match cell)
+# --------------------------------------------------------------------------- #
+def _label_candidates(data: LabeledGraph, query: LabeledGraph):
+    """Boolean candidate masks (backtrack_join's input contract)."""
+    return [data.labels == query.labels[v]
+            for v in range(query.n_vertices)]
+
+
+def test_backtrack_join_table_equals_recursive_high_match(monkeypatch):
+    """Regression for the table/recursive duality: on a match-dense
+    star cell both engines must return the SAME list (order included),
+    across the pure-table path, the forced-recursive path, and the
+    mid-join table->recursive spill."""
+    g = skewed_label_graph(120, 6, 4, skew=1.5, seed=3)
+    q = shape_query(g, "star", "dense", seed=2)
+    cands = _label_candidates(g, q)
+
+    table = matching.backtrack_join(q, g, [c.copy() for c in cands])
+    assert len(table) >= 100, "cell not match-dense enough to stress join"
+    assert set(table) == brute_force_matches(g, q)
+
+    with monkeypatch.context() as m:            # force recursive from row 0
+        m.setattr(matching, "_JOIN_BITMAP_MAX_N", 0)
+        rec = matching.backtrack_join(q, g, [c.copy() for c in cands])
+    assert table == rec
+
+    with monkeypatch.context() as m:            # force mid-join spill
+        m.setattr(matching, "_JOIN_STEP_MAX_ELEMS", 1)
+        spill = matching.backtrack_join(q, g, [c.copy() for c in cands])
+    assert table == spill
+
+    capped = matching.backtrack_join(q, g, [c.copy() for c in cands],
+                                     max_matches=17)
+    assert capped == table[:17]                 # DFS prefix property
+
+
+# --------------------------------------------------------------------------- #
+# full standing matrix (gauntlet tier)
+# --------------------------------------------------------------------------- #
+@pytest.mark.gauntlet
+@pytest.mark.parametrize("regime", ["dense", "free"])
+@pytest.mark.parametrize("shape", SHAPE_NAMES)
+@pytest.mark.parametrize("topo", sorted(TOPOLOGY_BUILDERS))
+def test_matrix_cell(topo, shape, regime):
+    spec = _resolve_cell(topo, shape, regime)
+    rep = _gauntlet(topo).run_cell(spec)
+    assert rep.ok
+
+
+@pytest.mark.gauntlet
+@pytest.mark.parametrize("topo", sorted(TOPOLOGY_BUILDERS))
+def test_pristine_regime_promises(topo):
+    """On the PRISTINE standing graph (before any engine mutation):
+    dense queries have >= 1 embedding, free queries have 0."""
+    graph = build_topology(topo)
+    for shape in SHAPE_NAMES:
+        size = 6 if (shape == "cycle" and topo == "bipartite") else None
+        q = shape_query(graph, shape, "free", size=size, seed=1)
+        assert len(brute_force_matches(graph, q, limit=1)) == 0
+        for s in range(1, 4):
+            try:
+                q = shape_query(graph, shape, "dense", size=size, seed=s)
+            except ValueError:
+                continue
+            assert len(brute_force_matches(graph, q, limit=1)) >= 1
+            break
+
+
+@pytest.mark.gauntlet
+def test_workload_megabatch_counter_identity():
+    """`run_workload(batch_size=3)` over a mixed gauntlet workload
+    keeps every deterministic per-query counter identical to the
+    serial host path (launch attribution differs by design)."""
+    gnt = _gauntlet("community")
+    qs = []
+    for shape in SHAPE_NAMES:
+        for regime in ("dense", "free"):
+            try:
+                qs.append(shape_query(gnt.graph, shape, regime, seed=1))
+            except ValueError:
+                pass
+    serial = [gnt.eng.query(q, probe_mode="host")[1] for q in qs]
+    batched = gnt.eng.run_workload(qs, batch_size=3, probe_mode="plane")
+    assert len(serial) == len(batched)
+    for ts, tb in zip(serial, batched):
+        assert Gauntlet.counters(ts) == Gauntlet.counters(tb)
