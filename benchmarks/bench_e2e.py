@@ -171,7 +171,7 @@ def run() -> list[tuple]:
                  f"host_ms={modes['host']['wall_ms']};"
                  f"device_ms={modes['device']['wall_ms']};"
                  f"plane_ms={modes['plane']['wall_ms']};"
-                 f"plane_launches_per_path="
+                 "plane_launches_per_path="
                  f"{modes['plane']['launches_per_path']};"
                  f"matches={n_vf2}"))
 

@@ -9,8 +9,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import emit
 from repro.data.synthetic import nws_graph
 from repro.dist.cluster import DistributedGNNPE

@@ -9,9 +9,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from benchmarks.common import bench_engine, emit
+from benchmarks.common import emit
 from repro.data.synthetic import make_workload
 
 

@@ -128,7 +128,7 @@ def run() -> list[tuple]:
                  f"host_launches={probe['host']['probe_launches']};"
                  f"device_launches={probe['device']['probe_launches']};"
                  f"plane_launches={probe['plane']['probe_launches']};"
-                 f"plane_launches_per_query="
+                 "plane_launches_per_query="
                  f"{probe['plane']['launches_per_query']};"
                  f"device_h2d_per_q={probe['device']['h2d_bytes_per_query']};"
                  f"plane_h2d_per_q={probe['plane']['h2d_bytes_per_query']};"

@@ -116,7 +116,6 @@ def update_comparison(n_comp: int = 4, size: int = 150, n_updates: int = 6,
         assert m1 == m2
         assert all(getattr(t1, f) == getattr(t2, f) for f in _COUNTERS)
 
-    paths_total = sum(r.paths_total for r in reports)
     reused = sum(r.paths_reused for r in reports)
     reembedded = sum(r.paths_reembedded for r in reports)
     delta_bytes = sum(r.delta_bytes for r in reports)

@@ -8,7 +8,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.data.synthetic import make_workload, nws_graph
+from repro.data.synthetic import nws_graph
 from repro.dist.cluster import DistributedGNNPE
 
 

@@ -3,8 +3,6 @@
     PYTHONPATH=src python examples/distributed_matching.py
 """
 
-import numpy as np
-
 from repro.data.synthetic import make_workload, nws_graph
 from repro.dist.cluster import DistributedGNNPE
 from repro.train.elastic import WorkerFailover

@@ -3,8 +3,6 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-
 from repro.data.synthetic import make_workload, nws_graph
 from repro.dist.cluster import DistributedGNNPE
 
@@ -30,7 +28,7 @@ def main() -> None:
               f"{tel.cache_hits} cache hits)")
 
     # 4. full workload with dynamic load balancing
-    tels = engine.run_workload(queries, rebalance=True)
+    engine.run_workload(queries, rebalance=True)
     print(f"workload: cache hit rate {engine.cache.hit_rate:.2f}, "
           f"{len(engine.migrations)} migration batches, "
           f"load sigma {engine.load_sigma():.3f}")

@@ -1,0 +1,32 @@
+"""reprolint — project-specific static analysis for the GNN-PE repo.
+
+The repo's correctness story rests on conventions that ordinary tests
+only catch when a hand-written case happens to exercise a violation:
+
+* every operand entering a jitted Pallas launch is rounded to a named
+  ``*_BUCKET`` constant (the PR-3 retrace bound),
+* every result-cache / plan-LRU access is keyed through ``_query_key``
+  and therefore ``_data_epoch`` (the PR-5 exactness guarantee),
+* every shard/delta byte image crossing a machine boundary goes through
+  ``crc_transfer`` / ``hot_migrate`` (index-consistency, paper inn. 1),
+* wall-clock and ambient randomness never leak into PE-score labels or
+  bit-identical-asserted counters (the PR-2 determinism sweep),
+* nothing forces a host-device sync inside the pipelined megabatch
+  dispatch region (the PR-4 overlap win),
+* kernel call sites honor the declared BlockSpec/dtype/pad contracts
+  (``repro.kernels.dominance.ops.KERNEL_CONTRACTS``).
+
+reprolint walks the AST of every scanned file and enforces the whole
+class of each invariant at CI time.  See docs/static-analysis.md for
+the rule catalog (RPR001-RPR006), suppression syntax, and the baseline
+mechanism.
+
+CLI: ``python -m repro.analysis [--paths src tests benchmarks]
+[--format text|json]`` — exit 0 iff no non-baselined findings.
+"""
+
+from repro.analysis.finding import Finding
+from repro.analysis.registry import RULES, all_rules, register
+from repro.analysis.runner import run_paths
+
+__all__ = ["Finding", "RULES", "all_rules", "register", "run_paths"]

@@ -1,0 +1,63 @@
+"""CLI: ``python -m repro.analysis [--paths ...] [--format text|json]``.
+
+Exit codes: 0 clean (baselined/suppressed findings allowed), 1 findings
+or stale baseline entries, 2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.runner import (find_root, format_json, format_text,
+                                   run_paths)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reprolint: static invariant checks for this repo "
+                    "(rule catalog in docs/static-analysis.md)")
+    ap.add_argument("--paths", nargs="+",
+                    default=["src", "tests", "benchmarks"],
+                    help="files or directories to scan (repo-relative)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--rules", nargs="+", default=None, metavar="RPR00x",
+                    help="run only these rule ids")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report baselined findings as failures")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="append current findings to analysis/baseline.json"
+                         " with TODO reasons (then document them!)")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    root = find_root(Path.cwd())
+    result = run_paths(args.paths, root=root,
+                       rule_ids=set(args.rules) if args.rules else None,
+                       use_baseline=not args.no_baseline)
+
+    if args.write_baseline:
+        sources = {}
+        for f in result.findings:
+            p = root / f.path
+            sources[f.path] = p.read_text().splitlines()
+        entries = baseline_mod.load() + [
+            baseline_mod.render_entry(f, sources) for f in result.findings]
+        baseline_mod.DEFAULT_BASELINE.write_text(
+            json.dumps({"entries": entries}, indent=2) + "\n")
+        print(f"wrote {len(entries)} entries to "
+              f"{baseline_mod.DEFAULT_BASELINE}")
+        return 0
+
+    out = (format_json(result) if args.format == "json"
+           else format_text(result, verbose=args.verbose))
+    print(out)
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

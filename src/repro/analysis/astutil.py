@@ -1,0 +1,287 @@
+"""Shared AST helpers for reprolint rules.
+
+Everything here is a deliberate approximation: reprolint trades
+soundness for a near-zero false-positive rate on THIS codebase (the
+heuristics are documented per helper and in docs/static-analysis.md).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+BUCKET_CONST_RE = re.compile(r"^([A-Z][A-Z0-9_]*_BUCKET|BLOCK(_[A-Z0-9]+)+)$")
+
+# shape-producing calls whose result's dims reprolint can inspect
+ARRAY_CTORS = {"zeros", "full", "empty", "ones"}
+# calls that forward their first argument's identity/shape unchanged
+PASSTHROUGH_CALLS = {"asarray", "array", "ascontiguousarray", "view",
+                     "astype", "copy", "ravel"}
+# calls that certify a bucketed dim
+BUCKETING_CALLS = {"bucket", "mega_query_bucket", "cdiv"}
+
+
+def dotted(node: ast.AST) -> str | None:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def terminal(node: ast.AST) -> str | None:
+    """Last component of a call target: 'self.planes.mega_dispatch' ->
+    'mega_dispatch'; plain names return themselves."""
+    if isinstance(node, ast.Call):
+        node = node.func
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def iter_functions(tree: ast.AST) -> Iterator[tuple[str, ast.AST]]:
+    """(qualname, node) for every (async) function, classes flattened."""
+
+    def walk(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                yield q, child
+                yield from walk(child, q + ".")
+            elif isinstance(child, ast.ClassDef):
+                yield from walk(child, f"{prefix}{child.name}.")
+
+    yield from walk(tree, "")
+
+
+def module_int_constants(tree: ast.AST) -> dict[str, int]:
+    """Module-level ``NAME = <int expr>`` bindings, simple arithmetic
+    folded (enough for bucket/block constants)."""
+    consts: dict[str, int] = {}
+
+    def fold(node):
+        if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+                and not isinstance(node.value, bool):
+            return node.value
+        if isinstance(node, ast.Name):
+            return consts.get(node.id)
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            v = fold(node.operand)
+            return None if v is None else -v
+        if isinstance(node, ast.BinOp):
+            a, b = fold(node.left), fold(node.right)
+            if a is None or b is None:
+                return None
+            try:
+                if isinstance(node.op, ast.Mult):
+                    return a * b
+                if isinstance(node.op, ast.Add):
+                    return a + b
+                if isinstance(node.op, ast.Sub):
+                    return a - b
+                if isinstance(node.op, ast.FloorDiv):
+                    return a // b
+                if isinstance(node.op, ast.Mod):
+                    return a % b
+            except ZeroDivisionError:
+                return None
+        return None
+
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            v = fold(stmt.value)
+            if v is not None:
+                consts[stmt.targets[0].id] = v
+    return consts
+
+
+class FuncEnv:
+    """Single-assignment view of one function body.
+
+    Maps each locally assigned Name to its (last) value expression —
+    last-write-wins is wrong under branching, but the scanned dispatch
+    code is straight-line and the rules only use this to follow
+    ``mask_bits = words.view(...)``-style definition chains.
+    """
+
+    def __init__(self, func: ast.AST):
+        self.func = func
+        self.assigns: dict[str, ast.AST] = {}
+        self.loop_targets: set[str] = set()
+        params = set()
+        a = func.args
+        for p in (a.posonlyargs + a.args + a.kwonlyargs):
+            params.add(p.arg)
+        if a.vararg:
+            params.add(a.vararg.arg)
+        if a.kwarg:
+            params.add(a.kwarg.arg)
+        self.params = params
+        for node in ast.walk(func):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    self._bind(tgt, node.value)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                self._bind(node.target, node.value)
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                for n in ast.walk(node.target):
+                    if isinstance(n, ast.Name):
+                        self.loop_targets.add(n.id)
+            elif isinstance(node, ast.comprehension):
+                for n in ast.walk(node.target):
+                    if isinstance(n, ast.Name):
+                        self.loop_targets.add(n.id)
+
+    def _bind(self, tgt: ast.AST, value: ast.AST) -> None:
+        if isinstance(tgt, ast.Name):
+            self.assigns[tgt.id] = value
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for el in tgt.elts:
+                if isinstance(el, ast.Name):
+                    # tuple unpack: origin is the whole RHS (opaque)
+                    self.assigns[el.id] = value
+
+    # -- origin resolution ------------------------------------------------
+    def origin(self, expr: ast.AST, depth: int = 8) -> ast.AST:
+        """Follow Name bindings and pass-through calls to the defining
+        expression: ``mask_bits -> words.view(u32) -> np.zeros(...)``."""
+        seen = 0
+        while seen < depth:
+            seen += 1
+            if isinstance(expr, ast.Name):
+                nxt = self.assigns.get(expr.id)
+                if nxt is None or nxt is expr:
+                    return expr
+                expr = nxt
+                continue
+            if isinstance(expr, ast.Call):
+                t = terminal(expr.func)
+                if t in PASSTHROUGH_CALLS:
+                    base = (expr.func.value
+                            if isinstance(expr.func, ast.Attribute)
+                            else (expr.args[0] if expr.args else None))
+                    # np.asarray(x) / x.view(...) both forward x
+                    if t in {"asarray", "array", "ascontiguousarray"} \
+                            and expr.args:
+                        base = expr.args[0]
+                    if base is not None:
+                        expr = base
+                        continue
+                return expr
+            return expr
+        return expr
+
+    # -- bucket-derived shape safety --------------------------------------
+    def is_bucketed(self, expr: ast.AST, depth: int = 10) -> bool:
+        """True iff a dim expression cannot vary per call except in
+        bucket-sized steps.  Heuristics (see docs/static-analysis.md):
+
+        * int literals, ``*_BUCKET`` / ``BLOCK_*`` names: safe
+        * ``bucket(...)`` / ``mega_query_bucket(...)`` / ``pl.cdiv``: safe
+        * arithmetic / max / min over safe operands: safe
+        * attribute loads (``self.graph.n_vertices``, ``assembled.d_pad``)
+          and ``X.shape[i]`` with an attribute base: safe — engine /
+          assembly state is constant across queries, so it cannot drive
+          per-call retraces
+        * ``X.shape[i]`` with a Name base: safe iff X itself is safe
+        * everything else (``len(...)``, ``sum(...)``, loop targets,
+          parameters, stacked lists): unsafe
+        """
+        if depth <= 0:
+            return False
+        if isinstance(expr, ast.Constant):
+            return isinstance(expr.value, int)
+        if isinstance(expr, ast.Name):
+            if BUCKET_CONST_RE.match(expr.id):
+                return True
+            if expr.id in self.loop_targets or expr.id in self.params:
+                return False
+            bound = self.assigns.get(expr.id)
+            if bound is None:
+                # unknown free name: module constant or import — only
+                # trust the *_BUCKET naming convention (handled above)
+                return False
+            return self.is_bucketed(bound, depth - 1)
+        if isinstance(expr, ast.UnaryOp):
+            return self.is_bucketed(expr.operand, depth - 1)
+        if isinstance(expr, ast.BinOp):
+            return (self.is_bucketed(expr.left, depth - 1)
+                    and self.is_bucketed(expr.right, depth - 1))
+        if isinstance(expr, ast.Call):
+            t = terminal(expr.func)
+            if t in BUCKETING_CALLS:
+                return True
+            if t in {"max", "min", "int"}:
+                return all(self.is_bucketed(a, depth - 1)
+                           for a in expr.args)
+            return False
+        if isinstance(expr, ast.Subscript):
+            # X.shape[i]
+            base = expr.value
+            if isinstance(base, ast.Attribute) and base.attr == "shape":
+                owner = base.value
+                if isinstance(owner, ast.Name):
+                    # a parameter's .shape derives a dim from an operand
+                    # that already exists — it cannot introduce NEW
+                    # per-call shape variation (the caller's operand is
+                    # checked at its own construction site)
+                    if owner.id in self.params:
+                        return True
+                    return self.is_bucketed(owner, depth - 1)
+                return isinstance(owner, (ast.Attribute, ast.Subscript))
+            return False
+        if isinstance(expr, ast.Attribute):
+            return True
+        if isinstance(expr, ast.IfExp):
+            return (self.is_bucketed(expr.body, depth - 1)
+                    and self.is_bucketed(expr.orelse, depth - 1))
+        return False
+
+
+def names_in(expr: ast.AST) -> set[str]:
+    """All Name identifiers mentioned anywhere in an expression."""
+    return {n.id for n in ast.walk(expr) if isinstance(n, ast.Name)}
+
+
+def call_arg(call: ast.Call, index: int, name: str) -> ast.AST | None:
+    """Argument by position or keyword; None when absent."""
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    if index < len(call.args):
+        a = call.args[index]
+        if isinstance(a, ast.Starred):
+            return None
+        return a
+    return None
+
+
+def shape_dims(ctor: ast.Call) -> list[ast.AST]:
+    """Dim expressions of an array-constructor call's shape argument."""
+    shape = call_arg(ctor, 0, "shape")
+    if shape is None:
+        return []
+    if isinstance(shape, (ast.Tuple, ast.List)):
+        return list(shape.elts)
+    return [shape]
+
+
+def is_neg_inf(expr: ast.AST) -> bool:
+    if isinstance(expr, ast.UnaryOp) and isinstance(expr.op, ast.USub):
+        return is_pos_inf(expr.operand)
+    return False
+
+
+def is_pos_inf(expr: ast.AST) -> bool:
+    d = dotted(expr)
+    if d is not None and d.split(".")[-1] == "inf":
+        return True
+    return isinstance(expr, ast.Constant) and expr.value == float("inf")

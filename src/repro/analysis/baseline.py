@@ -1,0 +1,72 @@
+"""Baseline: documented, accepted findings that don't fail the run.
+
+Entries match on (rule, path, normalized line content) — NOT the line
+number — so unrelated edits above a baselined site don't churn the
+file.  Each entry carries a mandatory ``reason``; an entry that stops
+matching anything is reported as stale (and fails the run) so the
+baseline can only shrink, never silently rot.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.analysis.finding import Finding
+
+DEFAULT_BASELINE = Path(__file__).with_name("baseline.json")
+
+
+def load(path: Path | None = None) -> list[dict]:
+    p = path or DEFAULT_BASELINE
+    if not p.exists():
+        return []
+    data = json.loads(p.read_text())
+    entries = data.get("entries", [])
+    for e in entries:
+        for field in ("rule", "path", "content", "reason"):
+            if field not in e:
+                raise ValueError(
+                    f"baseline entry missing '{field}': {e}")
+    return entries
+
+
+def _line_content(finding: Finding, sources: dict[str, list[str]]) -> str:
+    lines = sources.get(finding.path, [])
+    if 1 <= finding.line <= len(lines):
+        return lines[finding.line - 1].strip()
+    return ""
+
+
+def apply(findings: list[Finding], entries: list[dict],
+          sources: dict[str, list[str]]
+          ) -> tuple[list[Finding], list[Finding], list[dict]]:
+    """Split into (kept, baselined, stale_entries).
+
+    Each entry absorbs at most one finding per occurrence (duplicate
+    identical lines need duplicate entries).
+    """
+    pool: dict[tuple, list[dict]] = {}
+    for e in entries:
+        pool.setdefault((e["rule"], e["path"], e["content"].strip()),
+                        []).append(e)
+    kept, baselined = [], []
+    for f in findings:
+        key = (f.rule, f.path, _line_content(f, sources))
+        bucket = pool.get(key)
+        if bucket:
+            bucket.pop()
+            baselined.append(f)
+        else:
+            kept.append(f)
+    stale = [e for bucket in pool.values() for e in bucket]
+    return kept, baselined, stale
+
+
+def render_entry(finding: Finding, sources: dict[str, list[str]],
+                 reason: str = "TODO: document why this is accepted"
+                 ) -> dict:
+    return {"rule": finding.rule, "path": finding.path,
+            "line": finding.line,
+            "content": _line_content(finding, sources),
+            "reason": reason}

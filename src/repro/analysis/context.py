@@ -1,0 +1,131 @@
+"""Per-file analysis context + the shared kernel-contract table.
+
+The contract table is parsed from the AST of
+``src/repro/kernels/dominance/ops.py`` (plus ``kernel.py`` for the
+``BLOCK_*`` constants) — reprolint never imports project modules, so it
+runs without jax and cannot be confused by runtime monkey-patching.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from functools import lru_cache
+from pathlib import Path
+
+from repro.analysis.astutil import module_int_constants
+
+SUPPRESS_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Z0-9, ]+)")
+
+CONTRACT_MODULES = ("src/repro/kernels/dominance/ops.py",
+                    "src/repro/kernels/dominance/kernel.py")
+
+
+@dataclasses.dataclass
+class FileContext:
+    """One parsed source file handed to every applicable rule."""
+
+    path: Path                   # absolute
+    rel: str                     # repo-relative, POSIX separators
+    source: str
+    tree: ast.AST
+    root: Path                   # repo root (contract-table anchor)
+
+    @classmethod
+    def parse(cls, path: Path, root: Path) -> "FileContext | None":
+        try:
+            source = path.read_text()
+            tree = ast.parse(source, filename=str(path))
+        except (SyntaxError, UnicodeDecodeError, OSError):
+            return None
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+        return cls(path=path, rel=rel, source=source, tree=tree, root=root)
+
+    def suppressed_lines(self) -> dict[int, set[str]]:
+        """line -> suppressed rule ids.  ``# reprolint: disable=RPR004``
+        on a code line suppresses that line; on a comment-only line it
+        suppresses the next line."""
+        out: dict[int, set[str]] = {}
+        for i, text in enumerate(self.source.splitlines(), start=1):
+            m = SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            ids = {t.strip() for t in m.group(1).split(",") if t.strip()}
+            line = i + 1 if text.lstrip().startswith("#") else i
+            out.setdefault(line, set()).update(ids)
+        return out
+
+    def contracts(self) -> "ContractTable":
+        return load_contracts(self.root)
+
+    def local_contracts(self) -> dict | None:
+        """KERNEL_CONTRACTS defined in THIS file (fixture self-tests),
+        resolved against this file's own constants."""
+        consts = module_int_constants(self.tree)
+        return _extract_contracts(self.tree, consts)
+
+
+@dataclasses.dataclass
+class ContractTable:
+    """Declared kernel contracts + the constant table they resolve in."""
+
+    constants: dict              # name -> int (buckets + blocks)
+    contracts: dict              # callee terminal name -> contract dict
+
+    def boundary_names(self) -> set[str]:
+        return set(self.contracts)
+
+
+def _literal(node: ast.AST, consts: dict):
+    """Evaluate a contract-table value node: constants, names bound to
+    ints, strings, tuples/lists/dicts thereof."""
+    if isinstance(node, ast.Constant):
+        return node.value
+    if isinstance(node, ast.Name):
+        return consts.get(node.id, node.id)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(_literal(e, consts) for e in node.elts)
+    if isinstance(node, ast.Dict):
+        return {_literal(k, consts): _literal(v, consts)
+                for k, v in zip(node.keys, node.values) if k is not None}
+    if isinstance(node, ast.Call):  # dict(...) sugar
+        if getattr(node.func, "id", None) == "dict":
+            return {kw.arg: _literal(kw.value, consts)
+                    for kw in node.keywords if kw.arg}
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = _literal(node.operand, consts)
+        return -v if isinstance(v, (int, float)) else None
+    return None
+
+
+def _extract_contracts(tree: ast.AST, consts: dict) -> dict | None:
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) \
+                and len(stmt.targets) == 1 \
+                and getattr(stmt.targets[0], "id", None) \
+                == "KERNEL_CONTRACTS":
+            table = _literal(stmt.value, consts)
+            return table if isinstance(table, dict) else None
+    return None
+
+
+@lru_cache(maxsize=4)
+def load_contracts(root: Path) -> ContractTable:
+    consts: dict[str, int] = {}
+    contracts: dict = {}
+    for rel in CONTRACT_MODULES:
+        path = root / rel
+        if not path.exists():
+            continue
+        tree = ast.parse(path.read_text(), filename=str(path))
+        consts.update(module_int_constants(tree))
+    for rel in CONTRACT_MODULES:
+        path = root / rel
+        if not path.exists():
+            continue
+        tree = ast.parse(path.read_text(), filename=str(path))
+        found = _extract_contracts(tree, consts)
+        if found:
+            contracts.update(found)
+    return ContractTable(constants=consts, contracts=contracts)

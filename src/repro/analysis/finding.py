@@ -1,0 +1,33 @@
+"""Finding objects: one rule violation at one source location."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """A single rule violation.
+
+    ``path`` is repo-relative (POSIX separators) so baselines written
+    on one checkout match any other; ``line`` is 1-based.
+    """
+
+    rule: str                    # "RPR001"
+    path: str                    # "src/repro/dist/cluster.py"
+    line: int
+    message: str
+    hint: str = ""               # how to fix (or suppress) it
+    col: int = 0
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}"
+
+    def render(self) -> str:
+        out = f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)

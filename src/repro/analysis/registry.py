@@ -1,0 +1,60 @@
+"""Rule registry: rules self-register at import via the decorator."""
+
+from __future__ import annotations
+
+import fnmatch
+from typing import Callable, Iterable
+
+from repro.analysis.finding import Finding
+
+# rule id -> Rule instance; populated by @register at import time
+RULES: dict[str, "Rule"] = {}
+
+
+class Rule:
+    """One invariant checker.
+
+    ``check(ctx)`` yields Findings for a single parsed file; ``scope``
+    is a tuple of repo-relative glob patterns the rule applies to
+    (empty = every scanned file).  Path scoping lives here — not in the
+    runner — because each invariant has a deliberate blast radius (e.g.
+    RPR002 guards the engine, not test scaffolding that builds raw
+    caches on purpose).
+    """
+
+    id: str = ""
+    name: str = ""
+    scope: tuple = ()
+
+    def applies_to(self, rel_path: str) -> bool:
+        if not self.scope:
+            return True
+        return any(fnmatch.fnmatch(rel_path, pat) for pat in self.scope)
+
+    def check(self, ctx) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, ctx, node, message: str, hint: str = "") -> Finding:
+        return Finding(rule=self.id, path=ctx.rel, line=node.lineno,
+                       col=getattr(node, "col_offset", 0),
+                       message=message, hint=hint)
+
+
+def register(cls: type) -> type:
+    """Class decorator: instantiate and index the rule by id."""
+    inst = cls()
+    if not inst.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if inst.id in RULES:
+        raise ValueError(f"duplicate rule id {inst.id}")
+    RULES[inst.id] = inst
+    return cls
+
+
+def all_rules() -> list[Rule]:
+    """Every registered rule, importing the built-in set on first use."""
+    import repro.analysis.rules  # noqa: F401  (registers on import)
+    return [RULES[k] for k in sorted(RULES)]
+
+
+RuleFn = Callable[[object], Iterable[Finding]]

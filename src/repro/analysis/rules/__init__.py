@@ -1,0 +1,8 @@
+"""Built-in reprolint rules; importing this package registers them."""
+
+from repro.analysis.rules import (rpr001_buckets, rpr002_epoch, rpr003_crc,
+                                  rpr004_wallclock, rpr005_sync,
+                                  rpr006_contract)
+
+__all__ = ["rpr001_buckets", "rpr002_epoch", "rpr003_crc",
+           "rpr004_wallclock", "rpr005_sync", "rpr006_contract"]

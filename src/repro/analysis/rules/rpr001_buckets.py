@@ -1,0 +1,79 @@
+"""RPR001: unbucketed shape at a jit boundary.
+
+Every operand a function passes to a `KERNEL_CONTRACTS` callee whose
+``caller_bucketed`` entry names it must have bucket-derived dims: a jit
+boundary retraces per distinct operand shape, so a dim that tracks raw
+data cardinality (``len(batch)``, ``stacked.shape[0]``) compiles a new
+executable on nearly every call.  The PR-3 retrace bound demands every
+such dim flow from ``bucket(...)`` / ``mega_query_bucket(...)`` /
+``*_BUCKET`` constants (see ops.py).
+
+Mechanics: inside each function that calls a contract callee, every
+checked argument's names are resolved to their defining expression; a
+``np.zeros/full/empty/ones`` origin gets its shape dims classified by
+``FuncEnv.is_bucketed`` (attribute loads = engine state = safe; raw
+``len``/``sum``/``.shape`` of stacked hosts = unsafe).  Origins that
+are parameters or attributes are assumed checked upstream.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import (ARRAY_CTORS, FuncEnv, call_arg,
+                                    iter_functions, names_in, shape_dims,
+                                    terminal)
+from repro.analysis.registry import Rule, register
+
+
+@register
+class UnbucketedShapeRule(Rule):
+    id = "RPR001"
+    name = "unbucketed-shape-at-jit-boundary"
+
+    def check(self, ctx):
+        contracts = ctx.contracts().contracts
+        if not contracts:
+            return
+        boundary = set(contracts)
+        for qualname, func in iter_functions(ctx.tree):
+            calls = [n for n in ast.walk(func)
+                     if isinstance(n, ast.Call)
+                     and terminal(n.func) in boundary]
+            if not calls:
+                continue
+            env = FuncEnv(func)
+            reported: set[int] = set()
+            for call in calls:
+                spec = contracts[terminal(call.func)]
+                for opname, idx in spec.get("caller_bucketed", {}).items():
+                    arg = call_arg(call, idx, opname)
+                    if arg is None:
+                        continue
+                    yield from self._check_operand(
+                        ctx, env, call, arg, opname,
+                        terminal(call.func), reported)
+
+    def _check_operand(self, ctx, env, call, arg, opname, callee,
+                       reported):
+        for name in sorted(names_in(arg)):
+            origin = env.origin(ast.Name(id=name, ctx=ast.Load()))
+            if not isinstance(origin, ast.Call):
+                continue
+            t = terminal(origin.func)
+            if t not in ARRAY_CTORS:
+                continue
+            bad = [d for d in shape_dims(origin)
+                   if not env.is_bucketed(d)]
+            if not bad or id(origin) in reported:
+                continue
+            reported.add(id(origin))
+            dims = ", ".join(ast.unparse(d) for d in bad)
+            yield self.finding(
+                ctx, origin,
+                f"operand '{opname}' of jit boundary '{callee}' is "
+                f"built with unbucketed dim(s) [{dims}] — every "
+                "distinct value retraces the launch",
+                hint="round the dim with bucket(n, <*_BUCKET>) from "
+                     "repro.kernels.dominance.ops (pad rows must be "
+                     "inert: zero mask bits / -inf boxes / +inf queries)")

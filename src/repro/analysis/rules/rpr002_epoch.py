@@ -1,0 +1,130 @@
+"""RPR002: epoch-unsafe cache access.
+
+The PR-5 exactness guarantee: a query result (or plan artifact) cached
+before ``apply_updates`` must be unreachable afterwards.  That holds
+because every result-cache / plan-LRU key is produced by
+``_query_key``, which embeds ``_data_epoch``.  Any access keyed by
+anything else reopens the stale-answer hole.
+
+The rule scopes to the engine (``src/repro/dist/``) — tests and cache
+benchmarks construct raw ValueCaches with synthetic keys on purpose.
+A key expression is epoch-safe when it flows from:
+
+* a call to ``_query_key(...)`` (directly or via an assignment chain),
+* a parameter or dict slot literally named ``key`` (the engine's
+  convention for passing a ``_query_key`` product down the call chain),
+* an expression mentioning ``_data_epoch`` itself.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import (FuncEnv, call_arg, iter_functions,
+                                    terminal)
+from repro.analysis.registry import Rule, register
+
+# terminal method name -> index of the key argument
+KEYED_CALLS = {"access": 0, "peek": 0, "admit": 0, "get": 0, "put": 0,
+               "store": 0, "_cache_lookup": 0, "_cache_peek": 0,
+               "_plan_artifacts": 1}
+# receivers that make those terminals a *result/plan* cache access
+CACHE_RECEIVER_MARKERS = ("cache", "_plan_lru", "_slave_store")
+KEYED_SUBSCRIPTS = ("_plan_lru",)
+
+
+def _mentions_cache(receiver: ast.AST) -> bool:
+    for node in ast.walk(receiver):
+        name = getattr(node, "attr", None) or getattr(node, "id", None)
+        if name and any(m in name for m in CACHE_RECEIVER_MARKERS):
+            return True
+    return False
+
+
+class _KeyFlow:
+    def __init__(self, env: FuncEnv):
+        self.env = env
+
+    def safe(self, expr: ast.AST, depth: int = 8) -> bool:
+        if depth <= 0:
+            return False
+        if isinstance(expr, ast.Call):
+            if terminal(expr.func) == "_query_key":
+                return True
+            return False
+        if isinstance(expr, ast.Name):
+            if expr.id == "key":
+                # bound locally? follow it; a bare `key` parameter is
+                # the engine's checked-at-caller convention
+                bound = self.env.assigns.get(expr.id)
+                if bound is None:
+                    return expr.id in self.env.params
+                return self.safe(bound, depth - 1)
+            bound = self.env.assigns.get(expr.id)
+            return bound is not None and self.safe(bound, depth - 1)
+        if isinstance(expr, ast.Subscript):
+            # it["key"] — dict slots named "key" carry _query_key
+            # products across the dispatch/consume boundary
+            sl = expr.slice
+            return isinstance(sl, ast.Constant) and sl.value == "key"
+        if isinstance(expr, ast.Attribute):
+            return expr.attr in ("key", "_data_epoch")
+        if isinstance(expr, ast.Tuple):
+            return any(self.safe(e, depth - 1) for e in expr.elts)
+        return False
+
+
+@register
+class EpochUnsafeCacheRule(Rule):
+    id = "RPR002"
+    name = "epoch-unsafe-cache-access"
+    scope = ("src/repro/dist/*.py",)
+
+    def check(self, ctx):
+        for qualname, func in iter_functions(ctx.tree):
+            if qualname.endswith("_query_key"):
+                continue
+            env = FuncEnv(func)
+            flow = _KeyFlow(env)
+            for node in ast.walk(func):
+                if isinstance(node, ast.Call):
+                    yield from self._check_call(ctx, flow, node)
+                elif isinstance(node, ast.Subscript):
+                    yield from self._check_subscript(ctx, flow, node)
+
+    def _check_call(self, ctx, flow, call):
+        t = terminal(call.func)
+        if t not in KEYED_CALLS:
+            return
+        if isinstance(call.func, ast.Attribute):
+            receiver = call.func.value
+            if not _mentions_cache(receiver) \
+                    and not t.startswith(("_cache", "_plan")):
+                return
+        elif not t.startswith(("_cache", "_plan")):
+            return
+        arg = call_arg(call, KEYED_CALLS[t], "key")
+        if arg is None or flow.safe(arg):
+            return
+        yield self.finding(
+            ctx, call,
+            f"cache access '{t}' keyed by "
+            f"'{ast.unparse(arg)}', which does not flow from "
+            "_query_key/_data_epoch — a post-update query could be "
+            "served a pre-update answer",
+            hint="derive the key via self._query_key(query) (it embeds "
+                 "_data_epoch) or thread an existing `key` through")
+
+    def _check_subscript(self, ctx, flow, node):
+        base = node.value
+        name = getattr(base, "attr", None) or getattr(base, "id", None)
+        if name not in KEYED_SUBSCRIPTS:
+            return
+        if isinstance(node.slice, ast.Slice) or flow.safe(node.slice):
+            return
+        yield self.finding(
+            ctx, node,
+            f"plan-LRU subscript keyed by '{ast.unparse(node.slice)}', "
+            "which does not flow from _query_key/_data_epoch",
+            hint="plan artifacts must be keyed by a _query_key product "
+                 "so apply_updates invalidates them")

@@ -1,0 +1,84 @@
+"""RPR003: un-CRC'd transfer of a shard/delta byte image.
+
+Paper innovation 1's index-consistency guarantee assumes every byte
+image that crosses a machine boundary is verified: ``crc_transfer``
+(CRC32 + bounded retry) or ``hot_migrate`` (which calls it).  Decoding
+a blob that did NOT come out of a verified transfer silently accepts
+link corruption as index state.
+
+The rule scopes to the engine (``src/repro/dist/``): any call to
+``Shard.deserialize`` / ``apply_shard_delta`` whose blob argument does
+not flow from a ``crc_transfer(...)`` result (the ``.received`` field,
+possibly through assignment chains) is flagged.  ``serialize`` /
+``shard_delta`` production sites are fine — only consumption of a blob
+that crossed a link needs the check.  Local round-trips (tests, same-
+machine persistence) are out of scope by path.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import (FuncEnv, call_arg, iter_functions,
+                                    terminal)
+from repro.analysis.registry import Rule, register
+
+# terminal call name -> index of the blob argument
+DECODERS = {"deserialize": 0, "apply_shard_delta": 1}
+# functions that ARE the verified-transfer machinery
+TRANSFER_FUNCS = {"crc_transfer"}
+
+
+class _BlobFlow:
+    def __init__(self, env: FuncEnv):
+        self.env = env
+
+    def verified(self, expr: ast.AST, depth: int = 8) -> bool:
+        if depth <= 0:
+            return False
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in ("received", "blob"):
+                return True
+            return False
+        if isinstance(expr, ast.Name):
+            bound = self.env.assigns.get(expr.id)
+            return bound is not None and self.verified(bound, depth - 1)
+        if isinstance(expr, ast.Call):
+            return terminal(expr.func) in TRANSFER_FUNCS
+        if isinstance(expr, ast.Subscript):
+            return self.verified(expr.value, depth - 1)
+        return False
+
+
+@register
+class UncrcdTransferRule(Rule):
+    id = "RPR003"
+    name = "un-crcd-transfer"
+    scope = ("src/repro/dist/*.py",)
+
+    def check(self, ctx):
+        for qualname, func in iter_functions(ctx.tree):
+            # skip the transfer machinery itself AND the decoder
+            # implementations: component decodes inside `deserialize` /
+            # `apply_shard_delta` operate on a payload the caller
+            # already verified at the machine boundary
+            if func.name in TRANSFER_FUNCS or func.name in DECODERS:
+                continue
+            env = FuncEnv(func)
+            flow = _BlobFlow(env)
+            for node in ast.walk(func):
+                if not isinstance(node, ast.Call):
+                    continue
+                t = terminal(node.func)
+                if t not in DECODERS:
+                    continue
+                arg = call_arg(node, DECODERS[t], "blob")
+                if arg is None or flow.verified(arg):
+                    continue
+                yield self.finding(
+                    ctx, node,
+                    f"'{t}' decodes blob '{ast.unparse(arg)}' that did "
+                    "not come from a crc_transfer — link corruption "
+                    "would be accepted as index state",
+                    hint="ship the image via migration.crc_transfer "
+                         "(or hot_migrate) and decode tr.received")

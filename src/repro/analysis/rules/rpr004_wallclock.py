@@ -1,0 +1,96 @@
+"""RPR004: wall-clock / ambient randomness in determinism-critical code.
+
+The engine's counters, PE-score labels, and rebalance decisions are
+asserted bit-identical across probe modes, megabatching, updates, and
+migration.  That only holds because everything they consume is virtual:
+``leaves_tested * VIRTUAL_MS_PER_LEAF`` for PE labels,
+``EPOCH_VIRTUAL_S`` for the rebalance clock, seeded ``default_rng``
+for every stochastic choice.  A single ``time.time()`` or unseeded RNG
+in these modules silently breaks the whole bit-identity test pyramid
+(the PR-2 determinism sweep fixed exactly such a leak).
+
+Scope: the determinism-critical module list below.  Allowlisted (and
+therefore NOT scoped): ``launch/`` and ``train/trainer.py`` (bench/
+fit wall timing is their job), plus function ``_fit_pe_model`` (wall
+time goes only into the ``pe_fit_report`` diagnostic, never labels).
+Wall-clock *diagnostic* fields inside scoped modules (e.g. the engine's
+plan/probe/join ms telemetry, which is never asserted) carry inline
+``# reprolint: disable=RPR004`` annotations or baseline entries.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import dotted, iter_functions
+from repro.analysis.registry import Rule, register
+
+WALL_CLOCK = {"time.time", "time.perf_counter", "time.monotonic",
+              "time.process_time", "time.perf_counter_ns",
+              "time.time_ns", "datetime.now", "datetime.utcnow",
+              "datetime.datetime.now", "datetime.datetime.utcnow"}
+LEGACY_NP_RANDOM = {"random", "rand", "randn", "randint", "choice",
+                    "shuffle", "permutation", "seed", "uniform",
+                    "normal", "standard_normal", "zipf"}
+STDLIB_RANDOM = {"random.random", "random.randint", "random.choice",
+                 "random.shuffle", "random.uniform", "random.sample",
+                 "random.randrange", "random.seed"}
+ALLOWED_FUNCS = {"_fit_pe_model"}
+
+
+@register
+class WallClockRule(Rule):
+    id = "RPR004"
+    name = "wall-clock-determinism"
+    scope = (
+        "src/repro/core/*.py",
+        "src/repro/cache/*.py",
+        "src/repro/data/*.py",
+        "src/repro/dist/*.py",
+        "src/repro/kernels/*.py",
+        "src/repro/kernels/*/*.py",
+    )
+
+    def check(self, ctx):
+        allowed_spans = []
+        for qualname, func in iter_functions(ctx.tree):
+            if func.name in ALLOWED_FUNCS:
+                allowed_spans.append(
+                    (func.lineno, max(func.lineno,
+                                      func.end_lineno or func.lineno)))
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            label = self._nondeterministic(node)
+            if label is None:
+                continue
+            if any(a <= node.lineno <= b for a, b in allowed_spans):
+                continue
+            yield self.finding(
+                ctx, node,
+                f"{label} in a determinism-critical module — PE labels, "
+                "counters, and rebalance decisions must be virtual "
+                "(bit-identical across modes/machines)",
+                hint="use leaves_tested * VIRTUAL_MS_PER_LEAF / "
+                     "EPOCH_VIRTUAL_S / a seeded np.random.default_rng; "
+                     "for a pure wall-clock diagnostic add "
+                     "`# reprolint: disable=RPR004 -- <why>`")
+
+    @staticmethod
+    def _nondeterministic(call: ast.Call) -> str | None:
+        d = dotted(call.func)
+        if d is None:
+            return None
+        if d in WALL_CLOCK or d in STDLIB_RANDOM:
+            return f"wall-clock/ambient call '{d}()'"
+        parts = d.split(".")
+        # only numpy's GLOBAL rng is ambient state; jax.random is keyed
+        # (explicitly seeded) and rng-object methods carry their seed
+        if len(parts) >= 3 and parts[-3] in ("np", "numpy") \
+                and parts[-2] == "random" \
+                and parts[-1] in LEGACY_NP_RANDOM:
+            return f"global-RNG call '{d}()'"
+        if parts[-1] == "default_rng" and not call.args \
+                and not call.keywords:
+            return "unseeded 'default_rng()'"
+        return None

@@ -1,0 +1,105 @@
+"""RPR005: implicit host-device sync inside the pipelined dispatch region.
+
+The PR-4 wall-clock win is overlap: ``_mb_dispatch`` launches batch
+k+1's fused probe asynchronously while batch k's host-side join runs,
+and only ``mega_readback`` (called from consume) is allowed to block.
+Forcing a device value inside the dispatch half — ``np.asarray``,
+``.item()``, ``float()``, ``.block_until_ready()`` on anything the
+launch produced — serializes the pipeline back to the latency the
+serial plane path already had, without failing any correctness test.
+
+Scope: the dispatch-region functions by name (``mega_dispatch``,
+``_mb_dispatch``).  Taint: names bound from boundary-launch results
+(``megabatch_leaf_probe*``, ``fused_plan_descent*``, ``mega_dispatch``)
+and the in-flight device attributes (``finals``, ``counts_dev``,
+``gverts_dev``, ``leaves``).  Host-side operands (qmat stacks, packed
+masks) are untainted — forcing those is normal packing work.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import FuncEnv, iter_functions, terminal
+from repro.analysis.registry import Rule, register
+
+DISPATCH_REGION_FUNCS = {"mega_dispatch", "_mb_dispatch"}
+LAUNCHES = {"megabatch_leaf_probe", "megabatch_leaf_probe_jit",
+            "fused_plan_descent", "fused_plan_descent_jit",
+            "mega_dispatch", "gather_pack_lanes_jit"}
+DEVICE_ATTRS = {"finals", "counts_dev", "gverts_dev", "leaves"}
+FORCING_CALLS = {"asarray", "array", "float", "int", "bool",
+                 "device_get"}
+FORCING_METHODS = {"item", "block_until_ready", "tolist"}
+
+
+def _tainted_names(func: ast.AST, env: FuncEnv) -> set[str]:
+    tainted: set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(func):
+            if not isinstance(node, ast.Assign):
+                continue
+            v = node.value
+            hit = False
+            if isinstance(v, ast.Call) and terminal(v.func) in LAUNCHES:
+                hit = True
+            else:
+                for sub in ast.walk(v):
+                    if isinstance(sub, ast.Attribute) \
+                            and sub.attr in DEVICE_ATTRS:
+                        hit = True
+                    if isinstance(sub, ast.Name) and sub.id in tainted:
+                        hit = True
+            if hit:
+                for tgt in node.targets:
+                    for n in ast.walk(tgt):
+                        if isinstance(n, ast.Name) \
+                                and n.id not in tainted:
+                            tainted.add(n.id)
+                            changed = True
+    return tainted
+
+
+def _mentions_device(expr: ast.AST, tainted: set[str]) -> bool:
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Name) and sub.id in tainted:
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr in DEVICE_ATTRS:
+            return True
+    return False
+
+
+@register
+class ImplicitSyncRule(Rule):
+    id = "RPR005"
+    name = "implicit-sync-in-dispatch-region"
+
+    def check(self, ctx):
+        for qualname, func in iter_functions(ctx.tree):
+            if func.name not in DISPATCH_REGION_FUNCS:
+                continue
+            env = FuncEnv(func)
+            tainted = _tainted_names(func, env)
+            for node in ast.walk(func):
+                if not isinstance(node, ast.Call):
+                    continue
+                t = terminal(node.func)
+                if t in FORCING_METHODS \
+                        and isinstance(node.func, ast.Attribute):
+                    target = node.func.value
+                elif t in FORCING_CALLS and node.args:
+                    target = node.args[0]
+                else:
+                    continue
+                if not _mentions_device(target, tainted):
+                    continue
+                yield self.finding(
+                    ctx, node,
+                    f"'{ast.unparse(node.func)}' forces a device value "
+                    "inside the pipelined dispatch region — this blocks "
+                    "the async launch and serializes the batch pipeline",
+                    hint="keep device arrays opaque until mega_readback "
+                         "(the consume half); move host logic before "
+                         "the launch or after readback")

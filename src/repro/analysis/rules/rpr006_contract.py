@@ -1,0 +1,201 @@
+"""RPR006: declared kernel BlockSpec/grid/dtype/pad contract.
+
+`KERNEL_CONTRACTS` (repro/kernels/dominance/ops.py) declares, per jit
+boundary, the kernel block each bucketed axis must divide into, the
+wire dtype of packed-bit operands, and the pad fill each operand's
+semantics assume (+inf queries match nothing, -inf boxes dominate
+nothing).  This rule checks three things statically:
+
+1. declaration consistency — for every operand with both a bucket and
+   a block, ``bucket % block == 0`` (a bucketed slab is then an exact
+   grid of blocks, the relation tests/test_probeplane.py pins at
+   runtime), and every ``packed_multiple`` divides its bucket;
+2. packed-bit dtype — call-site arguments for operands declared
+   ``uint32`` must originate from a ``.view(np.uint32)`` /
+   ``dtype=uint32`` construction;
+3. pad fill — ``np.full``-style origins of contract operands must use
+   the declared fill sign (``-inf`` vs ``+inf``).
+
+A file that defines its own ``KERNEL_CONTRACTS`` (fixtures) is checked
+against its own table; everything else checks against the canonical
+one.  Origins the AST cannot resolve (parameters, attributes) are
+skipped — runtime padding-edge tests in tests/test_kernels.py cover
+those from the same table.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import (ARRAY_CTORS, FuncEnv, call_arg,
+                                    dotted, is_neg_inf, is_pos_inf,
+                                    iter_functions, names_in, terminal)
+from repro.analysis.registry import Rule, register
+
+
+def _contract_assign(tree: ast.AST) -> ast.AST | None:
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) \
+                and getattr(stmt.targets[0], "id", None) \
+                == "KERNEL_CONTRACTS":
+            return stmt
+    return None
+
+
+def _is_uint32_origin(origin: ast.AST) -> bool | None:
+    """True/False when decidable from the origin expression, else None."""
+    if not isinstance(origin, ast.Call):
+        return None
+    t = terminal(origin.func)
+    if t == "view" and origin.args:
+        d = dotted(origin.args[0])
+        return d is not None and d.split(".")[-1] == "uint32"
+    if t in ARRAY_CTORS | {"asarray", "array"}:
+        for cand in list(origin.args[1:]) + [
+                kw.value for kw in origin.keywords
+                if kw.arg in (None, "dtype")]:
+            d = dotted(cand)
+            if d is not None:
+                return d.split(".")[-1] == "uint32"
+        return None
+    return None
+
+
+@register
+class KernelContractRule(Rule):
+    id = "RPR006"
+    name = "kernel-blockspec-contract"
+
+    def check(self, ctx):
+        if ctx.rel == "src/repro/kernels/dominance/ops.py":
+            # the canonical table refers to BLOCK_* names imported from
+            # kernel.py — resolve through the merged constant table
+            table = ctx.contracts().contracts
+            yield from self._check_declarations(ctx, table)
+        else:
+            local = ctx.local_contracts()
+            if local is not None:
+                yield from self._check_declarations(ctx, local)
+                table = local
+            else:
+                table = ctx.contracts().contracts
+        if table:
+            yield from self._check_call_sites(ctx, table)
+
+    # -- 1. declaration consistency ---------------------------------------
+    def _check_declarations(self, ctx, table):
+        anchor = _contract_assign(ctx.tree)
+        if anchor is None:
+            return
+        for callee, spec in table.items():
+            if not isinstance(spec, dict):
+                continue
+            blocks = spec.get("blocks", {})
+            buckets = spec.get("buckets", {})
+            for op in set(blocks) & set(buckets):
+                blk, bkt = blocks[op], buckets[op]
+                if isinstance(blk, int) and isinstance(bkt, int) \
+                        and blk > 0 and bkt % blk != 0:
+                    yield self.finding(
+                        ctx, anchor,
+                        f"contract '{callee}.{op}': bucket {bkt} is not "
+                        f"a multiple of kernel block {blk} — bucketed "
+                        "slabs would need a partial trailing block",
+                        hint="make the *_BUCKET constant a multiple of "
+                             "the kernel BLOCK_* it feeds")
+            for op, mult in spec.get("packed_multiple", {}).items():
+                bkt = buckets.get(op)
+                if isinstance(bkt, int) and isinstance(mult, int) \
+                        and mult > 0 and bkt % mult != 0:
+                    yield self.finding(
+                        ctx, anchor,
+                        f"contract '{callee}.{op}': bucket {bkt} breaks "
+                        f"the packed-axis multiple {mult} (bit packing "
+                        "needs whole bytes/words per row)",
+                        hint="pick a bucket divisible by the packing "
+                             "width")
+
+    # -- 2./3. call-site dtype + pad fill ----------------------------------
+    def _check_call_sites(self, ctx, table):
+        for qualname, func in iter_functions(ctx.tree):
+            calls = [n for n in ast.walk(func)
+                     if isinstance(n, ast.Call)
+                     and terminal(n.func) in table]
+            if not calls:
+                continue
+            env = FuncEnv(func)
+            for call in calls:
+                spec = table[terminal(call.func)]
+                if not isinstance(spec, dict):
+                    continue
+                positions = spec.get("caller_bucketed", {})
+                for op, want in spec.get("dtypes", {}).items():
+                    if want != "uint32" or op not in positions:
+                        continue
+                    arg = call_arg(call, positions[op], op)
+                    if arg is None:
+                        continue
+                    yield from self._check_uint32(ctx, env, call, arg,
+                                                  op)
+                for op, want in spec.get("pads", {}).items():
+                    if op not in positions:
+                        continue
+                    arg = call_arg(call, positions[op], op)
+                    if arg is None:
+                        continue
+                    yield from self._check_pad(ctx, env, arg, op, want,
+                                               terminal(call.func))
+
+    def _check_uint32(self, ctx, env, call, arg, op):
+        verdict = self._uint32_verdict(env, arg)
+        if verdict is False:
+            yield self.finding(
+                ctx, call,
+                f"packed-bit operand '{op}' is not uint32 at the "
+                "boundary — the in-kernel mask gather reads 32-bit "
+                "words",
+                hint="build the mask as bytes then "
+                     ".view(np.uint32) (see pack_mask_bits)")
+
+    def _uint32_verdict(self, env, expr, depth: int = 6):
+        """Resolve the ARGUMENT expression (an inline ``.view(u32)``
+        decides before any name-origin lookup, which would lose the
+        reinterpreting view)."""
+        if depth <= 0 or expr is None:
+            return None
+        if isinstance(expr, ast.Call):
+            v = _is_uint32_origin(expr)
+            if v is not None:
+                return v
+            t = terminal(expr.func)
+            if t in ("asarray", "array") and expr.args:
+                return self._uint32_verdict(env, expr.args[0], depth - 1)
+            return None
+        if isinstance(expr, ast.Name):
+            return self._uint32_verdict(env, env.assigns.get(expr.id),
+                                        depth - 1)
+        return None
+
+    def _check_pad(self, ctx, env, arg, op, want, callee):
+        for name in sorted(names_in(arg)):
+            origin = env.origin(ast.Name(id=name, ctx=ast.Load()))
+            if not isinstance(origin, ast.Call):
+                continue
+            if terminal(origin.func) != "full":
+                continue
+            fill = call_arg(origin, 1, "fill_value")
+            if fill is None:
+                continue
+            neg, pos = is_neg_inf(fill), is_pos_inf(fill)
+            if not neg and not pos:
+                continue
+            if (want == "-inf" and pos) or (want == "+inf" and neg):
+                yield self.finding(
+                    ctx, origin,
+                    f"operand '{op}' of '{callee}' is padded with "
+                    f"{'+inf' if pos else '-inf'} but the kernel "
+                    f"assumes {want} ("
+                    + ("pad boxes must dominate nothing"
+                       if want == "-inf"
+                       else "pad queries must match nothing") + ")",
+                    hint=f"pad '{op}' with {want} per KERNEL_CONTRACTS")

@@ -1,0 +1,119 @@
+"""Collect files, run every applicable rule, fold in suppressions and
+the baseline, and format the result."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.context import FileContext
+from repro.analysis.finding import Finding
+from repro.analysis.registry import all_rules
+
+# never scanned: deliberate rule-violation fixtures and the offline
+# hypothesis shim (vendored API surface, not project code)
+EXCLUDE_PARTS = {"__pycache__", ".git", "analysis_fixtures"}
+EXCLUDE_PREFIXES = ("src/hypothesis",)
+
+
+@dataclasses.dataclass
+class RunResult:
+    findings: list          # non-baselined, non-suppressed (these fail)
+    baselined: list         # matched a baseline entry
+    suppressed: list        # silenced by an inline comment
+    stale_baseline: list    # baseline entries that matched nothing
+    n_files: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings and not self.stale_baseline
+
+
+def collect_files(paths: list[str], root: Path) -> list[Path]:
+    out = []
+    for p in paths:
+        base = (root / p) if not Path(p).is_absolute() else Path(p)
+        if base.is_file() and base.suffix == ".py":
+            out.append(base)
+            continue
+        for f in sorted(base.rglob("*.py")):
+            rel = f.resolve().relative_to(root.resolve()).as_posix()
+            if set(f.parts) & EXCLUDE_PARTS:
+                continue
+            if rel.startswith(EXCLUDE_PREFIXES):
+                continue
+            out.append(f)
+    return out
+
+
+def run_paths(paths: list[str], root: Path | str | None = None,
+              baseline_path: Path | None = None,
+              rule_ids: set[str] | None = None,
+              use_baseline: bool = True) -> RunResult:
+    root = Path(root) if root else find_root()
+    files = collect_files(paths, root)
+    rules = [r for r in all_rules()
+             if rule_ids is None or r.id in rule_ids]
+    raw: list[Finding] = []
+    suppressed: list[Finding] = []
+    sources: dict[str, list[str]] = {}
+    for path in files:
+        ctx = FileContext.parse(path, root)
+        if ctx is None:
+            continue
+        sources[ctx.rel] = ctx.source.splitlines()
+        silenced = ctx.suppressed_lines()
+        for rule in rules:
+            if not rule.applies_to(ctx.rel):
+                continue
+            for f in rule.check(ctx):
+                if f.rule in silenced.get(f.line, ()):
+                    suppressed.append(f)
+                else:
+                    raw.append(f)
+    raw.sort(key=lambda f: (f.path, f.line, f.rule))
+    entries = baseline_mod.load(baseline_path) if use_baseline else []
+    kept, baselined, stale = baseline_mod.apply(raw, entries, sources)
+    return RunResult(findings=kept, baselined=baselined,
+                     suppressed=suppressed, stale_baseline=stale,
+                     n_files=len(files))
+
+
+def find_root(start: Path | None = None) -> Path:
+    """Nearest ancestor containing ROADMAP.md or .git (repo root)."""
+    p = (start or Path(__file__)).resolve()
+    for cand in [p] + list(p.parents):
+        if (cand / "ROADMAP.md").exists() or (cand / ".git").exists():
+            return cand
+    return Path.cwd()
+
+
+def format_text(result: RunResult, verbose: bool = False) -> str:
+    lines = []
+    for f in result.findings:
+        lines.append(f.render())
+    for e in result.stale_baseline:
+        lines.append(f"{e['path']}: stale baseline entry for {e['rule']} "
+                     f"(content no longer found: {e['content']!r}) — "
+                     "remove it from analysis/baseline.json")
+    status = "clean" if result.ok else f"{len(result.findings)} finding(s)"
+    lines.append(f"reprolint: {result.n_files} files, {status}, "
+                 f"{len(result.baselined)} baselined, "
+                 f"{len(result.suppressed)} suppressed")
+    if verbose and result.baselined:
+        lines.append("baselined:")
+        lines.extend(f"  {f.location()}: {f.rule}" for f in result.baselined)
+    return "\n".join(lines)
+
+
+def format_json(result: RunResult) -> str:
+    return json.dumps({
+        "ok": result.ok,
+        "n_files": result.n_files,
+        "findings": [f.to_json() for f in result.findings],
+        "baselined": [f.to_json() for f in result.baselined],
+        "suppressed": [f.to_json() for f in result.suppressed],
+        "stale_baseline": result.stale_baseline,
+    }, indent=2)

@@ -14,7 +14,6 @@ jitted matmul chain; in the simulator it runs on the CPU device.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

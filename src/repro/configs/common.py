@@ -13,8 +13,6 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["ShapeDef", "ArchSpec", "CellSpec", "LM_SHAPES", "GNN_SHAPES",

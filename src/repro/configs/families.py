@@ -8,7 +8,6 @@ together with abstract inputs and PartitionSpecs for the production mesh.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ of the engine (host-side orchestration stays on CPU by design).
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

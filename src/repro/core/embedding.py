@@ -179,7 +179,6 @@ def train_dominance_gnn(graph: LabeledGraph, cfg: gnn_lib.GNNConfig,
 
     loss_fn = lambda p: _pruning_loss(p, cfg, labels, degrees, src, dst,
                                       paths, na, nb)
-    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
     opt = adam_init(params)
 
     @jax.jit

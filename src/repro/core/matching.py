@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Iterable
+from typing import Any
 
 import numpy as np
 

@@ -272,6 +272,28 @@ def plan_probe(assembled: AssembledPlanes,
                    + npr.nbytes + lt.nbytes))
 
 
+def pack_mask_bits(masks: list, n_bits: int) -> np.ndarray:
+    """Pack per-(query, vertex) bool candidate masks into the shared
+    uint32 bit operand of `megabatch_leaf_probe`.
+
+    The row count tracks the batch's total query-vertex count, which
+    varies with every batch composition — rows are therefore padded to
+    MASK_ROW_BUCKET so the fused launch's compiled shape is reused
+    across batch mixes (pad rows are all-zero bits and never referenced
+    by any mask_rows index).  Width is ``n_bits`` packed to whole
+    32-bit words; the uint32 view is the wire dtype KERNEL_CONTRACTS
+    declares for the in-kernel mask gather.
+    """
+    from repro.kernels.dominance.ops import MASK_ROW_BUCKET, bucket
+
+    w = -(-n_bits // 32)
+    r_b = bucket(max(len(masks), 1), MASK_ROW_BUCKET)
+    by = np.packbits(np.stack(masks), axis=1, bitorder="little")
+    words = np.zeros((r_b, w * 4), np.uint8)
+    words[:by.shape[0], :by.shape[1]] = by
+    return words.view(np.uint32)
+
+
 # --------------------------------------------------------------------------- #
 # megabatch leaf assemblies (multi-query fused workload execution, PR 4)
 # --------------------------------------------------------------------------- #

@@ -56,7 +56,7 @@ from repro.core.matching import (MatchStats, ShardIndex, backtrack_join,
                                  _reverse_embedding, _scatter_hits)
 from repro.core.paths import (PathTable, enumerate_paths, path_row_keys,
                               paths_of_query)
-from repro.core.probeplane import ClusterPlanes
+from repro.core.probeplane import ClusterPlanes, pack_mask_bits
 from repro.core.pescore import (PEScoreModel, aggregate_global_features,
                                 path_feature_vector, shard_features)
 from repro.core.plan import (degree_based_plan, random_plan,
@@ -191,6 +191,7 @@ class DistributedGNNPE:
         build a from-scratch engine on the live engine's updated graph
         that is bit-comparable index for index."""
         self = object.__new__(cls)
+        # reprolint: disable=RPR004 -- build_s is a wall diagnostic
         t_build = time.perf_counter()
         rng = np.random.default_rng(seed)
         self.graph = graph
@@ -326,6 +327,7 @@ class DistributedGNNPE:
             "train_alloc": np.bincount(
                 list(train_alloc.values()),
                 minlength=n_machines).tolist(),
+            # reprolint: disable=RPR004 -- build_s is a wall diagnostic
             "build_s": round(time.perf_counter() - t_build, 2),
         }
         return self
@@ -601,9 +603,11 @@ class DistributedGNNPE:
         result vanished between dispatch and consume re-enters here, on
         the already-bumped qclock and already-missed cache access.
         """
+        # reprolint: disable=RPR004 -- plan_ms is a wall diagnostic
         t_plan = time.perf_counter()
         tables, q_embs, order = self._plan_artifacts(query, key, plan_mode,
                                                      tel)
+        # reprolint: disable=RPR004 -- plan_ms is a wall diagnostic
         plan_ms = (time.perf_counter() - t_plan) * 1e3
 
         n_d = self.graph.n_vertices
@@ -678,8 +682,10 @@ class DistributedGNNPE:
             else:
                 probe_ms, verts_of = {}, {}
                 for sid, shard in probes:
+                    # reprolint: disable=RPR004 -- probe_ms wall diag
                     t0 = time.perf_counter()
                     verts_of[sid], _ = path_candidates(shard.index, qe, l)
+                    # reprolint: disable=RPR004 -- probe_ms wall diag
                     probe_ms[sid] = (time.perf_counter() - t0) * 1e3
                     tel.probe_launches += 1
             for sid, shard in probes:
@@ -795,8 +801,10 @@ class DistributedGNNPE:
         dead).  With no live machine at all there is nowhere to cache:
         home is None and admission is skipped.
         """
+        # reprolint: disable=RPR004 -- join_ms is a wall diagnostic
         t_join = time.perf_counter()
         matches = backtrack_join(query, self.graph, masks) if alive else []
+        # reprolint: disable=RPR004 -- join_ms is a wall diagnostic
         join_ms = (time.perf_counter() - t_join) * 1e3
 
         tel.n_matches = len(matches)
@@ -969,9 +977,11 @@ class DistributedGNNPE:
                                   peeked=True, order=[], alive=False,
                                   masks0=[], plan_ms=0.0, qrow_of={}))
                 continue
+            # reprolint: disable=RPR004 -- plan_ms is a wall diagnostic
             t0 = time.perf_counter()
             tables, q_embs, order = self._plan_artifacts(query, key,
                                                          plan_mode, tel)
+            # reprolint: disable=RPR004 -- plan_ms is a wall diagnostic
             plan_ms = (time.perf_counter() - t0) * 1e3
             masks0 = self._initial_masks(query)
             items.append(dict(query=query, key=key, tel=tel, tables=tables,
@@ -994,18 +1004,15 @@ class DistributedGNNPE:
             assembly = self.planes.mega_assemble(entries, gverts_fn)
             # the shared packed-mask operand: one bit row per (query,
             # query-vertex); reversed-orientation rows index the same
-            # bits with their positions reversed
-            n_d = self.graph.n_vertices
-            w = -(-n_d // 32)
+            # bits with their positions reversed.  Rows are padded to
+            # MASK_ROW_BUCKET inside pack_mask_bits — the raw total
+            # vertex count varies per batch mix and would retrace the
+            # fused launch on nearly every call.
             bases, all_masks = [], []
             for it in items:
                 bases.append(len(all_masks))
                 all_masks.extend(it["masks0"])
-            arr = np.stack(all_masks)
-            by = np.packbits(arr, axis=1, bitorder="little")
-            words = np.zeros((arr.shape[0], w * 4), np.uint8)
-            words[:, :by.shape[1]] = by
-            mask_bits = words.view(np.uint32)
+            mask_bits = pack_mask_bits(all_masks, self.graph.n_vertices)
             qmat: dict[int, list] = defaultdict(list)
             mask_rows: dict[int, list] = defaultdict(list)
             for qi, it in enumerate(items):

@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dominance.kernel import (dominance_pallas,
+from repro.kernels.dominance.kernel import (BLOCK_N, BLOCK_Q, BLOCK_S_N,
+                                            BLOCK_S_Q, dominance_pallas,
                                             dominance_pallas_3d)
 from repro.kernels.dominance.ref import (dominance_mask_3d_ref,
                                          dominance_mask_ref,
@@ -51,6 +52,12 @@ LANE_BUCKET = 64
 # block.  Small batches (B=1..2) keep the fine bucket so their counts
 # readback stays below the serial plane path's.
 MEGA_QUERY_BUCKET = 64
+# the shared packed-mask operand has one bit row per (query, query
+# vertex), so its row count varies with every batch's query mix; pad
+# rows are all-zero bits and never referenced by any mask_rows index
+# (at B=16 with <=8-vertex queries this is <=128 rows, so 32-row steps
+# bound the operand to a handful of compiled shapes)
+MASK_ROW_BUCKET = 32
 
 
 def mega_query_bucket(n_rows: int) -> int:
@@ -271,3 +278,94 @@ def gather_pack_lanes_jit(finals: tuple, lane_s: tuple, lane_q: tuple
         by = rows.reshape(k_b, n_max // 8, 8).astype(jnp.uint8)
         packed.append((by * weights).sum(-1).astype(jnp.uint8))
     return jnp.concatenate(packed, axis=0)
+
+
+# --------------------------------------------------------------------------- #
+# declared kernel contracts (reprolint RPR001/RPR006 + padding-edge tests)
+# --------------------------------------------------------------------------- #
+
+# One entry per jit-boundary callee, keyed by the terminal call name.
+# The table is read two ways:
+#   * at runtime by tests/test_kernels.py, which drives the padding-edge
+#     assertions (pad values really are inert) from these declarations;
+#   * by `python -m repro.analysis` (reprolint), which PARSES it from
+#     the AST — so every value must stay a literal or a module-constant
+#     Name, never a computed expression.
+# Fields:
+#   caller_bucketed  operand name -> positional index; the CALLER must
+#                    round these operands' data-cardinality dims to a
+#                    bucket (RPR001).  Callees absent from the table
+#                    (e.g. `mega_dispatch`'s qmat/mask_rows, or the
+#                    internally padded eager ref paths) bucket for you.
+#   blocks           operand -> kernel block size its bucket must divide
+#                    into (RPR006 checks bucket % block == 0).
+#   buckets          operand -> the bucket constant for that axis.
+#   pads             operand -> required pad fill: "+inf" pad rows match
+#                    nothing (queries), "-inf" pad rows dominate nothing
+#                    (boxes/slabs/leaves) (RPR006 + padding-edge tests).
+#   dtypes           operand -> required wire dtype; "uint32" marks the
+#                    packed-bit mask operand (RPR006).
+#   packed_multiple  operand -> axis divisibility needed by bit packing.
+KERNEL_CONTRACTS = {
+    # 2-D kernel: pads to its own blocks internally (pl.cdiv), so no
+    # bucket % block relation is declared — bucketing the inputs still
+    # bounds the jit retraces, hence caller_bucketed.
+    "dominance_pallas": dict(
+        caller_bucketed=dict(queries=0, boxes=1),
+        blocks=dict(queries=BLOCK_Q, boxes=BLOCK_N),
+        pads=dict(queries="+inf", boxes="-inf"),
+        dtypes=dict(out="int8")),
+    "dominance_pallas_3d": dict(
+        caller_bucketed=dict(queries=0, boxes=1),
+        blocks=dict(queries=BLOCK_S_Q, boxes=BLOCK_S_N),
+        buckets=dict(queries=QUERY_BUCKET, boxes=ROW_BUCKET),
+        pads=dict(queries="+inf", boxes="-inf"),
+        dtypes=dict(out="int8")),
+    "batched_dominance_mask": dict(
+        caller_bucketed=dict(queries=0, boxes=1, counts=2),
+        blocks=dict(queries=BLOCK_S_Q, boxes=BLOCK_S_N),
+        buckets=dict(queries=QUERY_BUCKET, boxes=ROW_BUCKET),
+        pads=dict(queries="+inf", boxes="-inf"),
+        dtypes=dict(out="int8")),
+    "fused_plan_descent": dict(
+        caller_bucketed=dict(queries=0, slab=1, counts=2, parent=3,
+                             is_root=4, internal=5, leaf=6, pair_valid=7),
+        blocks=dict(queries=BLOCK_S_Q, slab=BLOCK_S_N),
+        buckets=dict(queries=QUERY_BUCKET, slab=ROW_BUCKET),
+        pads=dict(queries="+inf", slab="-inf"),
+        packed_multiple=dict(slab=8)),
+    "fused_plan_descent_jit": dict(
+        caller_bucketed=dict(queries=0, slab=1, counts=2, parent=3,
+                             is_root=4, internal=5, leaf=6, pair_valid=7),
+        blocks=dict(queries=BLOCK_S_Q, slab=BLOCK_S_N),
+        buckets=dict(queries=QUERY_BUCKET, slab=ROW_BUCKET),
+        pads=dict(queries="+inf", slab="-inf"),
+        packed_multiple=dict(slab=8)),
+    "megabatch_leaf_probe": dict(
+        caller_bucketed=dict(blocks=0, mask_bits=1),
+        blocks=dict(queries=BLOCK_S_Q, leaves=BLOCK_S_N),
+        buckets=dict(queries=MEGA_QUERY_BUCKET, leaves=ROW_BUCKET,
+                     mask_bits=MASK_ROW_BUCKET),
+        pads=dict(queries="+inf", leaves="-inf"),
+        dtypes=dict(mask_bits="uint32"),
+        packed_multiple=dict(leaves=8)),
+    "megabatch_leaf_probe_jit": dict(
+        caller_bucketed=dict(blocks=0, mask_bits=1),
+        blocks=dict(queries=BLOCK_S_Q, leaves=BLOCK_S_N),
+        buckets=dict(queries=MEGA_QUERY_BUCKET, leaves=ROW_BUCKET,
+                     mask_bits=MASK_ROW_BUCKET),
+        pads=dict(queries="+inf", leaves="-inf"),
+        dtypes=dict(mask_bits="uint32"),
+        packed_multiple=dict(leaves=8)),
+    # mega_dispatch buckets qmat/mask_rows itself (mega_query_bucket)
+    # but forwards the shared mask operand untouched — the caller owns
+    # its row bucket (regression-tested in tests/test_megabatch.py).
+    "mega_dispatch": dict(
+        caller_bucketed=dict(mask_bits=3),
+        buckets=dict(mask_bits=MASK_ROW_BUCKET),
+        dtypes=dict(mask_bits="uint32")),
+    "gather_pack_lanes_jit": dict(
+        caller_bucketed=dict(lane_s=1, lane_q=2),
+        buckets=dict(lane_s=LANE_BUCKET, lane_q=LANE_BUCKET),
+        packed_multiple=dict(lane_s=8, lane_q=8)),
+}

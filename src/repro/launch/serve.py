@@ -26,7 +26,7 @@ def main() -> None:
     if spec.family != "lm":
         raise SystemExit("serve driver is for LM archs")
     from repro.models.transformer import (decode_step, init_cache,
-                                          init_params, prefill)
+                                          init_params)
 
     cfg = spec.make_smoke_config()
     key = jax.random.PRNGKey(0)

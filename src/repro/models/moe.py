@@ -219,8 +219,6 @@ def _moe_ffn_shardmap(x: jnp.ndarray, params: dict[str, Any], cfg: MoEConfig,
     """
     from jax.sharding import PartitionSpec as P
 
-    from repro.dist.sharding import spec_for
-
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
     n_model = mesh.shape["model"]

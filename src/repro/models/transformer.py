@@ -394,7 +394,6 @@ def init_cache(cfg: LMConfig, batch: int, t_max: int) -> dict[str, Any]:
 
 def _decode_layer_gqa(x, lp, kc, vc, slot_pos, pos, slot, cfg):
     b = x.shape[0]
-    t_max = kc.shape[1]
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     ppos = jnp.full((b, 1), pos, jnp.int32)
     q = (h @ lp["attn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
@@ -473,7 +472,6 @@ def decode_step(params: dict[str, Any], cfg: LMConfig, cache: dict[str, Any],
     Returns (logits [B, 1, V], updated cache).  Ring-buffer slot = pos % t_max
     handles both full caches (t_max = seq_len) and SWA-bounded caches.
     """
-    b = tokens.shape[0]
     x = params["embed"][tokens].astype(cfg.dtype)
     first_dense = cfg.moe.first_dense if cfg.moe is not None else cfg.n_layers
     n_dense = min(first_dense, cfg.n_layers)

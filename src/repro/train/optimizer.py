@@ -10,7 +10,6 @@ dequantized on the fly inside the update.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple
 
 import jax

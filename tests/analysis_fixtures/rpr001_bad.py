@@ -1,0 +1,9 @@
+"""BAD: mask rows track the raw batch size -> retrace per batch mix."""
+import numpy as np
+
+from repro.kernels.dominance.ops import megabatch_leaf_probe_jit
+
+
+def launch(blocks, masks):
+    mask_bits = np.zeros((len(masks), 8), np.uint32)
+    return megabatch_leaf_probe_jit(blocks, mask_bits)

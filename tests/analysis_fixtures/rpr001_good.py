@@ -1,0 +1,11 @@
+"""GOOD: rows rounded to MASK_ROW_BUCKET before the jit boundary."""
+import numpy as np
+
+from repro.kernels.dominance.ops import (MASK_ROW_BUCKET, bucket,
+                                         megabatch_leaf_probe_jit)
+
+
+def launch(blocks, masks):
+    rows = bucket(len(masks), MASK_ROW_BUCKET)
+    mask_bits = np.zeros((rows, 8), np.uint32)
+    return megabatch_leaf_probe_jit(blocks, mask_bits)

@@ -1,0 +1,7 @@
+"""BAD: result-cache access keyed by raw query identity (no epoch)."""
+
+
+class Engine:
+    def lookup(self, query):
+        raw = (query.n_vertices, query.signature())
+        return self._result_cache.access(raw)

@@ -1,0 +1,7 @@
+"""GOOD: the key flows from _query_key, which embeds _data_epoch."""
+
+
+class Engine:
+    def lookup(self, query):
+        key = self._query_key(query)
+        return self._result_cache.access(key)

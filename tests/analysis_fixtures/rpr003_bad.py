@@ -1,0 +1,7 @@
+"""BAD: decodes a byte image that never went through crc_transfer."""
+
+
+def install_shard(engine, sock):
+    blob = sock.recv_bytes()
+    shard = Shard.deserialize(blob)
+    engine.adopt(shard)

@@ -1,0 +1,7 @@
+"""GOOD: the byte image crosses the link via crc_transfer."""
+
+
+def install_shard(engine, link, image):
+    tr = crc_transfer(link, image)
+    shard = Shard.deserialize(tr.received)
+    engine.adopt(shard)

@@ -1,0 +1,10 @@
+"""BAD: wall clock + global RNG feeding a rebalance decision."""
+import time
+
+import numpy as np
+
+
+def epoch_tick(engine):
+    engine.clock += time.time()
+    probe = np.random.choice(engine.shard_ids)
+    return probe

@@ -1,0 +1,15 @@
+"""GOOD: virtual clock, seeded RNG, and a suppressed wall diagnostic."""
+import time
+
+import numpy as np
+
+EPOCH_VIRTUAL_S = 0.05
+
+
+def epoch_tick(engine):
+    engine.clock += EPOCH_VIRTUAL_S
+    rng = np.random.default_rng(engine.seed)
+    probe = rng.choice(engine.shard_ids)
+    # reprolint: disable=RPR004 -- wall diagnostic, never asserted
+    engine.telemetry["tick_walltime"] = time.time()
+    return probe

@@ -1,0 +1,8 @@
+"""BAD: forces an in-flight device value inside the dispatch region."""
+
+
+class Planes:
+    def _mb_dispatch(self, batch):
+        finals = megabatch_leaf_probe_jit(batch.qmat, batch.mask_bits)
+        hits = int(finals[0])
+        self.inflight.append((batch, finals, hits))

@@ -1,0 +1,20 @@
+"""GOOD: bucket divides into blocks, -inf pad, uint32 mask words."""
+import numpy as np
+
+BLOCK_R = 128
+ROWS_BUCKET = 256
+
+KERNEL_CONTRACTS = {
+    "probe_fixture": dict(
+        caller_bucketed=dict(rows=0, mask_bits=1),
+        blocks=dict(rows=BLOCK_R),
+        buckets=dict(rows=ROWS_BUCKET),
+        pads=dict(rows="-inf"),
+        dtypes=dict(mask_bits="uint32")),
+}
+
+
+def launch():
+    rows = np.full((ROWS_BUCKET, 4), -np.inf)
+    mask_bits = np.zeros((ROWS_BUCKET, 4), np.uint32)
+    return probe_fixture(rows, mask_bits)

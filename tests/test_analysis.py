@@ -1,0 +1,162 @@
+"""reprolint self-tests.
+
+Three layers: (1) each rule fires on its bad fixture at the exact
+lines — and at nothing else — while the good twin scans silent;
+(2) the suppression and baseline mechanisms behave (inline disable
+silences, stale baseline entries fail); (3) the repo itself is clean:
+``src tests benchmarks`` produce zero non-baselined findings against
+the checked-in ``analysis/baseline.json``.  Layer (3) is the tier-1
+gate the CI ``reprolint`` job mirrors.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.context import FileContext
+from repro.analysis.registry import all_rules
+from repro.analysis.runner import RunResult, find_root, run_paths
+
+FIXTURES = Path(__file__).resolve().parent / "analysis_fixtures"
+ROOT = find_root()
+
+
+def _raw_hits(ctx):
+    hits = []
+    for rule in all_rules():
+        if not rule.applies_to(ctx.rel):
+            continue
+        hits.extend((f.rule, f.line) for f in rule.check(ctx))
+    return sorted(hits)
+
+
+def scan_fixture(fname, rel=None):
+    """All-rule scan of one fixture, honouring inline suppressions.
+
+    ``rel`` re-parents the parsed file to a synthetic repo path so
+    path-scoped rules (RPR002-4 guard src/repro/dist/) see it.
+    """
+    ctx = FileContext.parse(FIXTURES / fname, ROOT)
+    assert ctx is not None, f"fixture {fname} failed to parse"
+    if rel is not None:
+        ctx = dataclasses.replace(ctx, rel=rel)
+    silenced = ctx.suppressed_lines()
+    return sorted(h for h in _raw_hits(ctx)
+                  if h[0] not in silenced.get(h[1], set()))
+
+
+# -- per-rule fixtures ----------------------------------------------------
+
+def test_rpr001_fires_on_unbucketed_boundary_operand():
+    assert scan_fixture("rpr001_bad.py") == [("RPR001", 8)]
+
+
+def test_rpr001_silent_when_rows_bucketed():
+    assert scan_fixture("rpr001_good.py") == []
+
+
+def test_rpr002_fires_on_epoch_unsafe_cache_key():
+    rel = "src/repro/dist/rpr002_bad.py"
+    assert scan_fixture("rpr002_bad.py", rel) == [("RPR002", 7)]
+
+
+def test_rpr002_silent_when_key_flows_from_query_key():
+    rel = "src/repro/dist/rpr002_good.py"
+    assert scan_fixture("rpr002_good.py", rel) == []
+
+
+def test_rpr003_fires_on_uncrcd_decode():
+    rel = "src/repro/dist/rpr003_bad.py"
+    assert scan_fixture("rpr003_bad.py", rel) == [("RPR003", 6)]
+
+
+def test_rpr003_silent_when_blob_is_crc_verified():
+    rel = "src/repro/dist/rpr003_good.py"
+    assert scan_fixture("rpr003_good.py", rel) == []
+
+
+def test_rpr004_fires_on_wall_clock_and_global_rng():
+    rel = "src/repro/dist/rpr004_bad.py"
+    assert scan_fixture("rpr004_bad.py", rel) == [("RPR004", 8),
+                                                  ("RPR004", 9)]
+
+
+def test_rpr004_silent_on_virtual_clock_and_seeded_rng():
+    rel = "src/repro/dist/rpr004_good.py"
+    assert scan_fixture("rpr004_good.py", rel) == []
+
+
+def test_rpr004_inline_suppression_absorbs_the_diagnostic():
+    # the good fixture DOES contain a wall-clock call — prove the rule
+    # sees it and the inline `# reprolint: disable` is what silences it
+    rel = "src/repro/dist/rpr004_good.py"
+    ctx = FileContext.parse(FIXTURES / "rpr004_good.py", ROOT)
+    ctx = dataclasses.replace(ctx, rel=rel)
+    assert ("RPR004", 14) in _raw_hits(ctx)
+    assert scan_fixture("rpr004_good.py", rel) == []
+
+
+def test_rpr005_fires_on_forced_device_value_in_dispatch():
+    assert scan_fixture("rpr005_bad.py") == [("RPR005", 7)]
+
+
+def test_rpr005_silent_when_forcing_moves_to_consume():
+    assert scan_fixture("rpr005_good.py") == []
+
+
+def test_rpr006_fires_on_contract_violations():
+    # line 7: declared bucket 192 not a multiple of block 128
+    # line 18: pad +inf where the table declares -inf
+    # line 20: mask operand built uint8, table declares uint32
+    assert scan_fixture("rpr006_bad.py") == [("RPR006", 7),
+                                             ("RPR006", 18),
+                                             ("RPR006", 20)]
+
+
+def test_rpr006_silent_on_conforming_declaration_and_call():
+    assert scan_fixture("rpr006_good.py") == []
+
+
+# -- baseline mechanism ---------------------------------------------------
+
+def test_stale_baseline_entry_fails_the_run():
+    entry = {"rule": "RPR004", "path": "src/nowhere.py",
+             "content": "t = time.time()", "reason": "gone"}
+    kept, baselined, stale = baseline_mod.apply([], [entry], {})
+    assert stale == [entry]
+    res = RunResult(findings=[], baselined=[], suppressed=[],
+                    stale_baseline=stale, n_files=0)
+    assert not res.ok
+
+
+def test_checked_in_baseline_entries_all_match():
+    res = run_paths(["src", "tests", "benchmarks"], root=ROOT)
+    assert not res.stale_baseline, (
+        "stale analysis/baseline.json entries: "
+        + json.dumps(res.stale_baseline, indent=2))
+
+
+# -- repo self-scan (the tier-1 gate) -------------------------------------
+
+def test_repo_is_clean():
+    res = run_paths(["src", "tests", "benchmarks"], root=ROOT)
+    rendered = "\n".join(f.render() for f in res.findings)
+    assert res.ok, f"reprolint findings:\n{rendered}"
+
+
+def test_cli_json_output():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         "--paths", "src/repro/analysis", "--no-baseline",
+         "--format", "json"],
+        capture_output=True, text=True, env=env, cwd=ROOT)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(proc.stdout)
+    assert data["ok"] is True
+    assert data["findings"] == []

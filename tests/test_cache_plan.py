@@ -9,7 +9,7 @@ from repro.cache.awresnet import AWResNet, initial_weights_from_warmup
 from repro.cache.features import FeatureTracker, dynamic_window
 from repro.cache.policy import (LFUCache, LRUCache, TwoLevelCache, ValueCache,
                                 dynamic_trigger, protected_degree_threshold)
-from repro.core.pescore import (GBDT, PEScoreModel, adaptive_tree_count,
+from repro.core.pescore import (PEScoreModel, adaptive_tree_count,
                                 fit_gbdt)
 
 

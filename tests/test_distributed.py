@@ -41,7 +41,6 @@ def test_shards_cover_all_paths(nws_small):
         el = s.graph.edge_list
         gu = s.global_ids[el[:, 0]]
         gv = s.global_ids[el[:, 1]]
-        canon = np.minimum(gu, gv)
         local_canon_is_owned = s.owned_mask[
             np.where(s.global_ids[el[:, 0]] <= s.global_ids[el[:, 1]],
                      el[:, 0], el[:, 1])]

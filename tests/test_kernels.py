@@ -7,9 +7,11 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.kernels.dominance import ops as dom_ops
 from repro.kernels.dominance.kernel import (dominance_pallas,
                                             dominance_pallas_3d)
-from repro.kernels.dominance.ops import batched_dominance_mask
+from repro.kernels.dominance.ops import (KERNEL_CONTRACTS,
+                                         batched_dominance_mask)
 from repro.kernels.dominance.ref import (dominance_mask_3d_ref,
                                          dominance_mask_ref)
 from repro.kernels.flash.kernel import flash_attention_pallas
@@ -133,6 +135,88 @@ def test_survivor_propagation_matches_chain_and(s, q, r, seed):
                                                 for c in chain)
                 assert anc[si, qi, ri] == all(ok[si, qi, c]
                                               for c in chain[1:])
+
+
+# --------------------------------------------------------------------------- #
+# declared kernel contracts: KERNEL_CONTRACTS as runtime assertions
+# (the same table reprolint's RPR001/RPR006 parse statically)
+# --------------------------------------------------------------------------- #
+_FILL = {"+inf": np.inf, "-inf": -np.inf}
+
+
+def test_contract_callees_exist():
+    """Every declared boundary resolves to a real callable, so the table
+    cannot silently rot as the API moves."""
+    for callee in KERNEL_CONTRACTS:
+        if callee == "mega_dispatch":
+            from repro.core.probeplane import ClusterPlanes
+            assert callable(ClusterPlanes.mega_dispatch)
+        else:
+            assert callable(getattr(dom_ops, callee)), callee
+
+
+def test_contract_declarations_consistent():
+    """Buckets are whole multiples of the kernel blocks they feed, and
+    packed axes keep whole bytes/words per row (mirrors reprolint's
+    RPR006 declaration check, but against the *imported* constants)."""
+    for callee, spec in KERNEL_CONTRACTS.items():
+        blocks, buckets = spec.get("blocks", {}), spec.get("buckets", {})
+        for op in set(blocks) & set(buckets):
+            assert buckets[op] % blocks[op] == 0, (callee, op)
+        for op, mult in spec.get("packed_multiple", {}).items():
+            if op in buckets:
+                assert buckets[op] % mult == 0, (callee, op)
+
+
+def test_declared_pads_are_inert_2d():
+    """dominance_pallas: +inf pad queries match nothing, -inf pad boxes
+    dominate nothing — the exact fills KERNEL_CONTRACTS declares."""
+    spec = KERNEL_CONTRACTS["dominance_pallas"]
+    rng = np.random.default_rng(11)
+    q, n = 5, 10
+    d = 6
+    qq = rng.uniform(0, 1, (q, d)).astype(np.float32)
+    bb = rng.uniform(0, 1, (n, d)).astype(np.float32)
+    qp = np.full((8, d), _FILL[spec["pads"]["queries"]], np.float32)
+    bp = np.full((16, d), _FILL[spec["pads"]["boxes"]], np.float32)
+    qp[:q], bp[:n] = qq, bb
+    got = np.asarray(dominance_pallas(jnp.asarray(qp), jnp.asarray(bp),
+                                      interpret=True))
+    want = np.asarray(dominance_mask_ref(jnp.asarray(qq),
+                                         jnp.asarray(bb)))
+    assert str(got.dtype) == spec["dtypes"]["out"]
+    np.testing.assert_array_equal(got[:q, :n], want)
+    assert got[q:, :].sum() == 0        # pad queries match nothing
+    assert got[:, n:].sum() == 0        # pad boxes dominate nothing
+
+
+def test_declared_pads_are_inert_3d():
+    """dominance_pallas_3d padded to the declared buckets: the valid
+    region is bit-identical to the unpadded oracle and every padded
+    row/column is inert."""
+    spec = KERNEL_CONTRACTS["dominance_pallas_3d"]
+    # *_BUCKET-named locals: these ARE the declared buckets (reprolint's
+    # RPR001 trusts the naming convention, as the engine code does)
+    Q_BUCKET = spec["buckets"]["queries"]
+    L_BUCKET = spec["buckets"]["boxes"]
+    rng = np.random.default_rng(23)
+    s = 2
+    q, l = 3, 5
+    d = 6
+    qq = rng.uniform(0, 1, (q, d)).astype(np.float32)
+    bb = rng.uniform(0, 1, (s, l, d)).astype(np.float32)
+    qp = np.full((Q_BUCKET, d), _FILL[spec["pads"]["queries"]], np.float32)
+    bp = np.full((s, L_BUCKET, d), _FILL[spec["pads"]["boxes"]], np.float32)
+    qp[:q], bp[:, :l] = qq, bb
+    got = np.asarray(dominance_pallas_3d(jnp.asarray(qp),
+                                         jnp.asarray(bp),
+                                         interpret=True))
+    want = np.asarray(dominance_mask_3d_ref(jnp.asarray(qq),
+                                            jnp.asarray(bb)))
+    assert str(got.dtype) == spec["dtypes"]["out"]
+    np.testing.assert_array_equal(got[:, :q, :l], want)
+    assert got[:, q:, :].sum() == 0    # +inf pad queries match nothing
+    assert got[:, :, l:].sum() == 0    # -inf pad boxes dominate nothing
 
 
 # --------------------------------------------------------------------------- #

@@ -1,11 +1,9 @@
 """Launch-layer units: mesh factory, HLO collective parser, rules."""
 
 import jax
-import pytest
 
-from repro.dist.sharding import (GNN_RULES, LM_RULES, clear_rules,
-                                 current_mesh, rules_ctx, set_mesh,
-                                 set_rules, spec_for)
+from repro.dist.sharding import (clear_rules, current_mesh, rules_ctx,
+                                 set_mesh, spec_for)
 from repro.launch.dryrun import _rules_for, collective_bytes
 from repro.launch.mesh import HW, dp_axes_of
 

@@ -28,9 +28,9 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.artree import build_artree, query_dominating
-from repro.core.probeplane import ClusterPlanes, build_tree_plane, plan_probe
-from repro.kernels.dominance.ops import (LANE_BUCKET, bucket,
-                                         readback_id_dtype)
+from repro.core.probeplane import (ClusterPlanes, build_tree_plane,
+                                   pack_mask_bits)
+from repro.kernels.dominance.ops import readback_id_dtype
 
 _ENGINE = None
 
@@ -167,12 +167,9 @@ def test_mega_probe_matches_host_traversal(seed, s):
                 mr[r, p] = len(dense)
                 dense.append(rng.random(n_d) < 0.6)
         qmat[l], mask_rows[l] = rows, mr
-    w = bucket(n_d, 32) // 32
-    by = np.packbits(np.stack(dense), axis=1, bitorder="little")
-    words = np.zeros((len(dense), w * 4), np.uint8)
-    words[:, :by.shape[1]] = by
     res = planes.mega_readback(planes.mega_dispatch(
-        asm, qmat, mask_rows, words.view(np.uint32), use_pallas=False))
+        asm, qmat, mask_rows, pack_mask_bits(dense, n_d),
+        use_pallas=False))
     for (sid, l), tree in trees.items():
         for r in range(2):
             hits, _ = query_dominating(tree, qmat[l][r])
@@ -297,6 +294,27 @@ def test_megabatch_retrace_bounded_across_batch_mixes():
         eng.query_batch(qs[:b])
     grew = megabatch_leaf_probe_jit._cache_size() - before
     assert grew <= 4, f"{grew} new compiles for 6 batch mixes"
+
+
+def test_mask_operand_rows_bucketed_no_retrace():
+    """The shared packed-mask operand has one bit row per (query,
+    query-vertex), so its row count tracks the batch's total vertex
+    count.  MASK_ROW_BUCKET padding must make two batches that differ
+    ONLY in that total (same lengths, same lane buckets) reuse the
+    compiled fused launch instead of retracing it."""
+    from repro.data.synthetic import make_workload
+    from repro.kernels.dominance.ops import megabatch_leaf_probe_jit
+    g, eng = _engine()
+    qs = make_workload(g, 12, seed=77, hot_fraction=0.0)
+    q = min(qs, key=lambda x: x.n_vertices)
+    eng.query_batch([q, q])                  # warm the compiled shape
+    before = megabatch_leaf_probe_jit._cache_size()
+    # one more copy of the SAME query: lengths and lane buckets are
+    # unchanged, only the mask operand's raw row count differs
+    eng.query_batch([q, q, q])
+    grew = megabatch_leaf_probe_jit._cache_size() - before
+    assert grew == 0, ("mask_bits row count retraced the fused launch "
+                       "(rows must pad to MASK_ROW_BUCKET)")
 
 
 def test_run_workload_batch_cache_update_mode_validation():

@@ -18,8 +18,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.artree import build_artree, query_dominating
-from repro.core.probeplane import (ClusterPlanes, build_tree_plane,
-                                   plan_probe)
+from repro.core.probeplane import ClusterPlanes, build_tree_plane
 from repro.kernels.dominance.ops import (DEPTH_BUCKET, QUERY_BUCKET,
                                          ROW_BUCKET, SHARD_BUCKET, bucket)
 
