@@ -1,0 +1,177 @@
+"""Chaos/replication benchmark: overhead of standing replicas + recovery.
+
+Two CI-gated measurements, emitted into a stable-schema BENCH_chaos.json:
+
+  * **replication overhead** — the same mixed workload (megabatch query
+    epochs + streaming updates, the only paths replica sync rides on)
+    on the 300-vertex e2e bench config with k=0 vs k=2 standby
+    replicas.  Fault-free overhead must stay <= 15% wall-clock, and the
+    two engines' match counts must agree exactly (replica sync consumes
+    no engine rng, so the runs are bit-comparable).
+  * **recovery time** — after a machine crash, time-to-failover (the
+    transaction that re-homes every victim shard) and
+    time-to-first-correct-answer, with the k=1 promotion path compared
+    against the k=0 legacy byte-image rebuild path.  Both must return
+    the exact pre-crash answer.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import merge_json
+from repro.core.graph import GraphDelta
+from repro.data.synthetic import make_workload, nws_graph
+from repro.dist.cluster import DistributedGNNPE
+
+CHAOS_SCHEMA_VERSION = 1
+MAX_OVERHEAD_FRAC = 0.15
+
+
+def _mk_delta(graph, seed: int) -> GraphDelta:
+    """Deterministic small update batch: 2 fresh edges + 1 deletion.
+    Engines with bit-identical graphs derive bit-identical deltas."""
+    rng = np.random.default_rng(seed * 31 + 17)
+    adds = []
+    while len(adds) < 2:
+        u, v = (int(x) for x in rng.integers(0, graph.n_vertices, size=2))
+        if u != v and not graph.has_edge(u, v) and (u, v) not in adds:
+            adds.append((u, v))
+    del_e = graph.edge_list[int(rng.integers(graph.n_edges))]
+    return GraphDelta.make(add_edges=adds, del_edges=[del_e])
+
+
+def _phase(eng, qs, batch: int, rep: int) -> int:
+    """One mixed epoch: megabatch workload, a streaming update, another
+    workload on the post-update graph.  Returns total matches."""
+    tels = eng.run_workload(qs, probe_mode="plane", batch_size=batch)
+    eng.apply_updates(_mk_delta(eng.graph, seed=rep), refit_pe=False)
+    tels += eng.run_workload(qs, probe_mode="plane", batch_size=batch)
+    return sum(t.n_matches for t in tels)
+
+
+def replication_overhead(n_vertices: int = 300, n_machines: int = 3,
+                         spm: int = 2, n_queries: int = 24,
+                         batch: int = 12, seed: int = 5, k: int = 2,
+                         gnn_train_steps: int = 8, reps: int = 2) -> dict:
+    """Fault-free wall-clock cost of k standby replicas vs none.
+
+    Replica sync piggybacks ONLY on update/migration byte movement, so
+    a query-heavy epoch should pay nearly nothing; the 15% gate keeps
+    replication honest as the delta protocol evolves.
+    """
+    g = nws_graph(n_vertices, 6, 0.1, 8, seed=seed)
+    base = DistributedGNNPE.build(g, n_machines, shards_per_machine=spm,
+                                  gnn_train_steps=gnn_train_steps,
+                                  seed=seed)
+    twin = DistributedGNNPE.build(g, n_machines, shards_per_machine=spm,
+                                  gnn_train_steps=gnn_train_steps,
+                                  seed=seed, assignment=base.assignment,
+                                  params=base.params, replication=k)
+    qs = make_workload(g, n_queries, seed=seed, hot_fraction=0.5)
+    # a throwaway engine walks the full phase trajectory first: every
+    # jit compile (including post-update plane shapes) lands in the
+    # process-wide cache, so neither timed engine pays compilation
+    warm = DistributedGNNPE.build(g, n_machines, shards_per_machine=spm,
+                                  gnn_train_steps=gnn_train_steps,
+                                  seed=seed, assignment=base.assignment,
+                                  params=base.params)
+    for rep in range(reps):
+        _phase(warm, qs, batch, rep)
+
+    t_base = t_twin = 0.0
+    m_base = m_twin = 0
+    for rep in range(reps):              # interleave to balance drift
+        t0 = time.perf_counter()
+        m_base += _phase(base, qs, batch, rep)
+        t_base += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        m_twin += _phase(twin, qs, batch, rep)
+        t_twin += time.perf_counter() - t0
+
+    assert m_base == m_twin, \
+        f"replication changed answers: {m_base} vs {m_twin}"
+    overhead = (t_twin - t_base) / max(t_base, 1e-9)
+    assert overhead <= MAX_OVERHEAD_FRAC, \
+        f"replication overhead {overhead:.1%} exceeds " \
+        f"{MAX_OVERHEAD_FRAC:.0%} (k={k})"
+    out = {
+        "config": {"n_vertices": n_vertices, "n_machines": n_machines,
+                   "shards_per_machine": spm, "n_queries": n_queries,
+                   "batch": batch, "k": k, "reps": reps},
+        "k0_wall_s": round(t_base, 3),
+        "k_wall_s": round(t_twin, 3),
+        "overhead_frac": round(overhead, 4),
+        "matches": m_base,
+        "replicas": twin.replicas.stats(),
+    }
+    merge_json("BENCH_chaos.json",
+               "replication_overhead", {"schema_version":
+                                        CHAOS_SCHEMA_VERSION, **out})
+    return out
+
+
+def recovery_time(n_vertices: int = 300, n_machines: int = 3,
+                  spm: int = 2, seed: int = 5,
+                  gnn_train_steps: int = 8) -> dict:
+    """Crash -> first bit-correct answer, promotion vs legacy rebuild.
+
+    ``failover_ms`` is the crash-consistent transaction re-homing every
+    victim shard; ``first_answer_ms`` the first post-crash query, which
+    must equal the pre-crash answer exactly on both paths.
+    """
+    g = nws_graph(n_vertices, 6, 0.1, 8, seed=seed)
+    base = DistributedGNNPE.build(g, n_machines, shards_per_machine=spm,
+                                  gnn_train_steps=gnn_train_steps,
+                                  seed=seed)
+    q = make_workload(g, 1, seed=seed + 1, hot_fraction=0.0)[0]
+    out: dict = {"schema_version": CHAOS_SCHEMA_VERSION}
+    for kk in (1, 0):
+        eng = DistributedGNNPE.build(g, n_machines,
+                                     shards_per_machine=spm,
+                                     gnn_train_steps=gnn_train_steps,
+                                     seed=seed,
+                                     assignment=base.assignment,
+                                     params=base.params, replication=kk)
+        want, _ = eng.query(q, probe_mode="host")
+        t0 = time.perf_counter()
+        victims = eng.handle_machine_failure(1)
+        t_fail = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        got, _ = eng.query(q, probe_mode="host")
+        t_first = time.perf_counter() - t0
+        assert got == want, f"k={kk}: post-crash answer diverged"
+        assert eng.consistency_audit() == []
+        out[f"k{kk}"] = {
+            "victim_shards": len(victims),
+            "failover_ms": round(t_fail * 1e3, 3),
+            "first_answer_ms": round(t_first * 1e3, 3),
+            "recovery_ms": round((t_fail + t_first) * 1e3, 3),
+            "promotions": eng.replicas.stats()["promotions"],
+        }
+    merge_json("BENCH_chaos.json", "recovery", out)
+    return out
+
+
+def run() -> list[tuple]:
+    over = replication_overhead()
+    rec = recovery_time()
+    return [
+        ("chaos/replication_overhead_frac",
+         over["overhead_frac"] * 1e6,
+         f"k={over['config']['k']} wall {over['k_wall_s']}s vs "
+         f"{over['k0_wall_s']}s"),
+        ("chaos/recovery_promotion", rec["k1"]["recovery_ms"] * 1e3,
+         f"failover {rec['k1']['failover_ms']}ms + first answer "
+         f"{rec['k1']['first_answer_ms']}ms"),
+        ("chaos/recovery_legacy", rec["k0"]["recovery_ms"] * 1e3,
+         f"failover {rec['k0']['failover_ms']}ms + first answer "
+         f"{rec['k0']['first_answer_ms']}ms"),
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

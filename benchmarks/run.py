@@ -20,11 +20,12 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="partition|migration|cache|plan|pruning|e2e")
+                    help="partition|migration|cache|plan|pruning|e2e|chaos")
     args = ap.parse_args()
 
-    from benchmarks import (bench_cache, bench_e2e, bench_migration,
-                            bench_partition, bench_plan, bench_pruning)
+    from benchmarks import (bench_cache, bench_chaos, bench_e2e,
+                            bench_migration, bench_partition, bench_plan,
+                            bench_pruning)
     from benchmarks.common import emit
 
     suites = {
@@ -34,6 +35,7 @@ def main() -> None:
         "plan": bench_plan.run,
         "pruning": bench_pruning.run,
         "e2e": bench_e2e.run,
+        "chaos": bench_chaos.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

@@ -4,6 +4,7 @@
 """
 
 from repro.data.synthetic import make_workload, nws_graph
+from repro.dist.chaos import CRASH, HOOK_QUERY, FaultPlan, FaultSpec
 from repro.dist.cluster import DistributedGNNPE
 from repro.train.elastic import WorkerFailover
 
@@ -36,6 +37,19 @@ def main() -> None:
     m, tel = engine.query(queries[0])
     print(f"post-failover query: {len(m)} matches "
           f"({tel.latency_ms:.1f} vms) — service continued")
+
+    # --- chaos: seeded faults, exact answers or typed failure --------- #
+    engine.enable_replication(1)         # standbys: failover = promotion
+    engine.set_fault_plan(FaultPlan(
+        [FaultSpec(kind=CRASH, hook=HOOK_QUERY, at=2, machine=0)], seed=0))
+    for _ in range(3):                   # machine 0 dies mid-stream
+        mm, _ = engine.query(queries[0])
+        assert len(mm) == len(m), "chaos changed an answer"
+    engine.set_fault_plan(None)
+    assert engine.consistency_audit() == []
+    print(f"chaos: crashed machine 0 mid-workload "
+          f"({engine.replicas.stats()['promotions']} shards promoted "
+          f"from replicas) — answers exact, state audit clean")
 
 
 if __name__ == "__main__":

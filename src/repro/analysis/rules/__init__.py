@@ -2,7 +2,8 @@
 
 from repro.analysis.rules import (rpr001_buckets, rpr002_epoch, rpr003_crc,
                                   rpr004_wallclock, rpr005_sync,
-                                  rpr006_contract)
+                                  rpr006_contract, rpr007_chaosrng)
 
 __all__ = ["rpr001_buckets", "rpr002_epoch", "rpr003_crc",
-           "rpr004_wallclock", "rpr005_sync", "rpr006_contract"]
+           "rpr004_wallclock", "rpr005_sync", "rpr006_contract",
+           "rpr007_chaosrng"]

@@ -1,0 +1,95 @@
+"""RPR007: chaos hook points must draw randomness ONLY from the plan rng.
+
+The chaos oracle's whole contract is that a run under a FaultPlan stays
+*bit-identical* to its fault-free twin (or fails typed).  That holds
+only if fault handling never consumes the ENGINE rng stream: the
+fault-free run draws nothing at a hook, so a chaos run drawing from
+``self._rng`` (or a freshly minted generator) there would desynchronize
+every later engine rng draw and silently break the comparison the whole
+test pyramid rests on.  Corruption byte positions, torn-image cut
+points and unpinned crash targets must all come from ``FaultPlan.rng``.
+
+Heuristic: inside any ``src/repro/dist/`` function that fires a hook
+(calls ``<plan>.fire(...)``), every random-drawing call must be rooted
+at ``<plan>.rng`` for one of the fired plans, and no new generator may
+be constructed (``default_rng`` anywhere in such a function is flagged,
+seeded or not).  Functions without a ``.fire`` call are untouched —
+the engine rng is exactly what ``crc_transfer``'s corruption simulation
+should use.  Nested defs are scanned independently (a ``.fire`` in a
+closure does not constrain its enclosing function).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astutil import dotted, iter_functions
+from repro.analysis.registry import Rule, register
+
+RNG_DRAWS = {"random", "integers", "choice", "uniform", "normal",
+             "standard_normal", "shuffle", "permutation", "exponential",
+             "bytes"}
+
+
+def _walk_own(func: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function body without descending into nested defs (those
+    are visited by their own iter_functions entry)."""
+    stack = list(ast.iter_child_nodes(func))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+@register
+class ChaosRngRule(Rule):
+    id = "RPR007"
+    name = "chaos-rng-isolation"
+    scope = ("src/repro/dist/*.py",)
+
+    def check(self, ctx):
+        for _qualname, func in iter_functions(ctx.tree):
+            roots = set()
+            for node in _walk_own(func):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "fire":
+                    r = dotted(node.func.value)
+                    if r is not None:
+                        roots.add(r)
+            if not roots:
+                continue
+            allowed = tuple(r + ".rng." for r in roots)
+            for node in _walk_own(func):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted(node.func)
+                if d is None:
+                    continue
+                parts = d.split(".")
+                t = parts[-1]
+                if t == "default_rng":
+                    yield self.finding(
+                        ctx, node,
+                        f"'{d}()' constructs a generator inside chaos "
+                        f"hook handler '{func.name}' — fault decisions "
+                        "must come from the threaded FaultPlan rng",
+                        hint=f"draw from {' or '.join(sorted(roots))}"
+                             ".rng instead")
+                    continue
+                if t not in RNG_DRAWS or len(parts) < 2:
+                    continue      # bare names are builtins (bytes(...))
+                if d.startswith(allowed):
+                    continue
+                yield self.finding(
+                    ctx, node,
+                    f"'{d}()' draws randomness in chaos hook handler "
+                    f"'{func.name}' from outside the FaultPlan rng — "
+                    "this desynchronizes the engine rng stream between "
+                    "chaos and fault-free runs, breaking bit-identity",
+                    hint=f"use {' or '.join(sorted(roots))}.rng for "
+                         "every fault decision")

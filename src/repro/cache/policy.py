@@ -269,6 +269,25 @@ class TwoLevelCache:
         t = self.total_accesses
         return self.serves / t if t else 0.0
 
+    def drop_slave(self, slave_id: int) -> int:
+        """Evict everything homed on one slave (the machine died).
+
+        Clears the dead slave's ValueCache and removes every master
+        memory-index entry pointing at it — entries that survive in the
+        master cache keep serving (the master node is alive), but no
+        lookup may ever route to the dead slave again.  Returns the
+        number of keys whose home was dropped.
+        """
+        vc = self.slaves[slave_id]
+        dropped = set(vc.store)
+        for k in list(vc.store):
+            vc._drop(k)
+        homed = [k for k, s in self.location.items() if s == slave_id]
+        for k in homed:
+            del self.location[k]
+        dropped.update(homed)
+        return len(dropped)
+
     def purge(self, predicate) -> int:
         """Drop every key matching ``predicate`` from all tiers (both
         cache levels + the master memory index).  Used by the engine to

@@ -4,7 +4,12 @@ Modules:
   partition   — METIS-role graph partitioner (min edge-cut + size balance).
   shard       — ultra-fine shards with halo context + CRC32'd byte images.
   loadbalance — multi-metric load fusion, sigma trigger, Algorithm-1 planner.
-  migration   — CRC-verified hot shard migration (non-interruptible queries).
+  migration   — CRC-verified hot shard migration with exponential backoff
+                and two-phase prepare/commit (non-interruptible queries).
+  chaos       — deterministic seeded fault schedules (FaultPlan), named
+                hook points, typed failures, chaos-oracle script runner.
+  replica     — k-replica standby placement with anti-affinity, CRC'd
+                full/delta sync, failover promotion, quorum audit.
   cluster     — the DistributedGNNPE engine tying everything together.
   sharding    — logical-axis -> mesh-axis rule registry for the JAX models.
 """

@@ -1,0 +1,338 @@
+"""Deterministic chaos harness: seeded fault schedules + typed failures.
+
+The paper's headline distributed guarantee — minimum edge cut + load
+balancing + **non-interruptible queries** — is only worth anything if it
+survives *arbitrary* interleavings of machine crashes, corrupted
+transfers, link timeouts and torn delta images.  This module is the
+injection half of that proof obligation:
+
+  * a :class:`FaultPlan` is a fully deterministic, seeded schedule of
+    :class:`FaultSpec` events, each anchored to a *named hook point*
+    (``HOOK_*`` below) and a hook-visit index.  The engine and the
+    migration link consult the plan at every hook; with no plan attached
+    every hook is a no-op, so the fault-free path pays nothing.
+  * the ONLY randomness a fault may consume is ``FaultPlan.rng`` — never
+    the engine rng threaded through ``crc_transfer`` — so a chaos run
+    and its fault-free twin draw *identical* engine rng streams and stay
+    bit-comparable (reprolint rule RPR007 enforces this statically).
+  * typed failures: :class:`TransferTimeoutError` (a transfer exhausted
+    its retry/backoff budget; the surrounding transaction must abort
+    fully-old) and :class:`ClusterUnavailableError` (quorum genuinely
+    lost: no live machine, or a shard's last copy died).  A wrong or
+    partial answer is never an acceptable outcome — the chaos oracle
+    (`run_script` + tests/test_chaos.py) asserts every query is
+    bit-identical to the fault-free run OR one of these errors is
+    raised.
+
+Hook-point map (where the engine/link fires each hook):
+
+  ==========================  =============================================
+  hook                        fired at
+  ==========================  =============================================
+  HOOK_QUERY                  start of every ``DistributedGNNPE.query``
+  HOOK_BATCH                  between megabatch dispatch and consume
+  HOOK_UPDATE_STAGE           before each staged shard's delta transfer
+  HOOK_UPDATE_COMMIT          just before ``apply_updates`` commits
+  HOOK_REBALANCE              before a rebalance migration batch executes
+  HOOK_MIGRATE_PREPARE        before each shard's prepare-phase transfer
+  HOOK_TRANSFER               every simulated link transfer attempt
+  ==========================  =============================================
+
+Engine hooks (``cluster.*``) accept CRASH events — the engine reacts by
+running crash-consistent failover.  Link hooks (``migration.*``) accept
+CORRUPT / TIMEOUT / SLOW / TORN events, applied to the in-flight bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["CRASH", "CORRUPT", "TIMEOUT", "SLOW", "TORN", "FAULT_KINDS",
+           "HOOK_QUERY", "HOOK_BATCH", "HOOK_UPDATE_STAGE",
+           "HOOK_UPDATE_COMMIT", "HOOK_REBALANCE", "HOOK_MIGRATE_PREPARE",
+           "HOOK_TRANSFER", "ENGINE_HOOKS", "LINK_HOOKS", "ALL_HOOKS",
+           "ClusterUnavailableError", "TransferTimeoutError",
+           "FaultSpec", "FaultPlan", "random_fault_plan",
+           "default_script", "run_script", "script_queries"]
+
+# ---------------------------------------------------------------------- #
+# fault taxonomy
+# ---------------------------------------------------------------------- #
+CRASH = "crash"        # a machine dies (engine hooks only)
+CORRUPT = "corrupt"    # one in-flight byte flipped (CRC catches it)
+TIMEOUT = "timeout"    # the transfer attempt is lost entirely
+SLOW = "slow"          # the link runs `factor` x slower for the attempt
+TORN = "torn"          # the image arrives truncated (CRC catches it)
+FAULT_KINDS = (CRASH, CORRUPT, TIMEOUT, SLOW, TORN)
+
+# named hook points (see the module docstring's map)
+HOOK_QUERY = "cluster.query"
+HOOK_BATCH = "cluster.megabatch"
+HOOK_UPDATE_STAGE = "cluster.updates.stage"
+HOOK_UPDATE_COMMIT = "cluster.updates.commit"
+HOOK_REBALANCE = "cluster.rebalance"
+HOOK_MIGRATE_PREPARE = "migration.prepare"
+HOOK_TRANSFER = "migration.transfer"
+
+ENGINE_HOOKS = (HOOK_QUERY, HOOK_BATCH, HOOK_UPDATE_STAGE,
+                HOOK_UPDATE_COMMIT, HOOK_REBALANCE)
+LINK_HOOKS = (HOOK_MIGRATE_PREPARE, HOOK_TRANSFER)
+ALL_HOOKS = ENGINE_HOOKS + LINK_HOOKS
+
+
+class ClusterUnavailableError(RuntimeError):
+    """Quorum genuinely lost: no live machine remains, or some shard's
+    last copy (primary + every replica) is on dead machines.  The ONLY
+    acceptable alternative to a bit-identical answer — never a wrong or
+    partial result.  ``reason`` is machine-checkable for the oracle."""
+
+    def __init__(self, message: str, reason: str = "") -> None:
+        super().__init__(message)
+        self.reason = reason
+
+
+class TransferTimeoutError(RuntimeError):
+    """A link transfer exhausted its retry/backoff budget.  The
+    transaction that issued the transfer must abort fully-old (nothing
+    installed, no routing/epoch/cache mutation); callers may retry the
+    whole operation."""
+
+    def __init__(self, message: str, virtual_ms: float = 0.0,
+                 attempts: int = 0) -> None:
+        super().__init__(message)
+        self.virtual_ms = virtual_ms
+        self.attempts = attempts
+
+
+# ---------------------------------------------------------------------- #
+# fault schedule
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault.
+
+    Fires on hook visits ``at .. at+times-1`` (1-based, counted per hook
+    name over the plan's lifetime).  ``machine`` targets a CRASH (None =
+    the plan rng picks a live machine at fire time); ``factor`` scales a
+    SLOW attempt's virtual transfer time.
+    """
+
+    kind: str
+    hook: str
+    at: int = 1
+    times: int = 1
+    machine: int | None = None
+    factor: float = 4.0
+
+    def __post_init__(self) -> None:
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.hook not in ALL_HOOKS:
+            raise ValueError(f"unknown hook {self.hook!r}")
+        if self.kind == CRASH and self.hook not in ENGINE_HOOKS:
+            raise ValueError("CRASH faults fire at engine hooks only")
+        if self.kind != CRASH and self.hook not in LINK_HOOKS:
+            raise ValueError(f"{self.kind} faults fire at link hooks only")
+        if self.at < 1 or self.times < 1:
+            raise ValueError("at/times are 1-based positive counts")
+
+
+class FaultPlan:
+    """A deterministic seeded fault schedule.
+
+    ``rng`` is the one and only randomness source chaos handling may
+    draw from (RPR007): corruption byte positions, torn-image cut
+    points, and unpinned crash targets all come from here, so the
+    engine rng stream stays identical to the fault-free run's.
+    """
+
+    def __init__(self, faults: "tuple | list" = (), seed: int = 0) -> None:
+        self.faults = tuple(faults)
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self._visits: dict[str, int] = {}
+        self.fired: list[tuple[str, int, FaultSpec]] = []
+
+    def visits(self, hook: str) -> int:
+        return self._visits.get(hook, 0)
+
+    def fire(self, hook: str) -> list[FaultSpec]:
+        """Advance the hook's visit counter and return the faults due."""
+        n = self._visits.get(hook, 0) + 1
+        self._visits[hook] = n
+        due = [f for f in self.faults
+               if f.hook == hook and f.at <= n < f.at + f.times]
+        self.fired.extend((hook, n, f) for f in due)
+        return due
+
+    def replay(self) -> "FaultPlan":
+        """A fresh plan with the same schedule and rng seed (visit
+        counters and the rng stream rewound) — for re-running the same
+        chaos schedule against another engine."""
+        return FaultPlan(self.faults, seed=self.seed)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"FaultPlan(seed={self.seed}, faults={list(self.faults)})"
+
+
+def random_fault_plan(seed: int, n_faults: int = 4, n_machines: int = 3,
+                      max_crashes: int | None = None,
+                      horizon: int = 12) -> FaultPlan:
+    """A seeded random schedule over every fault kind and hook.
+
+    ``max_crashes`` bounds CRASH events (default ``n_machines - 1`` so
+    the cluster stays available; pass ``n_machines`` or more to exercise
+    the genuine-quorum-loss path).  ``horizon`` bounds the hook-visit
+    indices faults anchor to.  Same seed -> same schedule, always.
+    """
+    rng = np.random.default_rng(seed)
+    if max_crashes is None:
+        max_crashes = max(n_machines - 1, 0)
+    link_kinds = (CORRUPT, TIMEOUT, SLOW, TORN)
+    faults: list[FaultSpec] = []
+    crashes = 0
+    for _ in range(n_faults):
+        roll = float(rng.random())
+        if roll < 0.4 and crashes < max_crashes:
+            crashes += 1
+            faults.append(FaultSpec(
+                kind=CRASH,
+                hook=ENGINE_HOOKS[int(rng.integers(len(ENGINE_HOOKS)))],
+                at=int(rng.integers(1, horizon + 1)),
+                machine=int(rng.integers(n_machines))))
+        else:
+            kind = link_kinds[int(rng.integers(len(link_kinds)))]
+            hook = (HOOK_TRANSFER if kind != CRASH else HOOK_TRANSFER)
+            faults.append(FaultSpec(
+                kind=kind, hook=hook,
+                at=int(rng.integers(1, 4 * horizon + 1)),
+                times=int(rng.integers(1, 3)),
+                factor=float(2.0 + 6.0 * rng.random())))
+    return FaultPlan(faults, seed=seed)
+
+
+# ---------------------------------------------------------------------- #
+# chaos oracle runner: deterministic op scripts
+# ---------------------------------------------------------------------- #
+def default_script(graph, seed: int, n_queries: int = 6,
+                   modes: tuple = ("host", "device", "plane"),
+                   with_batch: bool = True, with_update: bool = True,
+                   with_epoch: bool = True) -> list:
+    """A deterministic workload script for `run_script`.
+
+    Interleaves gauntlet-flavoured queries (shape queries where minable,
+    random-walk queries otherwise) with a streaming update, a megabatch
+    op and a rebalance epoch — the surfaces the fault schedule attacks.
+    Same (graph, seed) -> same script, so the fault-free reference and
+    every chaos run execute identical operations.
+    """
+    from repro.core.graph import GraphDelta
+    from repro.data.synthetic import make_workload, shape_query
+    rng = np.random.default_rng(seed * 977 + 11)
+    queries = list(make_workload(graph, n_queries, seed=seed * 31 + 7))
+    for shape in ("triangle_tail", "star"):
+        try:
+            queries.append(shape_query(graph, shape, "dense",
+                                       seed=seed % 5 + 1))
+        except ValueError:
+            pass  # shape absent from this topology: covered elsewhere
+    ops: list = []
+    qi = 0
+    for q in queries[:max(n_queries // 2, 2)]:
+        ops.append(("query", q, modes[qi % len(modes)]))
+        qi += 1
+    if with_update:
+        n = graph.n_vertices
+        adds = []
+        while len(adds) < 2:
+            u, v = (int(x) for x in rng.integers(0, n, size=2))
+            if u != v and not graph.has_edge(u, v):
+                adds.append((u, v))
+        del_e = graph.edge_list[int(rng.integers(graph.n_edges))]
+        ops.append(("update", GraphDelta.make(add_edges=adds,
+                                              del_edges=[del_e])))
+    for q in queries[max(n_queries // 2, 2):]:
+        ops.append(("query", q, modes[qi % len(modes)]))
+        qi += 1
+    if with_batch:
+        ops.append(("batch", queries[:3]))
+    if with_epoch:
+        ops.append(("epoch", queries[:4], "plane", 2))
+    return ops
+
+
+def script_queries(ops: list) -> int:
+    """Number of per-query answers `run_script` emits for a script."""
+    n = 0
+    for op in ops:
+        if op[0] == "query":
+            n += 1
+        elif op[0] in ("batch", "epoch"):
+            n += len(op[1])
+    return n
+
+
+def run_script(engine, ops: list, plan: "FaultPlan | None" = None,
+               max_op_retries: int = 4,
+               audit: bool = True) -> tuple[list, str]:
+    """Execute a deterministic op script, optionally under a FaultPlan.
+
+    Returns ``(answers, outcome)``:
+
+      * ``answers`` — one entry per query: the full match list for
+        ``query``/``batch`` ops, the deterministic ``n_matches`` counter
+        for ``epoch`` ops (``run_workload`` returns telemetry only).
+      * ``outcome`` — ``"completed"``, or ``"unavailable@<i>"`` when op
+        ``i`` raised :class:`ClusterUnavailableError` (the oracle then
+        checks the loss was genuine and the answer prefix bit-identical).
+
+    Transactions aborted by :class:`TransferTimeoutError` are retried up
+    to ``max_op_retries`` times — the abort left the engine fully-old,
+    so a retry is safe; one-shot faults won't re-fire.  With ``audit``
+    the engine's ``consistency_audit`` must be clean after every op
+    (zero torn state).
+    """
+    if plan is not None:
+        engine.set_fault_plan(plan)
+    answers: list = []
+    outcome = "completed"
+    try:
+        for i, op in enumerate(ops):
+            kind = op[0]
+            try:
+                if kind == "query":
+                    m, _ = engine.query(op[1], probe_mode=op[2])
+                    answers.append(list(m))
+                elif kind == "batch":
+                    for m, _ in engine.query_batch(list(op[1])):
+                        answers.append(list(m))
+                elif kind == "update":
+                    for _ in range(max_op_retries):
+                        try:
+                            engine.apply_updates(op[1], refit_pe=False)
+                            break
+                        except TransferTimeoutError:
+                            continue  # aborted fully-old: retry is safe
+                    else:
+                        raise TransferTimeoutError(
+                            f"op {i}: update kept timing out after "
+                            f"{max_op_retries} attempts")
+                elif kind == "epoch":
+                    tels = engine.run_workload(list(op[1]), rebalance=True,
+                                               probe_mode=op[2],
+                                               batch_size=op[3])
+                    answers.extend(int(t.n_matches) for t in tels)
+                else:
+                    raise ValueError(f"unknown op kind {kind!r}")
+            except ClusterUnavailableError:
+                outcome = f"unavailable@{i}"
+                break
+            if audit:
+                bad = engine.consistency_audit()
+                assert not bad, f"torn state after op {i}: {bad}"
+    finally:
+        if plan is not None:
+            engine.set_fault_plan(None)
+    return answers, outcome

@@ -62,8 +62,12 @@ from repro.core.pescore import (PEScoreModel, aggregate_global_features,
 from repro.core.plan import (degree_based_plan, random_plan,
                              rank_query_plan)
 from repro.dist import loadbalance as lb
+from repro.dist.chaos import (CRASH, HOOK_BATCH, HOOK_QUERY, HOOK_REBALANCE,
+                              HOOK_UPDATE_COMMIT, HOOK_UPDATE_STAGE,
+                              ClusterUnavailableError, TransferTimeoutError)
 from repro.dist.migration import (LINK_BYTES_PER_MS, crc_transfer,
                                   hot_migrate)
+from repro.dist.replica import ReplicaSet
 from repro.dist.partition import (Partition, edge_cut, metis_like_partition,
                                   size_balance)
 from repro.dist.shard import (Shard, apply_shard_delta, halo_region,
@@ -183,13 +187,19 @@ class DistributedGNNPE:
               device_probe: bool = False,
               probe_mode: str | None = None,
               assignment: np.ndarray | None = None,
-              params: dict | None = None) -> "DistributedGNNPE":
+              params: dict | None = None,
+              replication: int = 0) -> "DistributedGNNPE":
         """Offline build.  `assignment` / `params` inject a fixed
         partition assignment and pretrained GNN params instead of
         running the partitioner / trainer — the rebuild-equivalence
         oracle for streaming updates (`rebuild_reference`) uses them to
         build a from-scratch engine on the live engine's updated graph
-        that is bit-comparable index for index."""
+        that is bit-comparable index for index.
+
+        `replication=k` keeps k anti-affine standby replicas of every
+        shard (repro.dist.replica) — failover then promotes instead of
+        rebuilding.  The default 0 preserves the legacy byte-image
+        failover path and pays zero replication overhead."""
         self = object.__new__(cls)
         # reprolint: disable=RPR004 -- build_s is a wall diagnostic
         t_build = time.perf_counter()
@@ -201,7 +211,8 @@ class DistributedGNNPE:
                                shards_per_machine=shards_per_machine,
                                gnn_train_steps=gnn_train_steps, seed=seed,
                                halo_hops=halo_hops,
-                               max_path_length=max_path_length)
+                               max_path_length=max_path_length,
+                               replication=replication)
         # default probe path: "host" (per-(path, shard) traversal),
         # "device" (PR-2 per-path slab launch), or "plane" (device-
         # resident planes, one fused launch per query plan).  The legacy
@@ -309,6 +320,18 @@ class DistributedGNNPE:
         self.migrations: list = []
         self.history: list[dict] = []
         self._rng = rng
+        # 7b. robustness state: chaos fault plan (None = every hook is a
+        #     no-op), aborted-transaction counter, terminal-unavailability
+        #     latch, and the k-replica standby set (k=0 = legacy failover)
+        self.chaos = None
+        self._unavailable: str | None = None
+        self.aborted_transactions = 0
+        self.replicas = ReplicaSet(replication, n_machines)
+        if replication:
+            for sid in sorted(self.shards):
+                self.replicas.sync_full(sid, self.shards[sid],
+                                        self.routing[sid],
+                                        self.dead_machines, rng)
         self._qclock = 0.0            # query counter (ids/features only)
         self._epoch = 0               # run_workload epochs (rebalance clock)
         self._last_migration_epoch = (self._epoch
@@ -554,6 +577,104 @@ class DistributedGNNPE:
         return rows, stats.leaves_tested
 
     # ------------------------------------------------------------------ #
+    # chaos harness + replication plumbing
+    # ------------------------------------------------------------------ #
+    def set_fault_plan(self, plan) -> None:
+        """Attach a chaos FaultPlan (None detaches).  Every named hook
+        point consults the plan; with none attached hooks are no-ops."""
+        self.chaos = plan
+
+    def enable_replication(self, k: int) -> None:
+        """(Re)build the standby replica set at factor `k` from the
+        current shards — post-build twin of `build(replication=k)`."""
+        self.replicas = ReplicaSet(k, len(self.specs))
+        if k:
+            for sid in sorted(self.shards):
+                self.replicas.sync_full(sid, self.shards[sid],
+                                        self.routing[sid],
+                                        self.dead_machines, self._rng)
+
+    def _check_available(self) -> None:
+        if self._unavailable is not None:
+            raise ClusterUnavailableError(
+                f"cluster is unavailable: {self._unavailable}",
+                reason=self._unavailable)
+
+    def _fire_hook(self, hook: str) -> None:
+        """Consult the fault plan at a named engine hook point.
+
+        CRASH faults kill their target machine via the full failover
+        path (a fault with no pinned machine picks a live one from the
+        PLAN's rng — never the engine rng, so fault-free and chaos runs
+        draw identical engine rng streams; reprolint RPR007 checks
+        this).  Failover may raise ClusterUnavailableError, which
+        propagates to the caller mid-operation — transactions must
+        therefore only fire hooks before their commit point.
+        """
+        if self.chaos is None:
+            return
+        for f in self.chaos.fire(hook):
+            if f.kind != CRASH:
+                continue
+            m = f.machine
+            if m is None:
+                live = [s.machine_id for s in self.specs
+                        if s.machine_id not in self.dead_machines]
+                if not live:
+                    continue
+                m = int(live[int(self.chaos.rng.integers(len(live)))])
+            if m < len(self.specs) and m not in self.dead_machines:
+                self.handle_machine_failure(m)
+
+    # ------------------------------------------------------------------ #
+    # consistency audits (chaos oracle + CI torn-state gates)
+    # ------------------------------------------------------------------ #
+    def cache_audit(self) -> list:
+        """Cache-layer wrongness: nothing may remain homed on a dead
+        machine — not a slave ValueCache entry, not a slave-memory
+        result, not a master memory-index pointer."""
+        bad = []
+        for m in sorted(self.dead_machines):
+            if self.cache.slaves[m].store:
+                bad.append(f"dead machine {m} still holds "
+                           f"{len(self.cache.slaves[m].store)} "
+                           f"slave-cache entries")
+            if self._slave_store[m]:
+                bad.append(f"dead machine {m} still holds "
+                           f"{len(self._slave_store[m])} slave-memory "
+                           f"results")
+        for s in self.cache.location.values():
+            if s in self.dead_machines:
+                bad.append(f"cache key homed on dead machine {s}")
+        return bad
+
+    def consistency_audit(self) -> list:
+        """Zero-torn-state invariant, checkable after ANY operation
+        (chaos oracle runs it after every op): routing, shards, planes
+        epochs, caches and replicas are mutually consistent — either
+        fully-old or fully-new, never a mix.  Returns violations (empty
+        = clean).  A terminally unavailable engine audits empty: its
+        state is frozen and every operation raises."""
+        if self._unavailable is not None:
+            return []
+        bad = self.cache_audit()
+        for sid, mk in self.routing.items():
+            if mk in self.dead_machines:
+                bad.append(f"shard {sid} routed to dead machine {mk}")
+            if sid not in self.shards:
+                bad.append(f"routed shard {sid} has no shard object")
+        for sid in self.shards:
+            if sid not in self.routing:
+                bad.append(f"shard {sid} missing from routing")
+            if sid not in self.index_epoch:
+                bad.append(f"shard {sid} missing from index_epoch")
+            idx = self.shards[sid].index
+            if idx is None or not idx.trees:
+                bad.append(f"shard {sid} installed without aR-trees")
+        bad.extend(self.replicas.audit(self.routing, self.dead_machines))
+        return bad
+
+    # ------------------------------------------------------------------ #
     # online phase
     # ------------------------------------------------------------------ #
     def query(self, query: LabeledGraph, plan_mode: str = "pescore",
@@ -583,6 +704,8 @@ class DistributedGNNPE:
                 probe_mode = "device" if device_probe else "host"
         if probe_mode not in ("host", "device", "plane"):
             raise ValueError(f"unknown probe_mode {probe_mode!r}")
+        self._check_available()
+        self._fire_hook(HOOK_QUERY)
         tel = QueryTelemetry(plan_mode=plan_mode, probe_mode=probe_mode,
                              device_probe=probe_mode != "host")
         self._qclock += 1.0
@@ -957,6 +1080,7 @@ class DistributedGNNPE:
         or failover replaced a shard index between dispatch and consume,
         the whole batch transparently re-runs on the serial plane path.
         """
+        self._check_available()
         return self._mb_consume(self._mb_dispatch(list(queries), plan_mode))
 
     def _mb_dispatch(self, batch: list[LabeledGraph], plan_mode: str) -> dict:
@@ -1046,6 +1170,11 @@ class DistributedGNNPE:
         """Read back a dispatched megabatch and finish every query in
         stream order (cache access, running-mask filtering, comm
         accounting, join, cache admission — the exact serial sequence)."""
+        # mid-megabatch fault point: a crash here replaces shard indexes
+        # via failover promotion, which the epoch stamp / assembly
+        # identity checks below catch — the batch then re-runs serially
+        # on post-failover state, bit-identical by the fallback contract
+        self._fire_hook(HOOK_BATCH)
         items, flight = mb["items"], mb["flight"]
         # a streaming update between dispatch and consume invalidates the
         # WHOLE in-flight batch, not just its probe slabs: the packed
@@ -1193,7 +1322,17 @@ class DistributedGNNPE:
         property: update-then-query is bit-identical (matches, node
         counters, comm bytes) to a fresh `build` on the updated graph
         with the same assignment/params, in all three probe modes.
+
+        Fault semantics: the STAGE phase fires the ``updates.stage``
+        chaos hook per touched shard and the ``updates.commit`` hook
+        just before the commit point.  A TransferTimeoutError during
+        staging (primary or replica delta) propagates with the engine
+        fully on the old epoch — the caller may simply retry.  A crash
+        at either hook triggers failover inline; the transaction then
+        commits on the post-failover placement (promoted replicas are
+        content-identical to the primaries they replace).
         """
+        self._check_available()
         if delta.is_empty:
             return UpdateReport(data_epoch=self._data_epoch, noop=True,
                                 n_shards=len(self.shards))
@@ -1276,36 +1415,66 @@ class DistributedGNNPE:
         # mutates — a failure here leaves the engine fully on the old
         # epoch, never half-updated with still-valid old cache keys
         staged = []
-        for sid in sorted(touched):
-            old_shard = self.shards[sid]
-            new_shard = make_shard(new_graph, asg, sid,
-                                   halo_hops=self._halo_eff)
-            self._build_shard_index(new_shard, new_vemb,
-                                    reuse_from=old_shard,
-                                    dirty_gmask=dirty, stats=stats,
-                                    build_trees=False)
-            # CRC'd delta over the migration transfer machinery; the
-            # hosting machine installs the verified image on top of its
-            # replica (carried lengths keep identity -> warm planes)
-            blob = shard_delta(old_shard, new_shard)
-            tr = crc_transfer(blob, rng=self._rng,
-                              corrupt_prob=corrupt_prob)
-            report.retransmissions += tr.retransmissions
-            report.virtual_ms += tr.virtual_ms
-            report.delta_bytes += len(blob)
-            if not tr.ok:
-                # unreachable with the simulator's bounded retry (the
-                # final attempt is clean by construction) — but if that
-                # invariant ever breaks, BOTH installing a corrupt image
-                # and silently skipping the shard would serve wrong
-                # answers, so fail loudly — BEFORE anything installed
-                raise RuntimeError(
-                    f"shard {sid} update delta failed CRC after retries")
-            staged.append((sid, old_shard,
-                           apply_shard_delta(old_shard, tr.received)))
+        rep_staged = []
+        try:
+            for sid in sorted(touched):
+                self._fire_hook(HOOK_UPDATE_STAGE)
+                old_shard = self.shards[sid]
+                new_shard = make_shard(new_graph, asg, sid,
+                                       halo_hops=self._halo_eff)
+                self._build_shard_index(new_shard, new_vemb,
+                                        reuse_from=old_shard,
+                                        dirty_gmask=dirty, stats=stats,
+                                        build_trees=False)
+                # CRC'd delta over the migration transfer machinery; the
+                # hosting machine installs the verified image on top of
+                # its replica (carried lengths keep identity -> warm
+                # planes), and every live standby replica stages the
+                # same image so it commits in lockstep with the primary
+                blob = shard_delta(old_shard, new_shard)
+                tr = crc_transfer(blob, rng=self._rng,
+                                  corrupt_prob=corrupt_prob,
+                                  chaos=self.chaos)
+                report.retransmissions += tr.retransmissions
+                report.virtual_ms += tr.virtual_ms
+                report.delta_bytes += len(blob)
+                if not tr.ok:
+                    # unreachable: an unconfirmed transfer raises — but
+                    # if that invariant ever breaks, BOTH installing a
+                    # corrupt image and silently skipping the shard
+                    # would serve wrong answers, so fail loudly —
+                    # BEFORE anything installed
+                    raise RuntimeError(
+                        f"shard {sid} update delta failed CRC after "
+                        f"retries")
+                staged.append((sid, old_shard,
+                               apply_shard_delta(old_shard, tr.received)))
+                rep_staged.extend(self.replicas.stage_delta(
+                    sid, blob, self.dead_machines, self._rng,
+                    chaos=self.chaos))
+            # final fault point before the commit: a timeout or crash
+            # here must still leave the engine fully-old
+            self._fire_hook(HOOK_UPDATE_COMMIT)
+        except TransferTimeoutError:
+            self.aborted_transactions += 1
+            raise                     # fully-old: nothing was installed
 
         # COMMIT: installs, epoch flip, cache scoping (no fallible
-        # serialization/compute below — only assignments + invalidation)
+        # serialization/compute below — only assignments + invalidation).
+        # Replica deltas skip holders that failover promoted to primary
+        # or that died between stage and commit; conversely, any copy
+        # that did NOT stage this delta (e.g. minted by a mid-stage
+        # failover's re-replication from the old epoch) is dropped here
+        # — a stale standby must never be promotable.
+        rep_commit = [e for e in rep_staged
+                      if e[1] != self.routing.get(e[0])
+                      and e[1] not in self.dead_machines]
+        delta_holders = {(sid, m) for sid, m, _, _ in rep_commit}
+        for sid in sorted(touched):
+            for m in list(self.replicas.copies.get(sid, {})):
+                if (sid, m) not in delta_holders:
+                    del self.replicas.copies[sid][m]
+        self.replicas.commit_delta(rep_commit)
         self.graph = new_graph
         self.assignment = asg
         self.retired_ids.update(int(v) for v in delta.del_vertices)
@@ -1350,6 +1519,18 @@ class DistributedGNNPE:
             vc.theta_d = theta_d
         if refit_pe:
             self._refit_pe_model()
+        # restore the replication factor for touched shards (copies may
+        # have been dropped above) — best-effort: a failed sync degrades
+        # redundancy, never correctness
+        if self.replicas.k:
+            try:
+                for sid in sorted(touched):
+                    self.replicas.sync_full(sid, self.shards[sid],
+                                            self.routing[sid],
+                                            self.dead_machines, self._rng,
+                                            chaos=self.chaos)
+            except TransferTimeoutError:
+                pass
         self.update_reports.append(report)
         return report
 
@@ -1382,7 +1563,8 @@ class DistributedGNNPE:
             halo_hops=cfg["halo_hops"],
             max_path_length=cfg["max_path_length"],
             probe_mode=self.probe_mode,
-            assignment=self.assignment, params=self.params)
+            assignment=self.assignment, params=self.params,
+            replication=cfg.get("replication", 0))
 
     # ------------------------------------------------------------------ #
     # workload loop + balancing
@@ -1414,6 +1596,7 @@ class DistributedGNNPE:
         `lb.alpha_decay` therefore decays over ALPHA_WINDOW_S /
         EPOCH_VIRTUAL_S epochs, never over a number of *queries*.
         """
+        self._check_available()
         self._cpu.clear()
         self._comm.clear()
         self._touch.clear()
@@ -1450,6 +1633,11 @@ class DistributedGNNPE:
             self._defer_aw = False
         self._epoch += 1
 
+        if rebalance:
+            # chaos fault point BEFORE telemetry: a crash here removes
+            # the machine's telemetry row, so the balancer can never
+            # plan a move onto the corpse
+            self._fire_hook(HOOK_REBALANCE)
         tele = self._refresh_loads()
         rebalanced = False
         if rebalance:
@@ -1460,18 +1648,39 @@ class DistributedGNNPE:
                                          - self._last_migration_epoch)
                 * EPOCH_VIRTUAL_S)
             if plan.trigger and plan.moves:
-                res = hot_migrate(self.shards, plan.moves, self.routing,
-                                  rng=self._rng,
-                                  corrupt_prob=corrupt_prob)
-                self.migrations.append(res)
-                self._last_migration_epoch = self._epoch
-                rebalanced = bool(res.migrated)
-                # migrated shards carry freshly deserialized indexes:
-                # drop their resident probe planes (lazily repacked on
-                # the next plane-mode probe)
-                for sid in res.migrated:
-                    self.planes.invalidate(sid)
-                self._refresh_loads()
+                try:
+                    res = hot_migrate(self.shards, plan.moves,
+                                      self.routing, rng=self._rng,
+                                      corrupt_prob=corrupt_prob,
+                                      chaos=self.chaos)
+                except TransferTimeoutError:
+                    # two-phase abort: routing/shards untouched, planes
+                    # still valid — the epoch simply keeps its old
+                    # placement and a later epoch may retry
+                    self.aborted_transactions += 1
+                    res = None
+                if res is not None:
+                    self.migrations.append(res)
+                    self._last_migration_epoch = self._epoch
+                    rebalanced = bool(res.migrated)
+                    # migrated shards carry freshly deserialized
+                    # indexes: drop their resident probe planes (lazily
+                    # repacked on the next plane-mode probe), then
+                    # re-home their replicas off the new primary
+                    # (best-effort: failure degrades redundancy only)
+                    for sid in res.migrated:
+                        self.planes.invalidate(sid)
+                    if self.replicas.k:
+                        try:
+                            for sid in res.migrated:
+                                self.replicas.sync_full(
+                                    sid, self.shards[sid],
+                                    self.routing[sid],
+                                    self.dead_machines, self._rng,
+                                    chaos=self.chaos)
+                        except TransferTimeoutError:
+                            pass
+                    self._refresh_loads()
         self.history.append({
             "sigma": self.load_sigma(),
             "n_queries": len(queries),
@@ -1481,15 +1690,90 @@ class DistributedGNNPE:
         return tels
 
     def handle_machine_failure(self, machine_id: int) -> list[int]:
-        """Kill a machine and re-home its shards onto the survivors
-        (Algorithm-1 migration from replicas, via WorkerFailover); the
-        victims' resident probe planes are invalidated so a plane-mode
-        probe can never read a pre-failover slab."""
-        from repro.train.elastic import WorkerFailover
-        fo = WorkerFailover(self, dead=set(self.dead_machines))
-        victims = fo.fail_machine(machine_id)
+        """Kill a machine and re-home its shards onto the survivors.
+
+        Crash-consistent failover transaction:
+
+          1. mark the machine dead (it factually died — this and the
+             cache/replica purge happen even when the cluster ends up
+             unavailable) and purge everything homed on it: slave
+             ValueCache, slave memory results, master memory-index
+             pointers, standby replicas;
+          2. quorum check BEFORE any routing/shard mutation — no
+             survivors, or a victim shard whose last copy died, raises
+             a typed :class:`ClusterUnavailableError` (never a KeyError
+             or a silently empty result) and latches the engine
+             unavailable: every later operation raises too;
+          3. with replication on, every victim PROMOTES a standby
+             replica (pure dictionary move — the copy arrived through
+             the same CRC pipeline as a migration, so it is
+             bit-identical to the lost primary); with k=0 the legacy
+             byte-image re-deserialize path re-homes victims onto
+             survivors by deterministic LPT over shard bytes;
+          4. victims' resident probe planes are invalidated so a
+             plane-mode probe can never read a pre-failover slab, and
+             the replication factor is restored best-effort.
+        """
+        if machine_id in self.dead_machines or machine_id >= len(self.specs):
+            return []
+        self.dead_machines.add(machine_id)
+        self.replicas.drop_machine(machine_id)
+        self.cache.drop_slave(machine_id)
+        self._slave_store[machine_id].clear()
+        victims = sorted(sid for sid, mk in self.routing.items()
+                         if mk == machine_id)
+        survivors = [s.machine_id for s in self.specs
+                     if s.machine_id not in self.dead_machines]
+        if not survivors:
+            self._unavailable = "no-survivors"
+            raise ClusterUnavailableError(
+                f"machine {machine_id} was the last live machine",
+                reason="no-survivors")
+        if self.replicas.k:
+            # PREPARE: verify every victim has a live standby before
+            # mutating routing — all-or-nothing promotion
+            lost = [sid for sid in victims
+                    if not self.replicas.holders(sid, self.dead_machines)]
+            if lost:
+                self._unavailable = "no-live-copy"
+                raise ClusterUnavailableError(
+                    f"shards {lost} lost their last copy with machine "
+                    f"{machine_id}", reason="no-live-copy")
+            promos = [(sid, *self.replicas.promote(sid,
+                                                   self.dead_machines))
+                      for sid in victims]
+            for sid, m, shard in promos:      # COMMIT: pure assignment
+                self.shards[sid] = shard
+                self.routing[sid] = m
+        elif victims:
+            # legacy simulator path: the dead machine's byte image is
+            # still reachable; re-home by LPT over shard bytes (chaos-
+            # free — this stand-in is superseded by replication)
+            loads = {k: 0.0 for k in survivors}
+            for sid, mk in self.routing.items():
+                if mk in loads:
+                    loads[mk] += self._shard_bytes[sid]
+            moves = []
+            for sid in sorted(victims,
+                              key=lambda s: (-self._shard_bytes[s], s)):
+                tgt = min(survivors,
+                          key=lambda k: (loads[k] / self.cpu_w[k], k))
+                loads[tgt] += self._shard_bytes[sid]
+                moves.append((sid, machine_id, tgt))
+            hot_migrate(self.shards, moves, self.routing, rng=self._rng)
         for sid in victims:
             self.planes.invalidate(sid)
+        if self.replicas.k:
+            # re-replicate everything that lost a copy (victims and any
+            # shard that had a standby on the corpse) — best-effort
+            try:
+                for sid in sorted(self.shards):
+                    self.replicas.sync_full(sid, self.shards[sid],
+                                            self.routing[sid],
+                                            self.dead_machines, self._rng,
+                                            chaos=self.chaos)
+            except TransferTimeoutError:
+                pass
         return victims
 
     def load_sigma(self) -> float:

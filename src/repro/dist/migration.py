@@ -1,21 +1,32 @@
 """Hot shard migration with CRC verification (paper §4, Algorithm 1).
 
 Execution half of the balancer: ship each shard's canonical byte image to
-its target machine, verify integrity with CRC32, retransmit on mismatch,
-and atomically flip the routing table once the replica is confirmed.
+its target machine, verify integrity with CRC32, retransmit with
+exponential backoff on mismatch, and atomically flip the routing table
+once every replica in the batch is confirmed.
 
 Queries are **non-interruptible** during migration because
 
   * the shard byte image is a read-only replica — the aR-tree travels
     verbatim and is byte-identical after the move (no index rebuild, so
     no window where probes could miss candidates), and
-  * the routing-table flip happens only after the CRC check passes, so a
-    query always finds the shard either at the source (pre-flip) or the
-    target (post-flip), never in between.
+  * migration is a two-phase transaction: the PREPARE phase does all
+    fallible work (serialize, transfer, CRC verify, decode) without
+    touching `shards` or `routing`; the COMMIT phase is pure assignment.
+    A fault at any point during prepare aborts the whole batch fully-old
+    — a query always sees either the complete pre-batch or complete
+    post-batch placement, never a torn mix.
 
 The network is simulated: transfer time is charged in *virtual ms* from a
-1 Gbps link model plus a fixed per-transfer handshake, and `corrupt_prob`
-injects in-flight byte flips to exercise the retransmission path.
+1 Gbps link model plus a fixed per-transfer handshake and per-retry
+exponential backoff.  `corrupt_prob` injects in-flight byte flips from
+the *engine* rng to exercise retransmission; a chaos `FaultPlan`
+(repro.dist.chaos) injects corruption / timeouts / slowdowns / torn
+images from its own rng at the ``migration.transfer`` hook, and —
+unlike `corrupt_prob`, whose final attempt is clean by construction —
+chaos faults may exhaust the retry budget, raising a typed
+:class:`~repro.dist.chaos.TransferTimeoutError` that the surrounding
+transaction turns into a clean abort.
 """
 
 from __future__ import annotations
@@ -24,14 +35,19 @@ import dataclasses
 
 import numpy as np
 
+from repro.dist.chaos import (CORRUPT, HOOK_MIGRATE_PREPARE, HOOK_TRANSFER,
+                              SLOW, TIMEOUT, TORN, TransferTimeoutError)
 from repro.dist.shard import Shard, shard_crc32
 
 __all__ = ["MigrationResult", "TransferResult", "crc_transfer",
-           "hot_migrate", "LINK_BYTES_PER_MS", "HANDSHAKE_MS"]
+           "hot_migrate", "LINK_BYTES_PER_MS", "HANDSHAKE_MS",
+           "MAX_RETRIES", "BACKOFF_BASE_MS", "BACKOFF_CAP_MS"]
 
 LINK_BYTES_PER_MS = 125_000.0    # 1 Gbps simulated inter-machine link
 HANDSHAKE_MS = 5.0               # per-transfer setup + CRC check
 MAX_RETRIES = 16
+BACKOFF_BASE_MS = 2.0            # retry k backs off BASE * 2**(k-1) ...
+BACKOFF_CAP_MS = 64.0            # ... capped here (virtual ms)
 
 
 @dataclasses.dataclass
@@ -44,38 +60,83 @@ class TransferResult:
     virtual_ms: float
 
 
-def crc_transfer(blob: bytes, rng: np.random.Generator | None = None,
-                 corrupt_prob: float = 0.0,
-                 max_retries: int = MAX_RETRIES) -> TransferResult:
-    """Ship one byte image over the simulated link with CRC32 + retry.
+def _link_faults(chaos, blob: bytes) -> tuple:
+    """Apply the chaos faults due at ``migration.transfer`` to one
+    in-flight attempt.
 
-    The shared transfer half of Algorithm 1, reused by both hot shard
-    migration and the streaming-update delta protocol: attempts
-    1..max_retries may be corrupted in flight (`corrupt_prob` injects
-    byte flips); attempt max_retries+1 is clean by construction,
-    bounding the loop.  (A real deployment would abort instead; in the
-    simulator only injected corruption exists, so delivery of the
-    source-identical image is guaranteed.)
+    Returns ``(received, slow_factor)`` where ``received`` is None for a
+    lost (TIMEOUT) attempt, possibly torn/corrupted bytes otherwise.
+    Draws ONLY from ``chaos.rng`` — never the engine rng — so chaos and
+    fault-free runs consume identical engine rng streams (RPR007).
     """
-    rng = rng if rng is not None else np.random.default_rng(0)
+    if chaos is None:
+        return blob, 1.0
+    received: bytes | None = blob
+    factor = 1.0
+    for f in chaos.fire(HOOK_TRANSFER):
+        if f.kind == TIMEOUT:
+            received = None
+        elif f.kind == SLOW:
+            factor *= f.factor
+        elif f.kind == TORN and received is not None and len(received) > 1:
+            cut = 1 + int(chaos.rng.integers(len(received) - 1))
+            received = received[:cut]
+        elif f.kind == CORRUPT and received is not None and received:
+            bad = bytearray(received)
+            bad[int(chaos.rng.integers(len(bad)))] ^= 0xFF
+            received = bytes(bad)
+    return received, factor
+
+
+def crc_transfer(blob: bytes, rng: np.random.Generator,
+                 corrupt_prob: float = 0.0,
+                 max_retries: int = MAX_RETRIES,
+                 chaos=None, timeout_ms: float | None = None
+                 ) -> TransferResult:
+    """Ship one byte image over the simulated link with CRC32 + retry +
+    exponential backoff.
+
+    The shared transfer half of Algorithm 1, reused by hot shard
+    migration, the streaming-update delta protocol and replica sync.
+    ``rng`` is the *engine* rng (required — every call site threads its
+    own generator so corruption simulation is reproducible per run) and
+    is consulted only when ``corrupt_prob > 0``: attempts
+    1..max_retries may then be corrupted in flight, while attempt
+    max_retries+1 is clean by construction, so absent chaos delivery of
+    the source-identical image is guaranteed.
+
+    A chaos FaultPlan may corrupt/tear/lose/slow any attempt (final one
+    included) from its own rng; if every attempt fails, or accumulated
+    virtual time passes ``timeout_ms``, the bounded budget is exhausted
+    and :class:`TransferTimeoutError` is raised — reachable only under
+    chaos, and handled by the caller as a clean transactional abort.
+    """
     crc = shard_crc32(blob)
     retrans = 0
     virtual_ms = 0.0
-    received = blob
     for attempt in range(1, max_retries + 2):
-        virtual_ms += len(blob) / LINK_BYTES_PER_MS + HANDSHAKE_MS
-        received = blob
-        if (corrupt_prob > 0.0 and attempt <= max_retries
-                and rng.random() < corrupt_prob):
-            bad = bytearray(blob)
+        received, slow = _link_faults(chaos, blob)
+        if (received is not None and corrupt_prob > 0.0
+                and attempt <= max_retries and rng.random() < corrupt_prob):
+            bad = bytearray(received)
             bad[int(rng.integers(len(bad)))] ^= 0xFF
             received = bytes(bad)
-        if shard_crc32(received) == crc:
-            break
+        virtual_ms += slow * (len(blob) / LINK_BYTES_PER_MS) + HANDSHAKE_MS
+        if received is not None and shard_crc32(received) == crc:
+            return TransferResult(received=received, ok=True,
+                                  retransmissions=retrans,
+                                  virtual_ms=virtual_ms)
         retrans += 1
-    return TransferResult(received=received,
-                          ok=shard_crc32(received) == crc,
-                          retransmissions=retrans, virtual_ms=virtual_ms)
+        virtual_ms += min(BACKOFF_BASE_MS * 2.0 ** (attempt - 1),
+                          BACKOFF_CAP_MS)
+        if timeout_ms is not None and virtual_ms > timeout_ms:
+            raise TransferTimeoutError(
+                f"transfer exceeded {timeout_ms:.1f} virtual ms "
+                f"after {attempt} attempts",
+                virtual_ms=virtual_ms, attempts=attempt)
+    raise TransferTimeoutError(
+        f"transfer failed all {max_retries + 1} attempts",
+        virtual_ms=virtual_ms, attempts=max_retries + 1)
 
 
 @dataclasses.dataclass
@@ -83,9 +144,8 @@ class MigrationResult:
     """Telemetry of one migration batch.
 
     crc_ok means every applied routing flip was preceded by a
-    CRC-confirmed delivery; the bounded retransmission loop guarantees
-    this in the simulator (only injected corruption exists), so a False
-    here would indicate a bug, not a lossy network.
+    CRC-confirmed delivery — structurally guaranteed now that an
+    unconfirmed transfer raises instead of returning.
 
     ``skipped`` lists (sid, reason) moves the batch dropped instead of
     executing: a sid absent from `shards` (removed by failover between
@@ -104,54 +164,66 @@ class MigrationResult:
 
 
 def hot_migrate(shards: dict, moves: list, routing: dict,
-                rng: np.random.Generator | None = None,
+                rng: np.random.Generator,
                 corrupt_prob: float = 0.0,
-                max_retries: int = MAX_RETRIES) -> MigrationResult:
-    """Migrate shards per `moves` = [(sid, src_machine, tgt_machine), ...].
+                max_retries: int = MAX_RETRIES,
+                chaos=None) -> MigrationResult:
+    """Migrate shards per `moves` = [(sid, src_machine, tgt_machine), ...]
+    as one prepare/commit transaction.
 
-    Mutates `shards` (replacing each moved shard with the replica decoded
-    at the target — provably identical to the source image) and `routing`
-    (flipped to the target only after CRC verification).  Returns batch
-    telemetry including the simulated retransmission count.
+    PREPARE serializes, transfers (CRC + backoff) and decodes every
+    non-skipped move without mutating anything; COMMIT then installs all
+    decoded replicas and flips `routing` in one pure-assignment pass.  A
+    :class:`TransferTimeoutError` (or an injected TIMEOUT/TORN fault at
+    the ``migration.prepare`` hook) during prepare propagates with
+    `shards` and `routing` untouched — the batch aborts fully-old.
 
     Stale moves are skipped, never raised: a planner emitting the same
     shard twice, or a shard removed/re-homed by failover between plan
-    and execute, must not crash the batch halfway (leaving `routing`
-    half-applied).  Each skip is recorded in ``MigrationResult.skipped``
-    with its reason.
+    and execute, must not abort the batch.  Each skip is recorded in
+    ``MigrationResult.skipped`` with its reason.
     """
-    rng = rng if rng is not None else np.random.default_rng(0)
-    migrated: list = []
+    staged: list = []            # (sid, tgt, decoded replica, n bytes)
+    pending: set = set()         # sids staged but not yet committed
     skipped: list = []
     retrans = 0
-    bytes_moved = 0
     virtual_ms = 0.0
-    crc_ok = True
 
     for sid, src, tgt in moves:
         shard = shards.get(sid)
         if shard is None:
             skipped.append((sid, "unknown shard"))
             continue
-        if routing.get(sid, src) != src:
+        if sid in pending or routing.get(sid, src) != src:
             # the plan's source is stale: a duplicate move in this very
-            # batch already flipped it, or failover re-homed the shard
+            # batch already staged it, or failover re-homed the shard
             skipped.append((sid, "stale source machine"))
             continue
+        if chaos is not None:
+            for f in chaos.fire(HOOK_MIGRATE_PREPARE):
+                if f.kind in (TIMEOUT, TORN):
+                    raise TransferTimeoutError(
+                        f"prepare aborted by injected {f.kind} fault "
+                        f"(shard {sid})", virtual_ms=virtual_ms)
+                if f.kind == SLOW:
+                    virtual_ms += f.factor * HANDSHAKE_MS
         blob = shard.serialize()
         tr = crc_transfer(blob, rng=rng, corrupt_prob=corrupt_prob,
-                          max_retries=max_retries)
+                          max_retries=max_retries, chaos=chaos)
         retrans += tr.retransmissions
         virtual_ms += tr.virtual_ms
-        crc_ok = crc_ok and tr.ok
-        if not tr.ok:           # defensive: shard stays at the source
-            continue
-        shards[sid] = Shard.deserialize(tr.received)
+        staged.append((sid, tgt, Shard.deserialize(tr.received), len(blob)))
+        pending.add(sid)
+
+    migrated: list = []
+    bytes_moved = 0
+    for sid, tgt, replica, nbytes in staged:   # COMMIT: pure assignment
+        shards[sid] = replica
         routing[sid] = tgt
-        bytes_moved += len(blob)
+        bytes_moved += nbytes
         migrated.append(sid)
 
-    return MigrationResult(migrated=migrated, crc_ok=crc_ok,
+    return MigrationResult(migrated=migrated, crc_ok=True,
                            retransmissions=retrans,
                            bytes_moved=bytes_moved, virtual_ms=virtual_ms,
                            skipped=skipped)

@@ -1,0 +1,192 @@
+"""k-replica shard placement with anti-affinity and CRC-verified sync.
+
+Before this module, a machine crash forced `handle_machine_failure` to
+re-deserialize the dead machine's shards from their (conveniently still
+reachable) in-simulator byte images — a stand-in with no real-world
+analogue.  :class:`ReplicaSet` gives every shard ``k`` standing replicas
+on live machines *other than* its primary (anti-affinity), kept current
+by piggybacking CRC-verified transfers on the two paths that already
+move shard bytes:
+
+  * **full sync** after a shard is (re)built or migrated — the complete
+    canonical image ships to any replica target missing a current copy;
+  * **delta sync** during ``apply_updates`` — the same canonical delta
+    image the primary installs is staged to every replica holder inside
+    the update transaction's STAGE phase, and installed at COMMIT, so
+    replicas can never diverge from primaries by a torn fault window.
+
+Failover then *promotes* a replica (pure dictionary move, zero transfer
+on the critical path) instead of rebuilding.  Because replica images
+arrive through the same ``crc_transfer`` + ``Shard.deserialize`` /
+``apply_shard_delta`` pipeline as primaries (RPR003), a promoted shard
+is bit-identical to the lost primary — exactness is preserved by
+construction, and the chaos oracle verifies it empirically.
+
+Quorum semantics: a shard is *available* while at least one live copy
+(primary or replica) exists.  Losing the last copy — or the last live
+machine — is genuine quorum loss, surfaced as a typed
+:class:`~repro.dist.chaos.ClusterUnavailableError`; under-replication
+(fewer than ``k`` live replicas because machines died) only degrades
+fault tolerance, never correctness.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.dist.chaos import ClusterUnavailableError
+from repro.dist.migration import crc_transfer
+from repro.dist.shard import Shard, apply_shard_delta
+
+__all__ = ["ReplicaSet"]
+
+
+class ReplicaSet:
+    """Standby copies: ``copies[sid][machine] -> decoded Shard``.
+
+    Placement is deterministic (ring walk from the primary, skipping the
+    primary and dead machines), so the same cluster history yields the
+    same replica layout on every run.
+    """
+
+    def __init__(self, k: int, n_machines: int) -> None:
+        self.k = int(k)
+        self.n_machines = int(n_machines)
+        self.copies: dict[int, dict[int, Shard]] = {}
+        self.bytes_synced = 0
+        self.promotions = 0
+        self.virtual_ms = 0.0
+
+    # ------------------------------------------------------------------ #
+    # placement
+    # ------------------------------------------------------------------ #
+    def plan_targets(self, sid: int, primary: int, dead: set) -> list[int]:
+        """The k live anti-affine machines after `primary` on the ring."""
+        targets: list[int] = []
+        for step in range(1, self.n_machines):
+            m = (primary + step) % self.n_machines
+            if m != primary and m not in dead:
+                targets.append(m)
+            if len(targets) == self.k:
+                break
+        return targets
+
+    def holders(self, sid: int, dead: set) -> list[int]:
+        return sorted(m for m in self.copies.get(sid, {}) if m not in dead)
+
+    # ------------------------------------------------------------------ #
+    # sync
+    # ------------------------------------------------------------------ #
+    def sync_full(self, sid: int, shard: Shard, primary: int, dead: set,
+                  rng: np.random.Generator, chaos=None) -> int:
+        """Ship the full canonical image to every target missing a copy.
+
+        The infallible purge runs FIRST (copies on dead machines, on the
+        primary, or off the planned ring are dropped), then each missing
+        target receives the image over the CRC link, installed as it
+        arrives — so even a TransferTimeoutError mid-sync leaves only
+        valid, anti-affine copies behind (degraded redundancy, never
+        wrongness).  Returns bytes shipped.
+        """
+        if self.k == 0:
+            return 0
+        targets = self.plan_targets(sid, primary, dead)
+        have = self.copies.setdefault(sid, {})
+        for m in list(have):
+            if m == primary or m in dead or m not in targets:
+                del have[m]
+        blob = None
+        shipped = 0
+        for m in targets:
+            if m in have:
+                continue
+            if blob is None:
+                blob = shard.serialize()
+            tr = crc_transfer(blob, rng=rng, chaos=chaos)
+            self.virtual_ms += tr.virtual_ms
+            have[m] = Shard.deserialize(tr.received)
+            shipped += len(blob)
+        self.bytes_synced += shipped
+        return shipped
+
+    def stage_delta(self, sid: int, delta_blob: bytes, dead: set,
+                    rng: np.random.Generator, chaos=None) -> list:
+        """STAGE phase of replica delta sync: transfer + decode the
+        canonical delta for every live holder of `sid`, mutating
+        nothing.  Returns staged ``[(sid, machine, new Shard, n bytes)]``
+        for :meth:`commit_delta`.  Raises TransferTimeoutError under
+        chaos — the caller's transaction then aborts fully-old.
+        """
+        staged = []
+        for m in self.holders(sid, dead):
+            tr = crc_transfer(delta_blob, rng=rng, chaos=chaos)
+            self.virtual_ms += tr.virtual_ms
+            new = apply_shard_delta(self.copies[sid][m], tr.received)
+            staged.append((sid, m, new, len(delta_blob)))
+        return staged
+
+    def commit_delta(self, staged: list) -> None:
+        """COMMIT phase: pure assignment of the staged replica shards."""
+        for sid, m, shard, nbytes in staged:
+            self.copies[sid][m] = shard
+            self.bytes_synced += nbytes
+
+    # ------------------------------------------------------------------ #
+    # failover
+    # ------------------------------------------------------------------ #
+    def promote(self, sid: int, dead: set) -> tuple:
+        """Pop a live replica of `sid` for promotion to primary.
+
+        Returns ``(machine, Shard)`` — deterministic pick (lowest live
+        holder id).  Raises :class:`ClusterUnavailableError` when no
+        live copy exists: that is genuine quorum loss for this shard.
+        """
+        live = self.holders(sid, dead)
+        if not live:
+            raise ClusterUnavailableError(
+                f"shard {sid}: no live replica to promote",
+                reason="no-live-copy")
+        m = live[0]
+        shard = self.copies[sid].pop(m)
+        self.promotions += 1
+        return m, shard
+
+    def drop_machine(self, m: int) -> int:
+        """Forget every replica homed on machine `m` (it died)."""
+        n = 0
+        for sid in list(self.copies):
+            if m in self.copies[sid]:
+                del self.copies[sid][m]
+                n += 1
+        return n
+
+    def drop_shard(self, sid: int) -> None:
+        self.copies.pop(sid, None)
+
+    # ------------------------------------------------------------------ #
+    # audit
+    # ------------------------------------------------------------------ #
+    def audit(self, routing: dict, dead: set) -> list:
+        """Wrongness violations only (under-replication is 'degraded',
+        not wrong): replicas homed on dead machines, co-located with
+        their primary, or kept for shards that no longer exist."""
+        bad = []
+        for sid, by_machine in self.copies.items():
+            primary = routing.get(sid)
+            if primary is None:
+                bad.append(f"replica for unknown shard {sid}")
+                continue
+            for m in by_machine:
+                if m in dead:
+                    bad.append(f"shard {sid}: replica on dead machine {m}")
+                if m == primary:
+                    bad.append(f"shard {sid}: replica co-located with "
+                               f"primary {m}")
+        return bad
+
+    def stats(self) -> dict:
+        return {"k": self.k,
+                "replicas": sum(len(v) for v in self.copies.values()),
+                "bytes_synced": int(self.bytes_synced),
+                "promotions": int(self.promotions),
+                "virtual_ms": float(self.virtual_ms)}

@@ -29,9 +29,11 @@ __all__ = ["WorkerFailover", "StragglerMitigator",
 class WorkerFailover:
     """Shard-level failover: on machine death, reassign its shards.
 
-    The static graph is read-only, so a 'replica' is just the shard byte
-    image (re-deserializable anywhere); the central node re-routes and the
-    survivors absorb the load per the hardware-aware weights.
+    Thin compatibility facade over the engine's crash-consistent
+    `handle_machine_failure` transaction (the engine owns placement,
+    quorum checks, cache purges and replica promotion — see
+    repro.dist.cluster and docs/robustness.md).  Raises the typed
+    ClusterUnavailableError (a RuntimeError) on genuine quorum loss.
     """
 
     engine: Any                       # DistributedGNNPE
@@ -39,25 +41,11 @@ class WorkerFailover:
 
     def fail_machine(self, machine_id: int) -> list[int]:
         """Kill one machine; return the re-homed shard ids."""
-        eng = self.engine
         self.dead.add(machine_id)
-        # the engine owns placement: mark the machine dead there too so
-        # the rebalancer never migrates shards back onto it
-        getattr(eng, "dead_machines", self.dead).add(machine_id)
-        victims = [sid for sid, mk in eng.routing.items()
-                   if mk == machine_id]
-        survivors = [k for k in range(len(eng.specs))
-                     if k not in self.dead]
-        if not survivors:
-            raise RuntimeError("no survivors")
-        weights = eng.cpu_w[survivors]
-        weights = weights / weights.sum()
-        rng = np.random.default_rng(machine_id)
-        moves = [(sid, machine_id, int(rng.choice(survivors, p=weights)))
-                 for sid in victims]
-        from repro.dist.migration import hot_migrate
-        hot_migrate(eng.shards, moves, eng.routing, rng=rng)
-        return victims
+        try:
+            return self.engine.handle_machine_failure(machine_id)
+        finally:
+            self.dead |= self.engine.dead_machines
 
     def verify_exactness(self, queries, oracle_fn) -> bool:
         """Post-failover results must still be exact."""

@@ -1,0 +1,15 @@
+"""RPR007 bad fixture: chaos hook handlers drawing the wrong rng."""
+import numpy as np
+
+
+def crash_from_engine_rng(chaos, rng, machines):
+    for _f in chaos.fire("cluster.query"):
+        victim = machines[int(rng.integers(len(machines)))]
+        machines.remove(victim)
+
+
+def tear_with_fresh_generator(plan, blob):
+    fresh = np.random.default_rng(0)
+    for _f in plan.fire("migration.transfer"):
+        blob = blob[:int(fresh.integers(1, len(blob)))]
+    return blob

@@ -1,0 +1,25 @@
+"""RPR007 good fixture: hook handlers draw only from the plan rng;
+fire-free functions may use the threaded engine rng."""
+
+
+def crash_from_plan_rng(chaos, machines):
+    for _f in chaos.fire("cluster.query"):
+        victim = machines[int(chaos.rng.integers(len(machines)))]
+        machines.remove(victim)
+
+
+class Engine:
+    def fire_hook(self, hook):
+        for _f in self.chaos.fire(hook):
+            m = int(self.chaos.rng.integers(len(self.live)))
+            self.live.remove(m)
+
+
+def corrupt_prob_simulation(blob, rng, corrupt_prob):
+    # no hook fires here: the ENGINE rng is exactly right for the
+    # reproducible corruption simulation
+    if corrupt_prob > 0.0 and rng.random() < corrupt_prob:
+        bad = bytearray(blob)
+        bad[int(rng.integers(len(bad)))] ^= 0xFF
+        blob = bytes(bad)
+    return blob

@@ -121,6 +121,21 @@ def test_rpr006_silent_on_conforming_declaration_and_call():
     assert scan_fixture("rpr006_good.py") == []
 
 
+def test_rpr007_fires_on_non_plan_rng_in_hook_handlers():
+    # line 7: engine rng drawn inside a fire()-ing function
+    # line 12: fresh generator constructed in a hook handler
+    # line 14: draw from that non-plan generator
+    rel = "src/repro/dist/rpr007_bad.py"
+    assert scan_fixture("rpr007_bad.py", rel) == [("RPR007", 7),
+                                                  ("RPR007", 12),
+                                                  ("RPR007", 14)]
+
+
+def test_rpr007_silent_on_plan_rng_and_fire_free_engine_rng():
+    rel = "src/repro/dist/rpr007_good.py"
+    assert scan_fixture("rpr007_good.py", rel) == []
+
+
 # -- baseline mechanism ---------------------------------------------------
 
 def test_stale_baseline_entry_fails_the_run():

@@ -1,0 +1,452 @@
+"""Chaos harness + crash-consistent replication (ISSUE 8).
+
+The contract under test: NO fault schedule may ever produce a wrong
+answer.  Every query under an arbitrary seeded interleaving of machine
+crashes, corrupted transfers, link timeouts and torn delta images is
+either bit-identical to the fault-free run or raises a typed
+``ClusterUnavailableError`` on genuine quorum loss — never a wrong or
+partial result, never torn state.
+
+Layers:
+
+  * FaultPlan mechanics — seeded determinism, visit anchoring, replay;
+  * link-level faults through ``crc_transfer`` — retransmission,
+    exponential backoff, bounded budget, typed timeout;
+  * transactional aborts — ``hot_migrate`` and ``apply_updates`` left
+    fully-old by a mid-transaction fault, and safely retryable;
+  * replication — anti-affine placement, promotion exactness, quorum
+    loss (last machine / last copy) regressions;
+  * cache failover audit — nothing cache-homed on a dead machine,
+    property-tested over failure/query interleavings;
+  * the chaos oracle — 22 seeded fault schedules (hand-built + random)
+    over a workload script that spans host/device/plane/megabatch
+    probe modes, streaming updates and rebalance epochs, each checked
+    bit-identical to the fault-free baseline.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data.synthetic import nws_graph
+from repro.dist.chaos import (CORRUPT, CRASH, HOOK_BATCH,
+                              HOOK_MIGRATE_PREPARE, HOOK_QUERY,
+                              HOOK_REBALANCE, HOOK_TRANSFER,
+                              HOOK_UPDATE_COMMIT, HOOK_UPDATE_STAGE, SLOW,
+                              TIMEOUT, TORN, ClusterUnavailableError,
+                              FaultPlan, FaultSpec, TransferTimeoutError,
+                              default_script, random_fault_plan, run_script,
+                              script_queries)
+from repro.dist.cluster import DistributedGNNPE
+from repro.dist.migration import (BACKOFF_BASE_MS, MAX_RETRIES, crc_transfer,
+                                  hot_migrate)
+
+N_MACHINES = 3
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return nws_graph(80, 6, 0.1, 5, seed=0)
+
+
+@pytest.fixture(scope="module")
+def ref(graph):
+    """One full build (partitioner + GNN training) for the module; every
+    other engine injects its assignment/params — same indexes, cheap."""
+    return DistributedGNNPE.build(graph, N_MACHINES, shards_per_machine=2,
+                                  gnn_train_steps=4, seed=0)
+
+
+def _engine(graph, ref, k=0):
+    return DistributedGNNPE.build(graph, N_MACHINES, shards_per_machine=2,
+                                  gnn_train_steps=4, seed=0,
+                                  assignment=ref.assignment,
+                                  params=ref.params, replication=k)
+
+
+@pytest.fixture(scope="module")
+def script(graph):
+    return default_script(graph, seed=0)
+
+
+@pytest.fixture(scope="module")
+def baseline(graph, ref, script):
+    """Fault-free answers for the module script — replication consumes
+    no engine rng (corrupt_prob=0 transfers draw nothing), so one k=0
+    baseline is the bit-identity target for every k."""
+    answers, outcome = run_script(_engine(graph, ref), script)
+    assert outcome == "completed"
+    assert len(answers) == script_queries(script)
+    return answers
+
+
+# ------------------------------------------------------------------------- #
+# FaultPlan mechanics
+# ------------------------------------------------------------------------- #
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(kind="meteor", hook=HOOK_QUERY)
+    with pytest.raises(ValueError):
+        FaultSpec(kind=CRASH, hook="cluster.nowhere")
+    with pytest.raises(ValueError):
+        FaultSpec(kind=CRASH, hook=HOOK_TRANSFER)   # engine hooks only
+    with pytest.raises(ValueError):
+        FaultSpec(kind=TORN, hook=HOOK_QUERY)       # link hooks only
+    with pytest.raises(ValueError):
+        FaultSpec(kind=TORN, hook=HOOK_TRANSFER, at=0)
+
+
+def test_fault_plan_visit_anchoring_and_replay():
+    plan = FaultPlan([FaultSpec(kind=TORN, hook=HOOK_TRANSFER, at=2,
+                                times=2)], seed=7)
+    assert [len(plan.fire(HOOK_TRANSFER)) for _ in range(4)] == [0, 1, 1, 0]
+    assert plan.visits(HOOK_TRANSFER) == 4
+    assert [(h, n) for h, n, _ in plan.fired] == [(HOOK_TRANSFER, 2),
+                                                  (HOOK_TRANSFER, 3)]
+    # replay rewinds both the visit counters and the rng stream
+    twin = plan.replay()
+    assert twin.visits(HOOK_TRANSFER) == 0
+    assert twin.faults == plan.faults
+    assert twin.rng.integers(1 << 30) == FaultPlan(
+        plan.faults, seed=7).rng.integers(1 << 30)
+
+
+def test_random_fault_plan_is_seed_deterministic():
+    a = random_fault_plan(3, n_faults=6, n_machines=N_MACHINES)
+    b = random_fault_plan(3, n_faults=6, n_machines=N_MACHINES)
+    assert a.faults == b.faults
+    assert a.faults != random_fault_plan(4, n_faults=6,
+                                         n_machines=N_MACHINES).faults
+    # crash count respects the availability bound
+    crashes = [f for f in a.faults if f.kind == CRASH]
+    assert len(crashes) <= N_MACHINES - 1
+
+
+# ------------------------------------------------------------------------- #
+# link faults through crc_transfer (satellite: rng is required)
+# ------------------------------------------------------------------------- #
+
+def test_crc_transfer_requires_engine_rng():
+    # the silent module-global rng fallback is gone: every call site
+    # must thread its own generator or corruption runs are unseeded
+    with pytest.raises(TypeError):
+        crc_transfer(b"payload")
+
+
+def test_torn_and_corrupt_attempts_are_retransmitted():
+    blob = bytes(range(200)) * 3
+    plan = FaultPlan([FaultSpec(kind=TORN, hook=HOOK_TRANSFER, at=1),
+                      FaultSpec(kind=CORRUPT, hook=HOOK_TRANSFER, at=2)],
+                     seed=1)
+    tr = crc_transfer(blob, rng=np.random.default_rng(0), chaos=plan)
+    assert tr.ok and tr.received == blob
+    assert tr.retransmissions == 2
+
+
+def test_timeout_budget_exhaustion_is_typed_with_backoff():
+    blob = b"x" * 1000
+    plan = FaultPlan([FaultSpec(kind=TIMEOUT, hook=HOOK_TRANSFER, at=1,
+                                times=4)], seed=0)
+    with pytest.raises(TransferTimeoutError) as exc:
+        crc_transfer(blob, rng=np.random.default_rng(0), chaos=plan,
+                     max_retries=3)
+    assert exc.value.attempts == 4
+    # three successful attempts' worth of backoff is strictly cheaper
+    # than four failures (exponential growth, not linear)
+    assert exc.value.virtual_ms > 4 * BACKOFF_BASE_MS
+    # one fewer fault and the final attempt delivers clean
+    tr = crc_transfer(blob, rng=np.random.default_rng(0),
+                      chaos=FaultPlan([FaultSpec(kind=TIMEOUT,
+                                                 hook=HOOK_TRANSFER, at=1,
+                                                 times=3)], seed=0),
+                      max_retries=3)
+    assert tr.ok and tr.received == blob
+
+
+def test_virtual_deadline_raises_before_retry_budget():
+    blob = b"y" * 1000
+    plan = FaultPlan([FaultSpec(kind=TIMEOUT, hook=HOOK_TRANSFER, at=1,
+                                times=MAX_RETRIES + 1)], seed=0)
+    with pytest.raises(TransferTimeoutError) as exc:
+        crc_transfer(blob, rng=np.random.default_rng(0), chaos=plan,
+                     timeout_ms=12.0)
+    assert exc.value.attempts < MAX_RETRIES + 1
+    assert exc.value.virtual_ms > 12.0
+
+
+def test_slow_fault_charges_virtual_time_without_data_loss():
+    blob = b"z" * 100_000
+    clean = crc_transfer(blob, rng=np.random.default_rng(0))
+    plan = FaultPlan([FaultSpec(kind=SLOW, hook=HOOK_TRANSFER, at=1,
+                                factor=8.0)], seed=0)
+    slow = crc_transfer(blob, rng=np.random.default_rng(0), chaos=plan)
+    assert slow.ok and slow.received == blob and slow.retransmissions == 0
+    assert slow.virtual_ms > clean.virtual_ms
+
+
+# ------------------------------------------------------------------------- #
+# transactional aborts: fully-old, retryable
+# ------------------------------------------------------------------------- #
+
+def test_hot_migrate_aborts_fully_old_on_transfer_timeout(graph, ref):
+    eng = _engine(graph, ref)
+    shards_before = dict(eng.shards)
+    routing_before = dict(eng.routing)
+    moves = [(sid, mk, (mk + 1) % N_MACHINES)
+             for sid, mk in sorted(eng.routing.items())]
+    plan = FaultPlan([FaultSpec(kind=TIMEOUT, hook=HOOK_TRANSFER, at=2,
+                                times=MAX_RETRIES + 1)], seed=0)
+    with pytest.raises(TransferTimeoutError):
+        hot_migrate(eng.shards, moves, eng.routing,
+                    rng=np.random.default_rng(0), chaos=plan)
+    # the first move's transfer SUCCEEDED before the second timed out —
+    # yet nothing committed: identical objects, identical routing
+    assert eng.shards == shards_before
+    assert eng.routing == routing_before
+
+
+def test_hot_migrate_prepare_hook_fault_aborts_the_batch(graph, ref):
+    eng = _engine(graph, ref)
+    routing_before = dict(eng.routing)
+    moves = [(sid, mk, (mk + 1) % N_MACHINES)
+             for sid, mk in sorted(eng.routing.items())]
+    plan = FaultPlan([FaultSpec(kind=TORN, hook=HOOK_MIGRATE_PREPARE,
+                                at=2)], seed=0)
+    with pytest.raises(TransferTimeoutError):
+        hot_migrate(eng.shards, moves, eng.routing,
+                    rng=np.random.default_rng(0), chaos=plan)
+    assert eng.routing == routing_before
+
+
+def test_apply_updates_aborts_fully_old_and_retries_bit_identical(
+        graph, ref, script):
+    delta = next(op[1] for op in script if op[0] == "update")
+    probe = next(op for op in script if op[0] == "query")
+    clean = _engine(graph, ref)
+    clean.apply_updates(delta, refit_pe=False)
+    want, _ = clean.query(probe[1], probe_mode=probe[2])
+
+    eng = _engine(graph, ref, k=1)
+    epoch_before = eng._data_epoch
+    pre, _ = eng.query(probe[1], probe_mode=probe[2])
+    plan = FaultPlan([FaultSpec(kind=TIMEOUT, hook=HOOK_TRANSFER, at=1,
+                                times=MAX_RETRIES + 1)], seed=0)
+    eng.set_fault_plan(plan)
+    with pytest.raises(TransferTimeoutError):
+        eng.apply_updates(delta, refit_pe=False)
+    # fully-old: epoch unmoved, answers unmoved, audit clean
+    assert eng.aborted_transactions == 1
+    assert eng._data_epoch == epoch_before
+    assert eng.consistency_audit() == []
+    again, _ = eng.query(probe[1], probe_mode=probe[2])
+    assert again == pre
+    # the faults are spent: the retry commits, bit-identical to clean
+    eng.apply_updates(delta, refit_pe=False)
+    eng.set_fault_plan(None)
+    got, _ = eng.query(probe[1], probe_mode=probe[2])
+    assert got == want
+    assert eng.consistency_audit() == []
+
+
+# ------------------------------------------------------------------------- #
+# replication: placement, promotion exactness, quorum loss
+# ------------------------------------------------------------------------- #
+
+def test_replica_placement_is_anti_affine_and_full(graph, ref):
+    eng = _engine(graph, ref, k=2)
+    for sid, primary in eng.routing.items():
+        holders = eng.replicas.holders(sid, eng.dead_machines)
+        assert len(holders) == 2
+        assert primary not in holders
+    assert eng.consistency_audit() == []
+
+
+def test_promotion_failover_preserves_exactness(graph, ref, script):
+    queries = [op for op in script if op[0] == "query"]
+    eng = _engine(graph, ref, k=1)
+    want = [eng.query(q, probe_mode=m)[0] for _, q, m in queries]
+    victims = eng.handle_machine_failure(1)
+    assert victims                       # machine 1 owned shards
+    assert eng.replicas.promotions >= len(victims)
+    assert eng.consistency_audit() == []
+    assert all(mk != 1 for mk in eng.routing.values())
+    got = [eng.query(q, probe_mode=m)[0] for _, q, m in queries]
+    assert got == want
+    # redundancy was restored best-effort on the survivors
+    for sid, primary in eng.routing.items():
+        assert eng.replicas.holders(sid, eng.dead_machines) == \
+            [m for m in range(N_MACHINES)
+             if m != primary and m != 1][:1]
+
+
+def test_double_failure_with_k1_promotes_twice(graph, ref, script):
+    _, q, m = next(op for op in script if op[0] == "query")
+    eng = _engine(graph, ref, k=1)
+    want, _ = eng.query(q, probe_mode=m)
+    eng.handle_machine_failure(0)
+    eng.handle_machine_failure(2)        # re-replication after kill #1
+    assert eng.consistency_audit() == []  # makes this survivable
+    assert set(eng.routing.values()) == {1}
+    got, _ = eng.query(q, probe_mode=m)
+    assert got == want
+
+
+def test_last_live_machine_raises_typed_unavailable(graph, ref, script):
+    """Regression (satellite): killing the last live machine used to
+    die with a bare min()/KeyError deep in the balancer — it must be a
+    typed ClusterUnavailableError, and the engine must latch."""
+    _, q, m = next(op for op in script if op[0] == "query")
+    eng = _engine(graph, ref)            # k=0: legacy byte-image path
+    eng.handle_machine_failure(0)
+    eng.handle_machine_failure(1)
+    with pytest.raises(ClusterUnavailableError) as exc:
+        eng.handle_machine_failure(2)
+    assert exc.value.reason == "no-survivors"
+    # latched: every later operation raises the same typed error
+    for attempt in (lambda: eng.query(q, probe_mode=m),
+                    lambda: eng.query_batch([q]),
+                    lambda: eng.run_workload([q])):
+        with pytest.raises(ClusterUnavailableError):
+            attempt()
+
+
+def test_losing_a_shards_last_copy_raises_no_live_copy(graph, ref):
+    eng = _engine(graph, ref, k=1)
+    victim_sid = min(sid for sid, mk in eng.routing.items() if mk == 0)
+    eng.replicas.drop_shard(victim_sid)  # simulate the standby rotting
+    with pytest.raises(ClusterUnavailableError) as exc:
+        eng.handle_machine_failure(0)
+    assert exc.value.reason == "no-live-copy"
+    assert eng._unavailable == "no-live-copy"
+
+
+def test_dead_machine_is_idempotent_and_out_of_range_is_noop(graph, ref):
+    eng = _engine(graph, ref, k=1)
+    assert eng.handle_machine_failure(99) == []
+    first = eng.handle_machine_failure(1)
+    assert first
+    assert eng.handle_machine_failure(1) == []   # already dead
+
+
+# ------------------------------------------------------------------------- #
+# cache failover audit (satellite): nothing homed on a corpse
+# ------------------------------------------------------------------------- #
+
+@given(ops=st.lists(st.integers(min_value=0, max_value=4),
+                    min_size=2, max_size=7))
+@settings(max_examples=10, deadline=None)
+def test_cache_never_homes_on_dead_machine(graph, ref, script, ops):
+    """Interleave queries (warming both cache levels) with machine
+    kills: after EVERY op the cache audit must be clean — no slave
+    ValueCache entry, slave-memory result or master location pointer
+    may survive on a dead machine."""
+    queries = [op for op in script if op[0] == "query"]
+    eng = _engine(graph, ref, k=1)
+    for tok in ops:
+        try:
+            if tok <= 2:                       # kill machine 0/1/2
+                eng.handle_machine_failure(tok)
+            else:                              # run (and re-run) queries
+                _, q, m = queries[tok - 3]
+                eng.query(q, probe_mode=m)
+                eng.query(q, probe_mode=m)     # second hit exercises reuse
+        except ClusterUnavailableError:
+            break
+        assert eng.cache_audit() == []
+        assert eng.consistency_audit() == []
+
+
+# ------------------------------------------------------------------------- #
+# the chaos oracle: >= 20 seeded schedules, bit-identical or typed
+# ------------------------------------------------------------------------- #
+
+def _hand_schedules():
+    """Targeted schedules pinning every hook point — including the two
+    the issue calls out by name: mid-megabatch (HOOK_BATCH) and
+    mid-apply_updates (HOOK_UPDATE_STAGE / HOOK_UPDATE_COMMIT)."""
+    mk = FaultSpec
+    return [
+        ("crash-query", [mk(kind=CRASH, hook=HOOK_QUERY, at=2,
+                            machine=1)]),
+        ("crash-query-unpinned", [mk(kind=CRASH, hook=HOOK_QUERY, at=5)]),
+        ("crash-mid-megabatch", [mk(kind=CRASH, hook=HOOK_BATCH, at=1,
+                                    machine=2)]),
+        ("crash-mid-update-stage", [mk(kind=CRASH, hook=HOOK_UPDATE_STAGE,
+                                       at=1, machine=0)]),
+        ("crash-pre-update-commit", [mk(kind=CRASH,
+                                        hook=HOOK_UPDATE_COMMIT, at=1,
+                                        machine=2)]),
+        ("crash-rebalance", [mk(kind=CRASH, hook=HOOK_REBALANCE, at=1,
+                                machine=1)]),
+        ("link-storm", [mk(kind=TORN, hook=HOOK_TRANSFER, at=1, times=2),
+                        mk(kind=CORRUPT, hook=HOOK_TRANSFER, at=4),
+                        mk(kind=TIMEOUT, hook=HOOK_TRANSFER, at=6),
+                        mk(kind=SLOW, hook=HOOK_TRANSFER, at=8,
+                           factor=9.0)]),
+        ("update-timeout-retry", [mk(kind=TIMEOUT, hook=HOOK_TRANSFER,
+                                     at=1, times=MAX_RETRIES + 1)]),
+        ("crash-plus-dirty-links", [mk(kind=CRASH, hook=HOOK_QUERY, at=3,
+                                       machine=0),
+                                    mk(kind=TORN, hook=HOOK_TRANSFER,
+                                       at=1, times=3),
+                                    mk(kind=CORRUPT, hook=HOOK_TRANSFER,
+                                       at=5, times=2)]),
+        ("slow-everything", [mk(kind=SLOW, hook=HOOK_TRANSFER, at=1,
+                                times=10, factor=8.0)]),
+    ]
+
+
+CHAOS_CASES = ([(name, FaultPlan(faults, seed=i), 1 + i % 2)
+                for i, (name, faults) in enumerate(_hand_schedules())]
+               + [(f"random-{s}",
+                   random_fault_plan(s, n_faults=5, n_machines=N_MACHINES),
+                   1 + s % 2)
+                  for s in range(12)])
+assert len(CHAOS_CASES) >= 20
+
+
+@pytest.mark.parametrize("name,plan,k", CHAOS_CASES,
+                         ids=[c[0] for c in CHAOS_CASES])
+def test_chaos_oracle_bit_identical_to_fault_free(graph, ref, script,
+                                                  baseline, name, plan, k):
+    """Schedules bounded to < N_MACHINES crashes can never lose quorum
+    under replication: the outcome must be completion with answers
+    bit-identical to the fault-free baseline — full match lists for
+    query/batch ops, the deterministic n_matches counter for epochs."""
+    eng = _engine(graph, ref, k=k)
+    answers, outcome = run_script(eng, script, plan=plan.replay())
+    assert outcome == "completed", f"{name}: {outcome}"
+    assert answers == baseline, f"{name}: answers diverged"
+
+
+def test_chaos_oracle_run_script_consumes_the_plan(graph, ref, script,
+                                                   baseline):
+    # sanity for the harness itself: a pinned crash really fires, and
+    # run_script detaches the plan afterwards
+    plan = FaultPlan([FaultSpec(kind=CRASH, hook=HOOK_QUERY, at=2,
+                                machine=1)], seed=0)
+    eng = _engine(graph, ref, k=1)
+    answers, outcome = run_script(eng, script, plan=plan)
+    assert outcome == "completed"
+    assert answers == baseline
+    assert [(f.kind, f.machine) for _, _, f in plan.fired] == [(CRASH, 1)]
+    assert 1 in eng.dead_machines
+    assert eng.chaos is None
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_oracle_quorum_loss_is_typed_with_identical_prefix(
+        graph, ref, script, baseline, seed):
+    """All-machines-crash schedules: the run must end in a typed
+    unavailability (reason machine-checkable), with every answer
+    produced BEFORE the loss bit-identical to the baseline prefix."""
+    plan = FaultPlan([FaultSpec(kind=CRASH, hook=HOOK_QUERY, at=2 + i,
+                                machine=(seed + i) % N_MACHINES)
+                     for i in range(N_MACHINES)], seed=seed)
+    eng = _engine(graph, ref)            # k=0: no standby to promote
+    answers, outcome = run_script(eng, script, plan=plan)
+    assert outcome.startswith("unavailable@"), outcome
+    assert eng._unavailable in ("no-survivors", "no-live-copy")
+    assert answers == baseline[:len(answers)]

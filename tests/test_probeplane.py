@@ -148,7 +148,8 @@ def test_engine_invalidation_after_migration_and_failure():
     sid = next(iter(eng.shards))
     src = eng.routing[sid]
     tgt = next(k for k in range(len(eng.specs)) if k != src)
-    hot_migrate(eng.shards, [(sid, src, tgt)], eng.routing)
+    hot_migrate(eng.shards, [(sid, src, tgt)], eng.routing,
+                rng=np.random.default_rng(0))
 
     q = random_walk_query(g, 4, seed=123)
     m_host, _ = eng.query(q, probe_mode="host")
