@@ -6,6 +6,7 @@
 from repro.data.synthetic import make_workload, nws_graph
 from repro.dist.chaos import CRASH, HOOK_QUERY, FaultPlan, FaultSpec
 from repro.dist.cluster import DistributedGNNPE
+from repro.dist.router import QueryBudget
 from repro.train.elastic import WorkerFailover
 
 
@@ -50,6 +51,26 @@ def main() -> None:
     print(f"chaos: crashed machine 0 mid-workload "
           f"({engine.replicas.stats()['promotions']} shards promoted "
           f"from replicas) — answers exact, state audit clean")
+
+    # --- degraded-mode serving: standbys answer, promotion deferred -- #
+    eng = DistributedGNNPE.build(graph, n_machines=4,
+                                 shards_per_machine=4, seed=2,
+                                 assignment=engine.assignment,
+                                 params=engine.params, replication=2,
+                                 failover_mode="route")
+    want = len(eng.query(queries[0], probe_mode="host")[0])
+    eng.use_cache = False                # measure real degraded reads
+    eng.handle_machine_failure(1)        # no promotion, no re-sync
+    mm, tel = eng.query(queries[0], budget=QueryBudget(hedge_after_ms=8.0))
+    assert len(mm) == want, "degraded read changed the answer"
+    print(f"degraded-mode: machine 1 dead, answer served from standbys "
+          f"(state={eng.router.state()}, "
+          f"degraded={tel.outcome.served_degraded}, "
+          f"standby reads={eng.router.stats()['standby_reads']}, "
+          f"0 promotions) — bit-identical")
+    rec = eng.recover()                  # promotion off the read path
+    print(f"recover(): promoted {rec['promoted']} -> "
+          f"state={eng.router.state()}")
 
 
 if __name__ == "__main__":

@@ -2,8 +2,9 @@
 
 from repro.analysis.rules import (rpr001_buckets, rpr002_epoch, rpr003_crc,
                                   rpr004_wallclock, rpr005_sync,
-                                  rpr006_contract, rpr007_chaosrng)
+                                  rpr006_contract, rpr007_chaosrng,
+                                  rpr008_router)
 
 __all__ = ["rpr001_buckets", "rpr002_epoch", "rpr003_crc",
            "rpr004_wallclock", "rpr005_sync", "rpr006_contract",
-           "rpr007_chaosrng"]
+           "rpr007_chaosrng", "rpr008_router"]

@@ -1,0 +1,86 @@
+"""RPR008: serving-path code must resolve shards through the router.
+
+Degraded-mode serving (ISSUE 9) holds its availability contract —
+"every schedule with a live copy gets the exact answer" — only if the
+query path never bypasses :class:`~repro.dist.router.ShardRouter`.  A
+direct ``self.shards[sid]`` / ``self.routing[sid]`` read inside a
+serving function silently reads the PRIMARY's image even when that
+primary is dead and a CRC-verified standby holds the live copy: the
+fault-free run still passes, and the regression only surfaces as an
+availability hole under a crash schedule.  Build, failover, migration
+and audit code legitimately own those dictionaries; the read side of
+query execution must go through ``router.resolve`` / ``router.read``
+(which also attributes comm bytes to the machine that actually served).
+
+Heuristic: inside ``src/repro/dist/`` functions on the serving path
+(by name — query/probe/consume/accounting stages), any Load-context
+subscript of an attribute named ``shards`` or ``routing`` is flagged.
+Writes (``self.shards[sid] = ...``) and every non-serving function are
+untouched, and ``router.py`` itself is exempt — the router is the one
+component allowed to dereference the index.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.registry import Rule, register
+
+SERVING_FUNCS = frozenset({
+    "query", "query_batch", "_execute_serial", "_consume_query",
+    "_mb_dispatch", "_mb_consume", "_plan_probe", "_account_rows",
+    "_finish_query",
+})
+
+INDEX_ATTRS = ("shards", "routing")
+
+
+def _walk_own(func: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function body without descending into nested defs (those
+    are visited by their own iter_functions entry)."""
+    stack = list(ast.iter_child_nodes(func))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _iter_functions(tree: ast.AST) -> Iterator[ast.AST]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+@register
+class RouterBypassRule(Rule):
+    id = "RPR008"
+    name = "router-resolution"
+    scope = ("src/repro/dist/*.py",)
+
+    def check(self, ctx):
+        if ctx.rel.endswith("/router.py"):
+            return
+        for func in _iter_functions(ctx.tree):
+            if func.name not in SERVING_FUNCS:
+                continue
+            for node in _walk_own(func):
+                if not isinstance(node, ast.Subscript):
+                    continue
+                if not isinstance(node.ctx, ast.Load):
+                    continue
+                val = node.value
+                if not (isinstance(val, ast.Attribute)
+                        and val.attr in INDEX_ATTRS):
+                    continue
+                yield self.finding(
+                    ctx, node,
+                    f"serving function '{func.name}' subscripts "
+                    f"'.{val.attr}' directly — this bypasses the "
+                    "ShardRouter and reads the primary's image even "
+                    "when a standby holds the only live copy",
+                    hint="resolve through self.router.resolve(sid) / "
+                         "self.router.read(sid, ...) on the query path")

@@ -182,6 +182,7 @@ class TwoLevelCache:
         self.cross_node_accesses = 0
         self.total_accesses = 0
         self.serves = 0             # accesses that returned data (any tier)
+        self.degraded_admissions = 0   # results admitted during degraded serving
 
     def register(self, key: Hashable, slave_id: int) -> None:
         self.location[key] = slave_id
@@ -248,8 +249,18 @@ class TwoLevelCache:
 
     def admit(self, key: Hashable, data: Any, value: float, avg_deg: float,
               slave_id: int, hit_rate: float, latency_ms: float,
-              master_threshold: float = 0.0) -> None:
-        """Admission: slave cache always considers; master takes high-V paths."""
+              master_threshold: float = 0.0, degraded: bool = False) -> None:
+        """Admission: slave cache always considers; master takes high-V paths.
+
+        ``degraded`` marks results produced while at least one probed
+        shard was served from a standby replica.  The *data* is still
+        exact (standby images are bit-identical by construction), so the
+        entry is admitted normally — the flag only feeds the
+        ``degraded_admissions`` counter so operators can see how much of
+        the cache was populated during a degraded window.
+        """
+        if degraded:
+            self.degraded_admissions += 1
         self.slaves[slave_id].put(key, data, value, avg_deg, hit_rate,
                                   latency_ms)
         if value >= master_threshold:

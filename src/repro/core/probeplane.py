@@ -341,6 +341,18 @@ class MegaAssembly:
                     return True
         return False
 
+    def stale_keys(self, live_trees: dict) -> set:
+        """The exact ``{(sid, length)}`` lanes whose packed tree no
+        longer matches the live index — so a consumer can fall back
+        *per shard* (re-probe just those lanes on the host) instead of
+        discarding the whole batch the way :meth:`stale` forces."""
+        out = set()
+        for blk in self.blocks.values():
+            for sid, tree in zip(blk.sids, blk.trees):
+                if live_trees.get((sid, blk.length)) is not tree:
+                    out.add((sid, blk.length))
+        return out
+
 
 @dataclasses.dataclass
 class MegaInFlight:

@@ -36,11 +36,16 @@ Hook-point map (where the engine/link fires each hook):
   HOOK_REBALANCE              before a rebalance migration batch executes
   HOOK_MIGRATE_PREPARE        before each shard's prepare-phase transfer
   HOOK_TRANSFER               every simulated link transfer attempt
+  HOOK_READ                   every routed shard read (``ShardRouter.read``)
   ==========================  =============================================
 
 Engine hooks (``cluster.*``) accept CRASH events — the engine reacts by
-running crash-consistent failover.  Link hooks (``migration.*``) accept
-CORRUPT / TIMEOUT / SLOW / TORN events, applied to the in-flight bytes.
+running crash-consistent failover.  Link hooks (``migration.*`` and
+``router.read``) accept CORRUPT / TIMEOUT / SLOW / TORN events, applied
+to the in-flight bytes (for routed reads: the probe RPC — SLOW/TIMEOUT
+stall an attempt and trigger the hedge/retry budget in
+``repro.dist.router``; CORRUPT/TORN are caught by the same CRC-retry
+discipline and simply cost a retransmission).
 """
 
 from __future__ import annotations
@@ -52,9 +57,9 @@ import numpy as np
 __all__ = ["CRASH", "CORRUPT", "TIMEOUT", "SLOW", "TORN", "FAULT_KINDS",
            "HOOK_QUERY", "HOOK_BATCH", "HOOK_UPDATE_STAGE",
            "HOOK_UPDATE_COMMIT", "HOOK_REBALANCE", "HOOK_MIGRATE_PREPARE",
-           "HOOK_TRANSFER", "ENGINE_HOOKS", "LINK_HOOKS", "ALL_HOOKS",
-           "ClusterUnavailableError", "TransferTimeoutError",
-           "FaultSpec", "FaultPlan", "random_fault_plan",
+           "HOOK_TRANSFER", "HOOK_READ", "ENGINE_HOOKS", "LINK_HOOKS",
+           "ALL_HOOKS", "ClusterUnavailableError", "TransferTimeoutError",
+           "FaultSpec", "FaultPlan", "random_fault_plan", "Unavailable",
            "default_script", "run_script", "script_queries"]
 
 # ---------------------------------------------------------------------- #
@@ -75,10 +80,11 @@ HOOK_UPDATE_COMMIT = "cluster.updates.commit"
 HOOK_REBALANCE = "cluster.rebalance"
 HOOK_MIGRATE_PREPARE = "migration.prepare"
 HOOK_TRANSFER = "migration.transfer"
+HOOK_READ = "router.read"
 
 ENGINE_HOOKS = (HOOK_QUERY, HOOK_BATCH, HOOK_UPDATE_STAGE,
                 HOOK_UPDATE_COMMIT, HOOK_REBALANCE)
-LINK_HOOKS = (HOOK_MIGRATE_PREPARE, HOOK_TRANSFER)
+LINK_HOOKS = (HOOK_MIGRATE_PREPARE, HOOK_TRANSFER, HOOK_READ)
 ALL_HOOKS = ENGINE_HOOKS + LINK_HOOKS
 
 
@@ -86,11 +92,18 @@ class ClusterUnavailableError(RuntimeError):
     """Quorum genuinely lost: no live machine remains, or some shard's
     last copy (primary + every replica) is on dead machines.  The ONLY
     acceptable alternative to a bit-identical answer — never a wrong or
-    partial result.  ``reason`` is machine-checkable for the oracle."""
+    partial result.  ``reason`` is machine-checkable for the oracle;
+    ``sids``/``machines`` name the shards whose every copy is dead and
+    the dead machines involved, so callers can assert *which* quorum was
+    lost (and the router can prove a live copy really did not exist)."""
 
-    def __init__(self, message: str, reason: str = "") -> None:
+    def __init__(self, message: str, reason: str = "",
+                 sids: "tuple | list" = (),
+                 machines: "tuple | list" = ()) -> None:
         super().__init__(message)
         self.reason = reason
+        self.sids = tuple(sids)
+        self.machines = tuple(machines)
 
 
 class TransferTimeoutError(RuntimeError):
@@ -104,6 +117,20 @@ class TransferTimeoutError(RuntimeError):
         super().__init__(message)
         self.virtual_ms = virtual_ms
         self.attempts = attempts
+
+
+@dataclasses.dataclass(frozen=True)
+class Unavailable:
+    """Per-query answer slot for a typed failure in a degraded-mode
+    script run (``run_script(on_unavailable="continue")``).  Records the
+    structured fields of the :class:`ClusterUnavailableError` (or
+    admission rejection) the query raised, so the availability oracle
+    can assert the loss was genuine for exactly those shards while the
+    rest of the script keeps serving bit-identical answers."""
+
+    reason: str = ""
+    sids: tuple = ()
+    machines: tuple = ()
 
 
 # ---------------------------------------------------------------------- #
@@ -274,9 +301,19 @@ def script_queries(ops: list) -> int:
     return n
 
 
+def _one_query(engine, q, probe_mode: str, as_count: bool):
+    """One routed query in degraded-continue mode: the bit-identical
+    answer, or an :class:`Unavailable` slot carrying the typed loss."""
+    try:
+        m, tel = engine.query(q, probe_mode=probe_mode)
+    except ClusterUnavailableError as exc:
+        return Unavailable(exc.reason, exc.sids, exc.machines)
+    return int(tel.n_matches) if as_count else list(m)
+
+
 def run_script(engine, ops: list, plan: "FaultPlan | None" = None,
-               max_op_retries: int = 4,
-               audit: bool = True) -> tuple[list, str]:
+               max_op_retries: int = 4, audit: bool = True,
+               on_unavailable: str = "stop") -> tuple[list, str]:
     """Execute a deterministic op script, optionally under a FaultPlan.
 
     Returns ``(answers, outcome)``:
@@ -288,12 +325,27 @@ def run_script(engine, ops: list, plan: "FaultPlan | None" = None,
         ``i`` raised :class:`ClusterUnavailableError` (the oracle then
         checks the loss was genuine and the answer prefix bit-identical).
 
+    ``on_unavailable`` selects the failure discipline:
+
+      * ``"stop"`` (PR-8 behaviour) — the first typed unavailability ends
+        the script; the oracle checks the answer *prefix*.
+      * ``"continue"`` (degraded-mode serving) — a query that raises the
+        typed error contributes an :class:`Unavailable` slot and the
+        script keeps going; a failed ``batch``/``epoch`` op falls back to
+        per-query serial execution (bit-identical by the cross-mode
+        contract), so only the queries whose own shards lost every copy
+        degrade to typed slots.  A failed ``update`` op still stops the
+        script: the baseline applied it, so later answers could not be
+        compared.
+
     Transactions aborted by :class:`TransferTimeoutError` are retried up
     to ``max_op_retries`` times — the abort left the engine fully-old,
     so a retry is safe; one-shot faults won't re-fire.  With ``audit``
     the engine's ``consistency_audit`` must be clean after every op
     (zero torn state).
     """
+    if on_unavailable not in ("stop", "continue"):
+        raise ValueError(f"unknown on_unavailable {on_unavailable!r}")
     if plan is not None:
         engine.set_fault_plan(plan)
     answers: list = []
@@ -303,11 +355,25 @@ def run_script(engine, ops: list, plan: "FaultPlan | None" = None,
             kind = op[0]
             try:
                 if kind == "query":
-                    m, _ = engine.query(op[1], probe_mode=op[2])
-                    answers.append(list(m))
-                elif kind == "batch":
-                    for m, _ in engine.query_batch(list(op[1])):
+                    if on_unavailable == "continue":
+                        answers.append(_one_query(engine, op[1], op[2],
+                                                  as_count=False))
+                    else:
+                        m, _ = engine.query(op[1], probe_mode=op[2])
                         answers.append(list(m))
+                elif kind == "batch":
+                    try:
+                        for m, _ in engine.query_batch(list(op[1])):
+                            answers.append(list(m))
+                    except ClusterUnavailableError:
+                        if on_unavailable == "stop":
+                            raise
+                        # per-shard degradation: re-issue each batch
+                        # member serially so only the queries whose own
+                        # shards lost quorum degrade to typed slots
+                        answers.extend(_one_query(engine, q, "plane",
+                                                  as_count=False)
+                                       for q in op[1])
                 elif kind == "update":
                     for _ in range(max_op_retries):
                         try:
@@ -320,16 +386,24 @@ def run_script(engine, ops: list, plan: "FaultPlan | None" = None,
                             f"op {i}: update kept timing out after "
                             f"{max_op_retries} attempts")
                 elif kind == "epoch":
-                    tels = engine.run_workload(list(op[1]), rebalance=True,
-                                               probe_mode=op[2],
-                                               batch_size=op[3])
-                    answers.extend(int(t.n_matches) for t in tels)
+                    try:
+                        tels = engine.run_workload(list(op[1]),
+                                                   rebalance=True,
+                                                   probe_mode=op[2],
+                                                   batch_size=op[3])
+                        answers.extend(int(t.n_matches) for t in tels)
+                    except ClusterUnavailableError:
+                        if on_unavailable == "stop":
+                            raise
+                        answers.extend(_one_query(engine, q, op[2],
+                                                  as_count=True)
+                                       for q in op[1])
                 else:
                     raise ValueError(f"unknown op kind {kind!r}")
             except ClusterUnavailableError:
                 outcome = f"unavailable@{i}"
                 break
-            if audit:
+            if audit and getattr(engine, "_unavailable", None) is None:
                 bad = engine.consistency_audit()
                 assert not bad, f"torn state after op {i}: {bad}"
     finally:

@@ -66,8 +66,9 @@ from repro.dist.chaos import (CRASH, HOOK_BATCH, HOOK_QUERY, HOOK_REBALANCE,
                               HOOK_UPDATE_COMMIT, HOOK_UPDATE_STAGE,
                               ClusterUnavailableError, TransferTimeoutError)
 from repro.dist.migration import (LINK_BYTES_PER_MS, crc_transfer,
-                                  hot_migrate)
+                                  hot_migrate, migrate_with_retry)
 from repro.dist.replica import ReplicaSet
+from repro.dist.router import QueryBudget, QueryOutcome, Route, ShardRouter
 from repro.dist.partition import (Partition, edge_cut, metis_like_partition,
                                   size_balance)
 from repro.dist.shard import (Shard, apply_shard_delta, halo_region,
@@ -134,6 +135,9 @@ class QueryTelemetry:
     batch_size: int = 1           # queries sharing this query's launch
     plan_cache_hits: int = 0      # plan-artifact LRU hits (tables+embeds
                                   # reused from an earlier identical query)
+    outcome: QueryOutcome = dataclasses.field(default_factory=QueryOutcome)
+                                  # typed serving outcome (degraded-read /
+                                  # retry / hedge / deadline / health)
 
 
 @dataclasses.dataclass
@@ -188,7 +192,8 @@ class DistributedGNNPE:
               probe_mode: str | None = None,
               assignment: np.ndarray | None = None,
               params: dict | None = None,
-              replication: int = 0) -> "DistributedGNNPE":
+              replication: int = 0,
+              failover_mode: str = "promote") -> "DistributedGNNPE":
         """Offline build.  `assignment` / `params` inject a fixed
         partition assignment and pretrained GNN params instead of
         running the partitioner / trainer — the rebuild-equivalence
@@ -199,7 +204,20 @@ class DistributedGNNPE:
         `replication=k` keeps k anti-affine standby replicas of every
         shard (repro.dist.replica) — failover then promotes instead of
         rebuilding.  The default 0 preserves the legacy byte-image
-        failover path and pays zero replication overhead."""
+        failover path and pays zero replication overhead.
+
+        `failover_mode` picks the crash reaction with replication on:
+
+          * "promote" (PR-8 default) — a crash immediately promotes a
+            standby for every victim shard, inline with failover;
+          * "route" — degraded-mode serving: the crash only marks the
+            machine dead; reads are routed to live standbys *without*
+            promotion (bit-identical by the CRC-sync construction) and
+            promotion + re-replication are deferred to an explicit
+            `recover()` (or the next write/rebalance, which recovers
+            first).  No one-way unavailability latch: queries fail
+            typed only when a shard they NEED lost every copy.
+        """
         self = object.__new__(cls)
         # reprolint: disable=RPR004 -- build_s is a wall diagnostic
         t_build = time.perf_counter()
@@ -212,7 +230,11 @@ class DistributedGNNPE:
                                gnn_train_steps=gnn_train_steps, seed=seed,
                                halo_hops=halo_hops,
                                max_path_length=max_path_length,
-                               replication=replication)
+                               replication=replication,
+                               failover_mode=failover_mode)
+        if failover_mode not in ("promote", "route"):
+            raise ValueError(f"unknown failover_mode {failover_mode!r}")
+        self.failover_mode = failover_mode
         # default probe path: "host" (per-(path, shard) traversal),
         # "device" (PR-2 per-path slab launch), or "plane" (device-
         # resident planes, one fused launch per query plan).  The legacy
@@ -332,6 +354,10 @@ class DistributedGNNPE:
                 self.replicas.sync_full(sid, self.shards[sid],
                                         self.routing[sid],
                                         self.dead_machines, rng)
+        # 7c. degraded-mode serving: the router is the single resolver
+        #     for shard reads (primary-or-standby, RPR008) and owns the
+        #     HEALTHY/DEGRADED/BROWNOUT health state machine
+        self.router = ShardRouter(self)
         self._qclock = 0.0            # query counter (ids/features only)
         self._epoch = 0               # run_workload epochs (rebalance clock)
         self._last_migration_epoch = (self._epoch
@@ -659,7 +685,10 @@ class DistributedGNNPE:
             return []
         bad = self.cache_audit()
         for sid, mk in self.routing.items():
-            if mk in self.dead_machines:
+            if mk in self.dead_machines and self.failover_mode != "route":
+                # route mode defers promotion: a dead-routed shard is
+                # DEGRADED (standby-served) or LOST (typed per query),
+                # tracked by the router — not torn state
                 bad.append(f"shard {sid} routed to dead machine {mk}")
             if sid not in self.shards:
                 bad.append(f"routed shard {sid} has no shard object")
@@ -679,7 +708,8 @@ class DistributedGNNPE:
     # ------------------------------------------------------------------ #
     def query(self, query: LabeledGraph, plan_mode: str = "pescore",
               device_probe: bool | None = None,
-              probe_mode: str | None = None
+              probe_mode: str | None = None,
+              budget: QueryBudget | None = None
               ) -> tuple[list[tuple], QueryTelemetry]:
         """Exact matches of `query` in the data graph + telemetry.
 
@@ -696,6 +726,11 @@ class DistributedGNNPE:
 
         The legacy device_probe bool maps True -> "device", False ->
         "host"; None falls back to the engine default set at build time.
+
+        `budget` threads the degraded-mode serving knobs (deadline /
+        read retries / hedging / brownout priority — repro.dist.router)
+        through the probe and join stages; None uses the defaults (no
+        deadline, priority 1 = never shed).
         """
         if probe_mode is None:
             if device_probe is None:
@@ -708,17 +743,21 @@ class DistributedGNNPE:
         self._fire_hook(HOOK_QUERY)
         tel = QueryTelemetry(plan_mode=plan_mode, probe_mode=probe_mode,
                              device_probe=probe_mode != "host")
+        # admission control AFTER the hook: a crash-induced brownout
+        # sheds (typed) the very query that observed it
+        tel.outcome.health = self.router.admit(budget)
         self._qclock += 1.0
         key = self._query_key(query)
 
         cached = self._cache_lookup(key, tel)
         if cached is not None:
             return cached, tel
-        return self._execute_serial(query, key, tel, plan_mode, probe_mode)
+        return self._execute_serial(query, key, tel, plan_mode, probe_mode,
+                                    budget)
 
     def _execute_serial(self, query: LabeledGraph, key,
                         tel: QueryTelemetry, plan_mode: str,
-                        probe_mode: str
+                        probe_mode: str, budget: QueryBudget | None = None
                         ) -> tuple[list[tuple], QueryTelemetry]:
         """`query`'s post-cache-miss body (plan -> probe -> join).
 
@@ -740,6 +779,9 @@ class DistributedGNNPE:
         machine_ms: dict[int, float] = defaultdict(float)
         qid = int(self._qclock)
         rows_by_machine: dict[int, int] = defaultdict(int)
+        # one routed read per (query, shard): the router resolves the
+        # primary-or-standby serving copy under the retry/hedge budget
+        routes: dict[int, Route] = {}
 
         # plane mode: ONE fused launch for the whole plan, up front.
         # Early-exited paths simply never read their precomputed rows
@@ -759,29 +801,42 @@ class DistributedGNNPE:
             qe = q_embs[ti][r]
             q_rev = _reverse_embedding(qe[None, :], l + 1)[0]
             pos_mask = np.zeros((l + 1, n_d), dtype=bool)
-            # central node: root-MBR skip from the <1KB metadata, then
-            # gather the surviving shards for this path's probe
-            probes: list[tuple[int, Shard]] = []
-            for sid, shard in self.shards.items():
-                tree = shard.index.trees.get(l)
+            # central node: root-MBR skip from the <1KB metadata (every
+            # copy is CRC-identical, so this reads the master snapshot
+            # regardless of liveness), then ROUTE the surviving shards'
+            # probes to their live serving copies
+            probes: list[tuple[int, Route]] = []
+            for sid in sorted(self.shards):
+                tree = self.router.metadata(sid).trees.get(l)
                 if tree is None or tree.n_points == 0:
                     continue
                 if _root_skip(tree, qe, q_rev):
                     tel.shards_skipped += 1
                     continue
-                probes.append((sid, shard))
+                rt = routes.get(sid)
+                if rt is None:
+                    rt = routes[sid] = self.router.read(sid, budget, tel)
+                probes.append((sid, rt))
             if probes and plan_hits is not None:
                 # read this path's survivors from the plan-wide launch;
                 # same deterministic service-time attribution as the
-                # per-path device branch below
+                # per-path device branch below.  Degraded shards have no
+                # lane in the launch (their primary's planes died with
+                # it): fall back PER SHARD to a host probe of the
+                # standby copy, same deterministic virtual cost.
                 base, res = plan_hits["row_of"][(ti, r)], plan_hits["res"]
                 probe_ms, verts_of = {}, {}
-                for sid, shard in probes:
-                    idx_f = res.hits(sid, l, base)
-                    idx_r = res.hits(sid, l, base + 1)
-                    verts_of[sid], _ = _scatter_hits(
-                        shard.index.embedded[l], idx_f, idx_r)
-                    probe_ms[sid] = (shard.index.trees[l].n_points
+                for sid, rt in probes:
+                    index = rt.shard.index
+                    if rt.degraded or sid not in plan_hits["sids"]:
+                        verts_of[sid], _ = path_candidates(index, qe, l)
+                        tel.probe_launches += 1
+                    else:
+                        idx_f = res.hits(sid, l, base)
+                        idx_r = res.hits(sid, l, base + 1)
+                        verts_of[sid], _ = _scatter_hits(
+                            index.embedded[l], idx_f, idx_r)
+                    probe_ms[sid] = (index.trees[l].n_points
                                      * VIRTUAL_MS_PER_LEAF)
             elif probes and probe_mode == "device":
                 # pad all probed shards into one [S, max_leaves, D] slab
@@ -793,32 +848,36 @@ class DistributedGNNPE:
                 # machine without poisoning the load telemetry.
                 bs: dict[str, int] = {}
                 results = batched_path_candidates(
-                    [shard.index for _, shard in probes], qe, l,
+                    [rt.shard.index for _, rt in probes], qe, l,
                     byte_stats=bs)
                 tel.probe_launches += 1
                 tel.probe_h2d_bytes += bs.get("h2d_bytes", 0)
                 tel.probe_d2h_bytes += bs.get("d2h_bytes", 0)
-                probe_ms = {sid: s.index.trees[l].n_points
-                            * VIRTUAL_MS_PER_LEAF for sid, s in probes}
+                probe_ms = {sid: rt.shard.index.trees[l].n_points
+                            * VIRTUAL_MS_PER_LEAF for sid, rt in probes}
                 verts_of = {sid: verts
                             for (sid, _), (verts, _) in zip(probes, results)}
             else:
                 probe_ms, verts_of = {}, {}
-                for sid, shard in probes:
+                for sid, rt in probes:
                     # reprolint: disable=RPR004 -- probe_ms wall diag
                     t0 = time.perf_counter()
-                    verts_of[sid], _ = path_candidates(shard.index, qe, l)
+                    verts_of[sid], _ = path_candidates(rt.shard.index,
+                                                       qe, l)
                     # reprolint: disable=RPR004 -- probe_ms wall diag
                     probe_ms[sid] = (time.perf_counter() - t0) * 1e3
                     tel.probe_launches += 1
-            for sid, shard in probes:
+            for sid, rt in probes:
                 # shard-side filter against the candidate masks the
                 # master shipped with the probe: only surviving rows
-                # cross the network (what PE-score ordering optimizes)
+                # cross the network (what PE-score ordering optimizes);
+                # comm/CPU are attributed to the machine that actually
+                # SERVED the read (the standby when the primary is dead)
                 self._account_rows(sid, l, qv,
-                                   shard.global_ids[verts_of[sid]],
+                                   rt.shard.global_ids[verts_of[sid]],
                                    masks, probe_ms[sid], machine_ms,
-                                   rows_by_machine, qid, tel, pos_mask)
+                                   rows_by_machine, qid, tel, pos_mask,
+                                   machine=rt.machine)
             for i, qvi in enumerate(qv):
                 masks[qvi] &= pos_mask[i]
                 if not masks[qvi].any():
@@ -826,7 +885,8 @@ class DistributedGNNPE:
             tel.paths_executed += 1
 
         return self._finish_query(query, key, tel, masks, alive,
-                                  machine_ms, rows_by_machine, plan_ms)
+                                  machine_ms, rows_by_machine, plan_ms,
+                                  budget)
 
     # -------------------------------------------------------------- #
     # shared per-query execution pieces.  The serial probe paths and
@@ -885,14 +945,19 @@ class DistributedGNNPE:
 
     def _account_rows(self, sid: int, l: int, qv, gverts, masks,
                       probe_ms: float, machine_ms, rows_by_machine,
-                      qid: int, tel: QueryTelemetry, pos_mask) -> None:
+                      qid: int, tel: QueryTelemetry, pos_mask,
+                      machine: int | None = None) -> None:
         """One probed shard's running-mask filter + comm/CPU accounting.
 
         ``gverts`` are the shard's raw (or in-kernel pre-filtered)
         candidate rows as GLOBAL vertex ids aligned to query path `qv`;
         only rows surviving the running masks count as network traffic.
+        ``machine`` is the machine that actually served the read (the
+        router's primary-or-standby resolution) — service time and comm
+        bytes are attributed there, never blindly to the routing-table
+        primary (which may be dead under degraded-mode serving).
         """
-        mk = self.routing[sid]
+        mk = machine if machine is not None else self.router.primary(sid)
         service_ms = probe_ms / self.cpu_w[mk]
         if gverts.shape[0]:
             ok = np.ones(gverts.shape[0], dtype=bool)
@@ -914,7 +979,8 @@ class DistributedGNNPE:
 
     def _finish_query(self, query: LabeledGraph, key,
                       tel: QueryTelemetry, masks, alive: bool,
-                      machine_ms, rows_by_machine, plan_ms: float
+                      machine_ms, rows_by_machine, plan_ms: float,
+                      budget: QueryBudget | None = None
                       ) -> tuple[list[tuple], QueryTelemetry]:
         """Join + latency attribution + cache homing/admission.
 
@@ -933,7 +999,15 @@ class DistributedGNNPE:
         tel.n_matches = len(matches)
         comm_ms = tel.comm_bytes / LINK_BYTES_PER_MS
         tel.latency_ms += (max(machine_ms.values(), default=0.0)
-                           + comm_ms + plan_ms + join_ms + 0.05)
+                           + comm_ms + plan_ms + join_ms + 0.05
+                           + tel.outcome.stall_ms)
+        if (budget is not None and budget.timeout_ms is not None
+                and tel.latency_ms > budget.timeout_ms):
+            # soft breach: the answer is already exact and is returned;
+            # the typed marker lets SLO accounting see the miss (a HARD
+            # breach — stall alone exceeding the budget mid-read —
+            # raises QueryDeadlineExceeded from the router instead)
+            tel.outcome.deadline_exceeded = True
         live_rows = {k: v for k, v in rows_by_machine.items()
                      if k not in self.dead_machines}
         if live_rows:
@@ -944,7 +1018,8 @@ class DistributedGNNPE:
                         None)
         self._observe_cache(key, hit=False, matched=bool(matches),
                             latency_ms=tel.latency_ms,
-                            result=matches, slave_id=home)
+                            result=matches, slave_id=home,
+                            degraded=tel.outcome.served_degraded)
         return matches, tel
 
     # -------------------------------------------------------------- #
@@ -1005,13 +1080,21 @@ class DistributedGNNPE:
         repacked before use by the identity check in ClusterPlanes.
         """
         lengths = sorted({tables[ti].length for ti, _ in order})
+        # degraded shards (primary dead, promotion deferred) have no
+        # resident planes to assemble — their probes fall back per shard
+        # to a host read of the standby copy in the path loop
+        degraded = self.router.degraded_sids()
         entries = []
+        planned: set[int] = set()
         for sid in sorted(self.shards):
-            index = self.shards[sid].index
+            if sid in degraded:
+                continue
+            index = self.router.metadata(sid)
             for l in lengths:
                 tree = index.trees.get(l)
                 if tree is not None and tree.n_points:
                     entries.append((sid, l, tree))
+                    planned.add(sid)
         if not entries:
             return None
         qrows: list[tuple[np.ndarray, int]] = []
@@ -1031,13 +1114,18 @@ class DistributedGNNPE:
         # metadata, and the telemetry must show that amortization
         tel.probe_h2d_bytes += self.planes.stats["h2d_bytes"] - h2d0
         tel.probe_d2h_bytes += self.planes.stats["d2h_bytes"] - d2h0
-        return {"res": res, "row_of": row_of}
+        return {"res": res, "row_of": row_of, "sids": planned}
 
     def _observe_cache(self, key, hit: bool, matched: bool,
                        latency_ms: float, result=None,
-                       slave_id: int | None = 0) -> None:
+                       slave_id: int | None = 0,
+                       degraded: bool = False) -> None:
         """slave_id=None means no live machine can hold the result:
-        feature tracking still runs, admission is skipped."""
+        feature tracking still runs, admission is skipped.  ``degraded``
+        marks results computed from standby reads — admitted normally
+        (they are bit-identical by construction) but counted by the
+        cache so the availability bench can report how much of the
+        working set was filled while serving degraded."""
         self.tracker.record_query(self._qclock, [key], {key: matched})
         feats = np.asarray(self.tracker.features(key), np.float32)
         self.aw.observe(feats, 1.0 if hit else 0.0)
@@ -1052,7 +1140,8 @@ class DistributedGNNPE:
                              avg_deg=float(self.graph.avg_degree()),
                              slave_id=slave_id,
                              hit_rate=self.cache.hit_rate,
-                             latency_ms=latency_ms)
+                             latency_ms=latency_ms,
+                             degraded=degraded)
         if self._defer_aw:
             # epoch-batched Algorithm-5: record the training signal; one
             # update is applied at the end of the run_workload epoch
@@ -1064,7 +1153,8 @@ class DistributedGNNPE:
     # megabatch execution (multi-query fused probe launches)
     # ------------------------------------------------------------------ #
     def query_batch(self, queries: list[LabeledGraph],
-                    plan_mode: str = "pescore"
+                    plan_mode: str = "pescore",
+                    budget: QueryBudget | None = None
                     ) -> list[tuple[list[tuple], QueryTelemetry]]:
         """Execute B queries with ONE fused multi-query probe launch.
 
@@ -1079,18 +1169,26 @@ class DistributedGNNPE:
         bytes are attributed to the batch's FIRST query.  If a migration
         or failover replaced a shard index between dispatch and consume,
         the whole batch transparently re-runs on the serial plane path.
+
+        `budget` applies batch-wide: one admission decision at dispatch
+        (the whole batch is shed together under brownout) and the same
+        deadline / read-retry knobs for every member query.
         """
         self._check_available()
-        return self._mb_consume(self._mb_dispatch(list(queries), plan_mode))
+        return self._mb_consume(self._mb_dispatch(list(queries), plan_mode,
+                                                  budget))
 
-    def _mb_dispatch(self, batch: list[LabeledGraph], plan_mode: str) -> dict:
+    def _mb_dispatch(self, batch: list[LabeledGraph], plan_mode: str,
+                     budget: QueryBudget | None = None) -> dict:
         """Plan every query of a batch and launch the fused probe
         WITHOUT blocking on it (JAX async dispatch): the returned flight
         is consumed later, overlapping device probing with host work."""
+        health = self.router.admit(budget)
         items = []
         for query in batch:
             tel = QueryTelemetry(plan_mode=plan_mode, probe_mode="plane",
                                  device_probe=True, batch_size=len(batch))
+            tel.outcome.health = health
             key = self._query_key(query)
             if self._cache_peek(key):
                 # consume's (authoritative) lookup will serve this from
@@ -1113,15 +1211,22 @@ class DistributedGNNPE:
                               alive=all(m.any() for m in masks0),
                               plan_ms=plan_ms, qrow_of={}, peeked=False))
 
+        # degraded shards (primary dead, promotion deferred under route
+        # failover) have no resident planes — they get no lane in the
+        # flight and fall back per shard in _consume_query
+        degraded = self.router.degraded_sids()
         entries = []
         for sid in sorted(self.shards):
-            for l, tree in sorted(self.shards[sid].index.trees.items()):
+            if sid in degraded:
+                continue
+            index = self.router.metadata(sid)
+            for l, tree in sorted(index.trees.items()):
                 if tree is not None and tree.n_points:
                     entries.append((sid, l, tree))
         flight, h2d = None, 0
         if entries and any(it["alive"] and it["order"] for it in items):
             def gverts_fn(sid, l, tree):
-                shard = self.shards[sid]
+                shard = self.router.resolve(sid).shard
                 return shard.global_ids[
                     shard.index.embedded[l].vertices[tree.perm]]
             h2d0 = self.planes.stats["h2d_bytes"]
@@ -1163,7 +1268,8 @@ class DistributedGNNPE:
                     mask_bits)
             h2d = self.planes.stats["h2d_bytes"] - h2d0
         return {"items": items, "flight": flight, "plan_mode": plan_mode,
-                "h2d_bytes": h2d, "data_epoch": self._data_epoch}
+                "h2d_bytes": h2d, "data_epoch": self._data_epoch,
+                "budget": budget}
 
     def _mb_consume(self, mb: dict
                     ) -> list[tuple[list[tuple], QueryTelemetry]]:
@@ -1184,17 +1290,24 @@ class DistributedGNNPE:
         # intact); the assembly identity check below remains the
         # migration/failover backstop.
         stale = mb.get("data_epoch") != self._data_epoch
+        fb_keys: set = set()
         if not stale and flight is not None and flight.launches:
             live = {(sid, l): tree
                     for sid, shard in self.shards.items()
                     for l, tree in shard.index.trees.items()}
-            stale = flight.assembly.stale(live)
+            # per-shard staleness: only the (sid, length) slabs whose
+            # index moved under the launch (migration / failover) fall
+            # back to host probes of the routed copy — the rest of the
+            # batch keeps its fused results.  A stale EPOCH (streaming
+            # update) still invalidates the whole batch above, because
+            # the packed masks and planned keys reference the old graph.
+            fb_keys = flight.assembly.stale_keys(live)
         if stale:
-            # an index moved under the dispatched launch (migration /
-            # failover / apply_updates mid-batch): the serial plane path
-            # repacks on live state and returns bit-identical results
+            # the graph changed under the dispatched launch: the serial
+            # plane path repacks on live state, bit-identical results
             return [self.query(it["query"], plan_mode=mb["plan_mode"],
-                               probe_mode="plane") for it in items]
+                               probe_mode="plane", budget=mb.get("budget"))
+                    for it in items]
         res = None
         d2h, h2d_sel = 0, 0
         if flight is not None and flight.launches:
@@ -1204,7 +1317,8 @@ class DistributedGNNPE:
             h2d_sel = self.planes.stats["h2d_bytes"] - h2d0
         out = []
         for i, it in enumerate(items):
-            matches, tel = self._consume_query(it, res)
+            matches, tel = self._consume_query(it, res, fb_keys,
+                                               mb.get("budget"))
             if i == 0:
                 # batch-attribution rule: the fused launch, the gather
                 # launch and all their bytes land on the FIRST query
@@ -1214,7 +1328,8 @@ class DistributedGNNPE:
             out.append((matches, tel))
         return out
 
-    def _consume_query(self, it: dict, res
+    def _consume_query(self, it: dict, res, fb_keys: set = frozenset(),
+                       budget: QueryBudget | None = None
                        ) -> tuple[list[tuple], QueryTelemetry]:
         """One query's post-probe execution, bit-identical to `query`."""
         query, key, tel = it["query"], it["key"], it["tel"]
@@ -1227,7 +1342,7 @@ class DistributedGNNPE:
             # (eviction race): nothing was packed for this query, so it
             # re-enters the serial plane body on this same cache miss
             return self._execute_serial(query, key, tel, tel.plan_mode,
-                                        "plane")
+                                        "plane", budget)
         tables, q_embs = it["tables"], it["q_embs"]
         masks = [m.copy() for m in it["masks0"]]
         alive = it["alive"]
@@ -1235,6 +1350,7 @@ class DistributedGNNPE:
         machine_ms: dict[int, float] = defaultdict(float)
         qid = int(self._qclock)
         rows_by_machine: dict[int, int] = defaultdict(int)
+        routes: dict[int, Route] = {}
         eps = 1e-5
         for ti, r in it["order"]:
             if not alive:
@@ -1243,20 +1359,31 @@ class DistributedGNNPE:
             table = tables[ti]
             l = table.length
             qv = table.vertices[r]
+            qe = q_embs[ti][r]
+            q_rev = _reverse_embedding(qe[None, :], l + 1)[0]
             pos_mask = np.zeros((l + 1, n_d), dtype=bool)
             blk = res.assembly.blocks.get(l) if res is not None else None
             qrow = it["qrow_of"].get((ti, r))
+            served: set[int] = set()
             if blk is not None and qrow is not None:
-                qe = q_embs[ti][r]
-                q_rev = _reverse_embedding(qe[None, :], l + 1)[0]
                 # vectorized root-MBR skip: same per-shard predicate the
                 # serial loop evaluates one tree at a time
                 skip = ((qe[None, :] > blk.up_max + eps).any(axis=1)
                         & (q_rev[None, :] > blk.up_max + eps).any(axis=1))
-                tel.shards_skipped += int(skip.sum())
                 for s_i, sid in enumerate(blk.sids):
-                    if skip[s_i]:
+                    if (sid, l) in fb_keys:
+                        # this slab's index moved between dispatch and
+                        # consume: its fused rows are orphaned — the
+                        # fallback loop below re-probes the live copy
                         continue
+                    served.add(sid)
+                    if skip[s_i]:
+                        tel.shards_skipped += 1
+                        continue
+                    rt = routes.get(sid)
+                    if rt is None:
+                        rt = routes[sid] = self.router.read(sid, budget,
+                                                            tel)
                     ids_f = res.candidates(l, sid, qrow)
                     ids_r = res.candidates(l, sid, qrow + 1)
                     # rows arrive pre-filtered by the INITIAL label/
@@ -1269,7 +1396,31 @@ class DistributedGNNPE:
                     self._account_rows(
                         sid, l, qv, gv, masks,
                         float(blk.n_points[s_i]) * VIRTUAL_MS_PER_LEAF,
-                        machine_ms, rows_by_machine, qid, tel, pos_mask)
+                        machine_ms, rows_by_machine, qid, tel, pos_mask,
+                        machine=rt.machine)
+            # per-shard fallback: shards with no lane in the flight
+            # (degraded at dispatch, or slab gone stale under it) are
+            # re-probed on the host against the ROUTED live copy — the
+            # same deterministic virtual cost as a serial host probe
+            for sid in sorted(self.shards):
+                if sid in served:
+                    continue
+                tree = self.router.metadata(sid).trees.get(l)
+                if tree is None or tree.n_points == 0:
+                    continue
+                if _root_skip(tree, qe, q_rev):
+                    tel.shards_skipped += 1
+                    continue
+                rt = routes.get(sid)
+                if rt is None:
+                    rt = routes[sid] = self.router.read(sid, budget, tel)
+                verts, _ = path_candidates(rt.shard.index, qe, l)
+                tel.probe_launches += 1
+                self._account_rows(
+                    sid, l, qv, rt.shard.global_ids[verts], masks,
+                    tree.n_points * VIRTUAL_MS_PER_LEAF,
+                    machine_ms, rows_by_machine, qid, tel, pos_mask,
+                    machine=rt.machine)
             for i, qvi in enumerate(qv):
                 masks[qvi] &= pos_mask[i]
                 if not masks[qvi].any():
@@ -1278,7 +1429,7 @@ class DistributedGNNPE:
 
         return self._finish_query(query, key, tel, masks, alive,
                                   machine_ms, rows_by_machine,
-                                  it["plan_ms"])
+                                  it["plan_ms"], budget)
 
     # ------------------------------------------------------------------ #
     # streaming graph updates (exactness-preserving incremental re-index)
@@ -1333,6 +1484,19 @@ class DistributedGNNPE:
         content-identical to the primaries they replace).
         """
         self._check_available()
+        if self.failover_mode == "route" and self.router.degraded_sids():
+            # writes need a live PRIMARY per shard (the delta pipeline
+            # installs onto primaries and fans out to standbys): fold
+            # the deferred promotions in before staging anything.  A
+            # shard with no live copy at all blocks the write with the
+            # structured error — reads elsewhere keep being served.
+            rec = self.recover()
+            if rec["lost"]:
+                raise ClusterUnavailableError(
+                    f"streaming update blocked: shards {rec['lost']} "
+                    f"have no live copy", reason="no-live-copy",
+                    sids=tuple(rec["lost"]),
+                    machines=tuple(sorted(self.dead_machines)))
         if delta.is_empty:
             return UpdateReport(data_epoch=self._data_epoch, noop=True,
                                 n_shards=len(self.shards))
@@ -1564,7 +1728,8 @@ class DistributedGNNPE:
             max_path_length=cfg["max_path_length"],
             probe_mode=self.probe_mode,
             assignment=self.assignment, params=self.params,
-            replication=cfg.get("replication", 0))
+            replication=cfg.get("replication", 0),
+            failover_mode=cfg.get("failover_mode", "promote"))
 
     # ------------------------------------------------------------------ #
     # workload loop + balancing
@@ -1634,6 +1799,12 @@ class DistributedGNNPE:
         self._epoch += 1
 
         if rebalance:
+            if self.failover_mode == "route" and self.router.degraded_sids():
+                # epoch boundary: fold deferred (route-mode) promotions
+                # into the routing table before planning — the balancer
+                # only sees live telemetry rows, so a shard still routed
+                # at a corpse would be invisible to it
+                self.recover()
             # chaos fault point BEFORE telemetry: a crash here removes
             # the machine's telemetry row, so the balancer can never
             # plan a move onto the corpse
@@ -1648,21 +1819,19 @@ class DistributedGNNPE:
                                          - self._last_migration_epoch)
                 * EPOCH_VIRTUAL_S)
             if plan.trigger and plan.moves:
-                try:
-                    res = hot_migrate(self.shards, plan.moves,
-                                      self.routing, rng=self._rng,
-                                      corrupt_prob=corrupt_prob,
-                                      chaos=self.chaos)
-                except TransferTimeoutError:
-                    # two-phase abort: routing/shards untouched, planes
-                    # still valid — the epoch simply keeps its old
-                    # placement and a later epoch may retry
-                    self.aborted_transactions += 1
-                    res = None
-                if res is not None:
+                # per-step transactions: a stubborn link times out ONE
+                # move (clean fully-old abort, retried with backoff,
+                # then skipped-and-reported) instead of dropping the
+                # whole rebalance epoch on the floor
+                res = migrate_with_retry(self.shards, plan.moves,
+                                         self.routing, rng=self._rng,
+                                         corrupt_prob=corrupt_prob,
+                                         chaos=self.chaos)
+                self.aborted_transactions += res.timeouts
+                if res.migrated:
                     self.migrations.append(res)
                     self._last_migration_epoch = self._epoch
-                    rebalanced = bool(res.migrated)
+                    rebalanced = True
                     # migrated shards carry freshly deserialized
                     # indexes: drop their resident probe planes (lazily
                     # repacked on the next plane-mode probe), then
@@ -1713,10 +1882,21 @@ class DistributedGNNPE:
           4. victims' resident probe planes are invalidated so a
              plane-mode probe can never read a pre-failover slab, and
              the replication factor is restored best-effort.
+
+        With ``failover_mode="route"`` (and k > 0) steps 3-4 DEFER:
+        victims stay routed at the corpse and the ShardRouter serves
+        their reads from standby replicas immediately — zero transfer,
+        zero promotion on the crash path.  Promotion and re-replication
+        fold in at the next :meth:`recover` (epoch boundary or write).
+        Shards whose last copy died do NOT latch the engine: each query
+        that needs one raises its own structured
+        :class:`ClusterUnavailableError`, every other query keeps
+        getting the exact answer.
         """
         if machine_id in self.dead_machines or machine_id >= len(self.specs):
             return []
         self.dead_machines.add(machine_id)
+        self.router.health.record_crash(self._qclock)
         self.replicas.drop_machine(machine_id)
         self.cache.drop_slave(machine_id)
         self._slave_store[machine_id].clear()
@@ -1728,7 +1908,14 @@ class DistributedGNNPE:
             self._unavailable = "no-survivors"
             raise ClusterUnavailableError(
                 f"machine {machine_id} was the last live machine",
-                reason="no-survivors")
+                reason="no-survivors",
+                machines=tuple(sorted(self.dead_machines)))
+        if self.replicas.k and self.failover_mode == "route":
+            # deferred failover: reads route to standbys right away;
+            # the planes of a dead primary died with it
+            for sid in victims:
+                self.planes.invalidate(sid)
+            return victims
         if self.replicas.k:
             # PREPARE: verify every victim has a live standby before
             # mutating routing — all-or-nothing promotion
@@ -1738,7 +1925,9 @@ class DistributedGNNPE:
                 self._unavailable = "no-live-copy"
                 raise ClusterUnavailableError(
                     f"shards {lost} lost their last copy with machine "
-                    f"{machine_id}", reason="no-live-copy")
+                    f"{machine_id}", reason="no-live-copy",
+                    sids=tuple(lost),
+                    machines=tuple(sorted(self.dead_machines)))
             promos = [(sid, *self.replicas.promote(sid,
                                                    self.dead_machines))
                       for sid in victims]
@@ -1775,6 +1964,53 @@ class DistributedGNNPE:
             except TransferTimeoutError:
                 pass
         return victims
+
+    def recover(self) -> dict:
+        """Fold deferred (route-mode) failovers back into the cluster.
+
+        Promotes a live standby for every shard still routed at a dead
+        machine (pure dictionary move — same CRC-verified image the
+        router was already serving), invalidates the victims' planes,
+        restores the replication factor best-effort, and — when nothing
+        stayed lost — clears the brownout crash window so the health
+        state machine un-latches to HEALTHY.  Shards with NO live copy
+        are reported in ``lost`` and stay degraded-routed: queries that
+        need them keep raising the structured error, the engine itself
+        never latches.
+
+        Idempotent and safe to call any time (promote mode, no dead
+        machines: a no-op).  Returns ``{"promoted", "lost", "state"}``.
+        """
+        promoted: list[int] = []
+        lost: list[int] = []
+        for sid in sorted(self.router.degraded_sids()):
+            if not self.replicas.holders(sid, self.dead_machines):
+                lost.append(sid)
+                continue
+            m, shard = self.replicas.promote(sid, self.dead_machines)
+            self.shards[sid] = shard
+            self.routing[sid] = m
+            self.planes.invalidate(sid)
+            promoted.append(sid)
+        if self.replicas.k and promoted:
+            # restore the replication factor off the new primaries
+            # (best-effort: failure degrades redundancy, never answers).
+            # Shards still routed at a corpse are genuinely lost — the
+            # dead primary's byte image is NOT a legal sync source.
+            try:
+                for sid in sorted(self.shards):
+                    if self.routing[sid] in self.dead_machines:
+                        continue
+                    self.replicas.sync_full(sid, self.shards[sid],
+                                            self.routing[sid],
+                                            self.dead_machines, self._rng,
+                                            chaos=self.chaos)
+            except TransferTimeoutError:
+                pass
+        if not lost:
+            self.router.health.clear_window()
+        return {"promoted": promoted, "lost": lost,
+                "state": self.router.state()}
 
     def load_sigma(self) -> float:
         """Std of machine loads from the most recent workload epoch."""

@@ -40,8 +40,9 @@ from repro.dist.chaos import (CORRUPT, HOOK_MIGRATE_PREPARE, HOOK_TRANSFER,
 from repro.dist.shard import Shard, shard_crc32
 
 __all__ = ["MigrationResult", "TransferResult", "crc_transfer",
-           "hot_migrate", "LINK_BYTES_PER_MS", "HANDSHAKE_MS",
-           "MAX_RETRIES", "BACKOFF_BASE_MS", "BACKOFF_CAP_MS"]
+           "hot_migrate", "migrate_with_retry", "LINK_BYTES_PER_MS",
+           "HANDSHAKE_MS", "MAX_RETRIES", "BACKOFF_BASE_MS",
+           "BACKOFF_CAP_MS"]
 
 LINK_BYTES_PER_MS = 125_000.0    # 1 Gbps simulated inter-machine link
 HANDSHAKE_MS = 5.0               # per-transfer setup + CRC check
@@ -149,10 +150,13 @@ class MigrationResult:
 
     ``skipped`` lists (sid, reason) moves the batch dropped instead of
     executing: a sid absent from `shards` (removed by failover between
-    plan and execute) or whose routing no longer matches the planned
-    source (stale plan / the same sid listed twice).  Skipping keeps
-    `routing` consistent — a crash mid-batch used to leave earlier moves
-    applied and later ones not, with no record of either.
+    plan and execute), one whose routing no longer matches the planned
+    source (stale plan / the same sid listed twice), or — under
+    :func:`migrate_with_retry` — a move whose transfer kept timing out
+    after its per-step retry budget.  Skipping keeps `routing`
+    consistent — a crash mid-batch used to leave earlier moves applied
+    and later ones not, with no record of either.  ``timeouts`` counts
+    aborted per-step transactions (each was a clean fully-old abort).
     """
 
     migrated: list
@@ -161,6 +165,7 @@ class MigrationResult:
     bytes_moved: int
     virtual_ms: float
     skipped: list = dataclasses.field(default_factory=list)
+    timeouts: int = 0
 
 
 def hot_migrate(shards: dict, moves: list, routing: dict,
@@ -227,3 +232,48 @@ def hot_migrate(shards: dict, moves: list, routing: dict,
                            retransmissions=retrans,
                            bytes_moved=bytes_moved, virtual_ms=virtual_ms,
                            skipped=skipped)
+
+
+def migrate_with_retry(shards: dict, moves: list, routing: dict,
+                       rng: np.random.Generator,
+                       corrupt_prob: float = 0.0,
+                       max_retries: int = MAX_RETRIES,
+                       chaos=None, step_retries: int = 2) -> MigrationResult:
+    """`hot_migrate` per move, with per-step retry then skip-and-report.
+
+    A single :class:`TransferTimeoutError` used to abort the *whole*
+    rebalance epoch — one stubborn link dropped every remaining planned
+    move on the floor.  Here each move runs as its own one-move
+    prepare/commit transaction (still fully-old on abort); a step that
+    times out is retried up to ``step_retries`` times with
+    ``crc_transfer``-style exponential backoff charged in virtual ms,
+    and only then recorded in ``MigrationResult.skipped`` (reason
+    ``"transfer timeout"``) while the rest of the epoch proceeds.
+    ``timeouts`` counts every aborted step transaction so the engine's
+    ``aborted_transactions`` ledger stays exact.
+    """
+    out = MigrationResult(migrated=[], crc_ok=True, retransmissions=0,
+                          bytes_moved=0, virtual_ms=0.0)
+    for move in moves:
+        res = None
+        for attempt in range(1, step_retries + 2):
+            try:
+                res = hot_migrate(shards, [move], routing, rng,
+                                  corrupt_prob=corrupt_prob,
+                                  max_retries=max_retries, chaos=chaos)
+                break
+            except TransferTimeoutError:
+                out.timeouts += 1       # clean fully-old abort; retryable
+                out.virtual_ms += min(BACKOFF_BASE_MS * 2.0 ** (attempt - 1),
+                                      BACKOFF_CAP_MS)
+        if res is None:
+            out.skipped.append(
+                (move[0], f"transfer timeout after {step_retries + 1} "
+                          f"attempts"))
+            continue
+        out.migrated.extend(res.migrated)
+        out.retransmissions += res.retransmissions
+        out.bytes_moved += res.bytes_moved
+        out.virtual_ms += res.virtual_ms
+        out.skipped.extend(res.skipped)
+    return out

@@ -145,7 +145,8 @@ class ReplicaSet:
         if not live:
             raise ClusterUnavailableError(
                 f"shard {sid}: no live replica to promote",
-                reason="no-live-copy")
+                reason="no-live-copy", sids=(sid,),
+                machines=tuple(sorted(dead)))
         m = live[0]
         shard = self.copies[sid].pop(m)
         self.promotions += 1

@@ -1,0 +1,383 @@
+"""Degraded-mode serving: replica-read routing, budgets, health states.
+
+PR 8 made the cluster *crash-consistent* — no fault schedule may produce
+a wrong answer — but not *available*: a machine loss stalled every query
+touching its shards until promotion completed, and a query racing a
+fault surfaced as ``ClusterUnavailableError`` even while a CRC-identical
+standby copy sat on a live machine.  This module is the serving half of
+the strengthened contract:
+
+> **Never wrong, AND answered whenever >= 1 live CRC-verified copy of
+> every needed shard exists.**
+
+Three pieces (docs/robustness.md has the full narrative):
+
+  * :class:`ShardRouter` — resolves every shard read to the primary or,
+    when the primary is dead, the first live standby from
+    ``ReplicaSet.holders`` (bit-identical by the CRC-sync construction).
+    Reads are served from standbys *before and without* promotion;
+    :meth:`ShardRouter.read` fires the ``router.read`` link hook so
+    chaos schedules can stall/lose individual read attempts, and charges
+    any fault-induced stall to the query's :class:`QueryOutcome` (the
+    fault-free path costs exactly 0 extra virtual ms, which is what
+    keeps chaos runs latency-comparable to their fault-free twins).
+  * :class:`QueryBudget` — per-query deadline / retry / hedge knobs.  A
+    lost or slow read attempt retries with ``crc_transfer``'s
+    exponential-backoff discipline; once the cumulative stall passes
+    ``hedge_after_ms`` the router issues a hedged read to the next live
+    holder instead of waiting out the primary.
+  * the cluster health state machine — HEALTHY -> DEGRADED -> BROWNOUT,
+    driven by quorum coverage (any shard standby-served or lost) and
+    crash rate.  BROWNOUT applies admission control: queries whose
+    ``priority`` sits below :data:`BROWNOUT_PRIORITY_FLOOR` are shed
+    with a typed :class:`AdmissionRejected` — never a silent drop and
+    never a wrong answer.  Unlike PR 8's one-way latch, the state
+    un-latches: ``DistributedGNNPE.recover()`` promotes deferred
+    victims, restores the replication factor and clears the crash
+    window, returning the cluster to HEALTHY.
+
+RPR008 (reprolint) keeps this module the single place shard reads are
+resolved: serving code in ``repro.dist`` may not subscript
+``.shards``/``.routing`` directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.dist.chaos import (CORRUPT, SLOW, TIMEOUT, TORN, HOOK_READ,
+                              ClusterUnavailableError, TransferTimeoutError)
+from repro.dist.migration import BACKOFF_BASE_MS, BACKOFF_CAP_MS, HANDSHAKE_MS
+
+__all__ = ["HEALTHY", "DEGRADED", "BROWNOUT", "READ_RTT_MS",
+           "BROWNOUT_FAULT_WINDOW", "BROWNOUT_FAULT_RATE",
+           "BROWNOUT_PRIORITY_FLOOR", "QueryBudget", "QueryOutcome",
+           "AdmissionRejected", "QueryDeadlineExceeded", "Route",
+           "ClusterHealth", "ShardRouter"]
+
+# cluster health states (strictly ordered by severity)
+HEALTHY = "healthy"
+DEGRADED = "degraded"     # >= 1 shard standby-served or under-replicated
+BROWNOUT = "brownout"     # lost quorum somewhere, or crash-rate spike
+
+# one routed read round-trip, virtual ms (same constant family as the
+# migration link: a read RPC is a handshake-sized control exchange; the
+# candidate-row payload is already accounted per-row by `_account_rows`)
+READ_RTT_MS = HANDSHAKE_MS
+
+# fault-rate half of the BROWNOUT trigger: >= BROWNOUT_FAULT_RATE crashes
+# within BROWNOUT_FAULT_WINDOW qclock ticks trips admission control even
+# while every shard still has a live copy (the cluster is losing machines
+# faster than re-replication can restore margins)
+BROWNOUT_FAULT_WINDOW = 16.0
+BROWNOUT_FAULT_RATE = 2
+
+# queries at or above this priority are NEVER shed: brownout admission
+# control exists to protect them, not to break the availability contract
+BROWNOUT_PRIORITY_FLOOR = 1
+
+
+class AdmissionRejected(RuntimeError):
+    """BROWNOUT admission control shed this query (typed, never silent).
+
+    Only queries whose ``QueryBudget.priority`` is below
+    :data:`BROWNOUT_PRIORITY_FLOOR` are ever shed, and only while the
+    health state machine reports BROWNOUT — a rejected query was never
+    executed, so retrying after recovery is always safe."""
+
+    def __init__(self, message: str, priority: int = 0,
+                 floor: int = BROWNOUT_PRIORITY_FLOOR,
+                 state: str = BROWNOUT) -> None:
+        super().__init__(message)
+        self.priority = priority
+        self.floor = floor
+        self.state = state
+
+
+class QueryDeadlineExceeded(RuntimeError):
+    """The query's ``timeout_ms`` budget was exhausted by fault-induced
+    read stalls before an answer could be assembled.  Typed and clean:
+    no partial result escapes, the engine state is untouched, and the
+    caller may retry with a larger budget."""
+
+    def __init__(self, message: str, budget_ms: float = 0.0,
+                 spent_ms: float = 0.0) -> None:
+        super().__init__(message)
+        self.budget_ms = budget_ms
+        self.spent_ms = spent_ms
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryBudget:
+    """Per-query serving knobs threaded through probe and join stages.
+
+    ``timeout_ms`` — virtual-ms deadline for fault-induced stall; None
+    disables it.  ``max_attempts`` — read attempts per shard before the
+    router gives up with :class:`TransferTimeoutError`.
+    ``hedge_after_ms`` — cumulative stall after which a hedged read goes
+    to the next live holder.  ``priority`` — brownout admission class
+    (default 1 = never shed)."""
+
+    timeout_ms: float | None = None
+    max_attempts: int = 4
+    hedge_after_ms: float = 16.0
+    priority: int = 1
+
+
+@dataclasses.dataclass
+class QueryOutcome:
+    """Typed serving outcome attached to every ``QueryTelemetry``."""
+
+    served_degraded: bool = False   # >= 1 shard read came from a standby
+    retries: int = 0                # read attempts lost/retransmitted
+    hedges: int = 0                 # reads re-issued to another holder
+    deadline_exceeded: bool = False
+    stall_ms: float = 0.0           # fault-induced read stall (virtual)
+    health: str = HEALTHY           # cluster state when the query ran
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """One resolved shard read: which live machine serves which copy."""
+
+    sid: int
+    machine: int
+    shard: object                   # the CRC-verified Shard copy served
+    degraded: bool = False          # True = standby (primary is dead)
+
+
+class ClusterHealth:
+    """Crash-rate window for the fault-rate half of BROWNOUT.
+
+    Timestamps are engine qclock ticks (virtual, deterministic — never
+    wall time), recorded by ``handle_machine_failure`` and cleared by
+    ``recover()`` once re-replication restored coverage."""
+
+    def __init__(self) -> None:
+        self.crash_ticks: list[float] = []
+
+    def record_crash(self, tick: float) -> None:
+        self.crash_ticks.append(float(tick))
+
+    def recent_crashes(self, tick: float,
+                       window: float = BROWNOUT_FAULT_WINDOW) -> int:
+        return sum(1 for t in self.crash_ticks if tick - t <= window)
+
+    def clear_window(self) -> None:
+        self.crash_ticks.clear()
+
+
+class ShardRouter:
+    """Resolves shard reads to primary-or-standby and meters them.
+
+    The router owns the ONLY legal read path for serving code (RPR008):
+    ``metadata`` for the master-side <1KB index metadata (root MBRs —
+    content-identical on every copy, so readable even while the primary
+    is dead), ``resolve``/``read`` for the actual candidate probe.
+    """
+
+    def __init__(self, engine) -> None:
+        self._e = engine
+        self.health = ClusterHealth()
+        self.standby_reads = 0      # shard reads served from a standby
+        self.shed_queries = 0       # brownout admission rejections
+
+    # ------------------------------------------------------------------ #
+    # resolution
+    # ------------------------------------------------------------------ #
+    def metadata(self, sid: int):
+        """The master's metadata copy of the shard index (root MBR,
+        tree shapes).  Every copy is CRC-identical, so this is readable
+        regardless of machine liveness — it determines which shards a
+        query *needs* before any read is routed."""
+        return self._e.shards[sid].index
+
+    def primary(self, sid: int) -> int:
+        """The machine the routing table homes ``sid`` on (may be dead —
+        use :meth:`resolve` to get a live serving machine)."""
+        return self._e.routing[sid]
+
+    def holders(self, sid: int) -> list[int]:
+        """Live standby machines holding a CRC-verified copy of ``sid``."""
+        e = self._e
+        if not e.replicas.k:
+            return []
+        return e.replicas.holders(sid, e.dead_machines)
+
+    def resolve(self, sid: int) -> Route:
+        """Primary if live, else the first live standby holder.
+
+        Raises the structured :class:`ClusterUnavailableError` only when
+        *every* copy of the shard is on a dead machine — the one case
+        the strengthened contract permits a non-answer."""
+        e = self._e
+        mk = e.routing[sid]
+        if mk not in e.dead_machines:
+            return Route(sid, mk, e.shards[sid], degraded=False)
+        live = self.holders(sid)
+        if not live:
+            if e.failover_mode != "route":
+                # legacy promote-mode semantics (PR 8): the simulator's
+                # master still reaches the byte image of a machine that
+                # was marked dead without failover — serve it, exactly
+                # as the pre-router engine did.  Only route mode holds
+                # the strict "live copy or typed error" line.
+                return Route(sid, mk, e.shards[sid], degraded=False)
+            raise ClusterUnavailableError(
+                f"shard {sid}: every copy is on a dead machine",
+                reason="no-live-copy", sids=(sid,),
+                machines=tuple(sorted(e.dead_machines)))
+        m = live[0]
+        return Route(sid, m, e.replicas.copies[sid][m], degraded=True)
+
+    def degraded_sids(self) -> set[int]:
+        """Shards whose primary is dead (standby-served or lost)."""
+        e = self._e
+        return {sid for sid, mk in e.routing.items()
+                if mk in e.dead_machines}
+
+    def lost_sids(self) -> list[int]:
+        """Shards with NO live copy at all — the lost quorum set."""
+        return sorted(sid for sid in self.degraded_sids()
+                      if not self.holders(sid))
+
+    # ------------------------------------------------------------------ #
+    # metered reads: retry / backoff / hedging under the fault plan
+    # ------------------------------------------------------------------ #
+    def read(self, sid: int, budget: QueryBudget | None = None,
+             tel=None) -> Route:
+        """One routed shard read under the deadline/hedge budget.
+
+        Fires the ``router.read`` link hook per attempt.  With no plan
+        attached (or no fault due at this visit) the read is free —
+        0 extra virtual ms — so fault-free telemetry is bit-identical
+        whether or not a chaos plan is watching.  Fault handling:
+
+          * CORRUPT/TORN — caught by the CRC discipline; costs one
+            retransmission round-trip plus ``crc_transfer``-style
+            backoff, then retries the same holder.
+          * TIMEOUT — the attempt is lost; after ``hedge_after_ms`` of
+            cumulative stall the retry goes to the *next* live holder
+            (a hedged read) instead of the stalled one.
+          * SLOW — the attempt is delivered ``factor`` x slower; if a
+            hedge would beat it, the hedge wins and the stall is capped
+            at ``hedge_after_ms + READ_RTT_MS``.
+
+        Exhausting ``max_attempts`` raises ``TransferTimeoutError``;
+        breaching ``timeout_ms`` raises :class:`QueryDeadlineExceeded`.
+        Stall and retry/hedge counts land in ``tel.outcome``.
+        """
+        rt = self.resolve(sid)
+        out = getattr(tel, "outcome", None)
+        if rt.degraded:
+            self.standby_reads += 1
+            if out is not None:
+                out.served_degraded = True
+        chaos = self._e.chaos
+        if chaos is None:
+            return rt
+        b = budget if budget is not None else QueryBudget()
+        alternates = [m for m in self.holders(sid) if m != rt.machine]
+        stall = 0.0
+        for attempt in range(1, b.max_attempts + 1):
+            due = chaos.fire(HOOK_READ)
+            kinds = {f.kind for f in due}
+            if not kinds & {CORRUPT, TORN, TIMEOUT, SLOW}:
+                break                        # clean delivery, 0 ms
+            backoff = min(BACKOFF_BASE_MS * 2.0 ** (attempt - 1),
+                          BACKOFF_CAP_MS)
+            if kinds & {CORRUPT, TORN}:
+                # CRC catches the damage; retransmit on the same route
+                stall += READ_RTT_MS + backoff
+                if out is not None:
+                    out.retries += 1
+            elif TIMEOUT in kinds:
+                stall += READ_RTT_MS + backoff
+                if out is not None:
+                    out.retries += 1
+                if stall >= b.hedge_after_ms and alternates:
+                    m = alternates.pop(0)
+                    rt = Route(sid, m, self._e.replicas.copies[sid][m],
+                               degraded=True)
+                    self.standby_reads += 1
+                    if out is not None:
+                        out.hedges += 1
+                        out.served_degraded = True
+            else:                            # SLOW: delivered, just late
+                factor = max(f.factor for f in due if f.kind == SLOW)
+                cost = factor * READ_RTT_MS
+                if cost > b.hedge_after_ms + READ_RTT_MS and alternates:
+                    # the hedged copy answers before the slow one does
+                    m = alternates.pop(0)
+                    rt = Route(sid, m, self._e.replicas.copies[sid][m],
+                               degraded=True)
+                    self.standby_reads += 1
+                    stall += b.hedge_after_ms + READ_RTT_MS
+                    if out is not None:
+                        out.hedges += 1
+                        out.served_degraded = True
+                else:
+                    stall += cost
+                break                        # SLOW still delivers
+            if b.timeout_ms is not None and stall > b.timeout_ms:
+                if out is not None:
+                    out.deadline_exceeded = True
+                    out.stall_ms += stall
+                raise QueryDeadlineExceeded(
+                    f"shard {sid}: read stall {stall:.1f}ms exceeded "
+                    f"budget {b.timeout_ms:.1f}ms",
+                    budget_ms=b.timeout_ms, spent_ms=stall)
+        else:
+            if out is not None:
+                out.stall_ms += stall
+            raise TransferTimeoutError(
+                f"shard {sid}: routed read exhausted "
+                f"{b.max_attempts} attempts", virtual_ms=stall,
+                attempts=b.max_attempts)
+        if out is not None:
+            out.stall_ms += stall
+        return rt
+
+    # ------------------------------------------------------------------ #
+    # health state machine
+    # ------------------------------------------------------------------ #
+    def state(self) -> str:
+        """HEALTHY -> DEGRADED -> BROWNOUT, recomputed from coverage.
+
+        BROWNOUT: some shard lost every copy, or the crash-rate window
+        tripped.  DEGRADED: every shard still has a live copy but at
+        least one is standby-served (its primary is dead, promotion
+        deferred).  Un-latches naturally: once ``recover()`` promotes
+        victims (routing references no corpse any more) and clears the
+        crash window, this recomputes to HEALTHY — no one-way latch,
+        even while the dead machines stay dead."""
+        e = self._e
+        degraded = self.degraded_sids()
+        if any(not self.holders(sid) for sid in degraded):
+            return BROWNOUT
+        if self.health.recent_crashes(e._qclock) >= BROWNOUT_FAULT_RATE:
+            return BROWNOUT
+        return DEGRADED if degraded else HEALTHY
+
+    def admit(self, budget: QueryBudget | None) -> str:
+        """Brownout admission control: typed shed, never silent.
+
+        Returns the health state (stamped into the query outcome).
+        Raises :class:`AdmissionRejected` only for queries *below* the
+        priority floor while the state machine reports BROWNOUT."""
+        state = self.state()
+        pri = budget.priority if budget is not None else 1
+        if state == BROWNOUT and pri < BROWNOUT_PRIORITY_FLOOR:
+            self.shed_queries += 1
+            raise AdmissionRejected(
+                f"brownout admission control shed priority-{pri} query "
+                f"(floor {BROWNOUT_PRIORITY_FLOOR})",
+                priority=pri, state=state)
+        return state
+
+    def stats(self) -> dict:
+        return {"standby_reads": self.standby_reads,
+                "shed_queries": self.shed_queries,
+                "state": self.state(),
+                "degraded_sids": sorted(self.degraded_sids()),
+                "lost_sids": self.lost_sids()}

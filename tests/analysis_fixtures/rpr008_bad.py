@@ -1,0 +1,12 @@
+"""RPR008 bad fixture: serving functions dereference the shard index
+directly instead of resolving through the router."""
+
+
+class Engine:
+    def query(self, qe, sid):
+        shard = self.shards[sid]
+        return shard.index
+
+    def _consume_query(self, it, sid):
+        mk = self.routing[sid]
+        return mk

@@ -1,0 +1,21 @@
+"""RPR008 good fixture: the serving path resolves through the router;
+build/failover code legitimately owns the index dictionaries."""
+
+
+class Engine:
+    def query(self, qe, sid):
+        rt = self.router.resolve(sid)
+        return rt.shard.index
+
+    def _consume_query(self, it, sid, budget, tel):
+        rt = self.router.read(sid, budget, tel)
+        return rt.machine
+
+    def build(self, shard):
+        # Store context: installing a shard is not a serving read
+        self.shards[shard.sid] = shard
+        self.routing[shard.sid] = 0
+
+    def handle_machine_failure(self, sid):
+        # failover owns the index — reads here are fine
+        return self.shards[sid], self.routing[sid]

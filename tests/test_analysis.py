@@ -136,6 +136,19 @@ def test_rpr007_silent_on_plan_rng_and_fire_free_engine_rng():
     assert scan_fixture("rpr007_good.py", rel) == []
 
 
+def test_rpr008_fires_on_index_subscripts_in_serving_functions():
+    # line 7: query() reads self.shards[sid] around the router
+    # line 11: _consume_query() reads self.routing[sid] directly
+    rel = "src/repro/dist/rpr008_bad.py"
+    assert scan_fixture("rpr008_bad.py", rel) == [("RPR008", 7),
+                                                  ("RPR008", 11)]
+
+
+def test_rpr008_silent_on_router_resolution_and_owner_functions():
+    rel = "src/repro/dist/rpr008_good.py"
+    assert scan_fixture("rpr008_good.py", rel) == []
+
+
 # -- baseline mechanism ---------------------------------------------------
 
 def test_stale_baseline_entry_fails_the_run():

@@ -31,16 +31,19 @@ from hypothesis import strategies as st
 
 from repro.data.synthetic import nws_graph
 from repro.dist.chaos import (CORRUPT, CRASH, HOOK_BATCH,
-                              HOOK_MIGRATE_PREPARE, HOOK_QUERY,
+                              HOOK_MIGRATE_PREPARE, HOOK_QUERY, HOOK_READ,
                               HOOK_REBALANCE, HOOK_TRANSFER,
                               HOOK_UPDATE_COMMIT, HOOK_UPDATE_STAGE, SLOW,
                               TIMEOUT, TORN, ClusterUnavailableError,
                               FaultPlan, FaultSpec, TransferTimeoutError,
-                              default_script, random_fault_plan, run_script,
-                              script_queries)
+                              Unavailable, default_script, random_fault_plan,
+                              run_script, script_queries)
 from repro.dist.cluster import DistributedGNNPE
 from repro.dist.migration import (BACKOFF_BASE_MS, MAX_RETRIES, crc_transfer,
-                                  hot_migrate)
+                                  hot_migrate, migrate_with_retry)
+from repro.dist.router import (BROWNOUT, DEGRADED, HEALTHY,
+                               AdmissionRejected, QueryBudget,
+                               QueryDeadlineExceeded)
 
 N_MACHINES = 3
 
@@ -58,11 +61,12 @@ def ref(graph):
                                   gnn_train_steps=4, seed=0)
 
 
-def _engine(graph, ref, k=0):
+def _engine(graph, ref, k=0, failover="promote"):
     return DistributedGNNPE.build(graph, N_MACHINES, shards_per_machine=2,
                                   gnn_train_steps=4, seed=0,
                                   assignment=ref.assignment,
-                                  params=ref.params, replication=k)
+                                  params=ref.params, replication=k,
+                                  failover_mode=failover)
 
 
 @pytest.fixture(scope="module")
@@ -304,6 +308,7 @@ def test_last_live_machine_raises_typed_unavailable(graph, ref, script):
     with pytest.raises(ClusterUnavailableError) as exc:
         eng.handle_machine_failure(2)
     assert exc.value.reason == "no-survivors"
+    assert exc.value.machines == (0, 1, 2)       # structured, not prose
     # latched: every later operation raises the same typed error
     for attempt in (lambda: eng.query(q, probe_mode=m),
                     lambda: eng.query_batch([q]),
@@ -319,6 +324,9 @@ def test_losing_a_shards_last_copy_raises_no_live_copy(graph, ref):
     with pytest.raises(ClusterUnavailableError) as exc:
         eng.handle_machine_failure(0)
     assert exc.value.reason == "no-live-copy"
+    # structured loss: WHICH shards and WHICH machines, machine-readable
+    assert exc.value.sids == (victim_sid,)
+    assert exc.value.machines == (0,)
     assert eng._unavailable == "no-live-copy"
 
 
@@ -450,3 +458,386 @@ def test_chaos_oracle_quorum_loss_is_typed_with_identical_prefix(
     assert outcome.startswith("unavailable@"), outcome
     assert eng._unavailable in ("no-survivors", "no-live-copy")
     assert answers == baseline[:len(answers)]
+
+
+# ------------------------------------------------------------------------- #
+# degraded-mode serving (ISSUE 9): replica-read routing, budgets, brownout
+# ------------------------------------------------------------------------- #
+
+def test_rebalance_epoch_survives_a_timed_out_step(graph, ref):
+    """Regression (satellite): one stubborn link used to abort the WHOLE
+    rebalance epoch — a single TransferTimeoutError from `hot_migrate`
+    dropped every remaining planned move on the floor.  Per-step
+    transactions retry the move with backoff, then skip-and-report it
+    while the rest of the epoch proceeds."""
+    eng = _engine(graph, ref)
+    sids = sorted(eng.routing)
+    moves = [(sid, eng.routing[sid], (eng.routing[sid] + 1) % N_MACHINES)
+             for sid in sids[:3]]
+    # the first move's link is dead for every transfer attempt of every
+    # per-step retry; the later moves' links are clean
+    dead_attempts = (MAX_RETRIES + 1) * 3
+    plan = FaultPlan([FaultSpec(kind=TIMEOUT, hook=HOOK_TRANSFER, at=1,
+                                times=dead_attempts)], seed=3)
+    res = migrate_with_retry(eng.shards, moves, eng.routing, rng=eng._rng,
+                             chaos=plan, step_retries=2)
+    assert res.migrated == [m[0] for m in moves[1:]], \
+        "the rest of the epoch must proceed past the dead step"
+    assert [s for s, _ in res.skipped] == [moves[0][0]]
+    assert "transfer timeout" in res.skipped[0][1]
+    assert res.timeouts == 3                     # every abort was counted
+    assert eng.routing[moves[0][0]] == moves[0][1]   # aborted fully-old
+    for sid, _, tgt in moves[1:]:
+        assert eng.routing[sid] == tgt
+
+
+def test_route_mode_serves_standbys_before_promotion(graph, ref, script):
+    """Tentpole: with failover_mode="route" a crash promotes NOTHING —
+    reads route to standby replicas immediately, answers stay
+    bit-identical, comm bytes land on the machine that served, and
+    recover() later folds the promotions in and un-latches HEALTHY."""
+    queries = [op for op in script if op[0] == "query"]
+    twin = _engine(graph, ref, k=2)
+    twin.use_cache = False
+    want = [twin.query(q, probe_mode=m)[0] for _, q, m in queries]
+    eng = _engine(graph, ref, k=2, failover="route")
+    eng.use_cache = False
+    victims = eng.handle_machine_failure(1)
+    assert victims
+    assert eng.replicas.promotions == 0          # promotion deferred
+    assert all(eng.routing[sid] == 1 for sid in victims)
+    assert eng.consistency_audit() == []         # degraded, not torn
+    assert eng.router.state() == DEGRADED
+    assert sorted(eng.router.degraded_sids()) == victims
+    assert eng.router.lost_sids() == []
+    for (_, q, m), w in zip(queries, want):
+        got, tel = eng.query(q, probe_mode=m)
+        assert got == w
+        assert tel.outcome.health == DEGRADED
+    assert eng.router.standby_reads > 0
+    # comm/CPU attribution: nothing lands on the corpse
+    tele = eng._machine_telemetry()
+    assert all(t.machine_id != 1 for t in tele)
+    assert eng._cpu and all(v >= 0 for v in eng._cpu.values())
+    # recovery folds the deferred promotions in: HEALTHY, no corpse
+    # left in the routing table, answers unchanged
+    rec = eng.recover()
+    assert sorted(rec["promoted"]) == victims and rec["lost"] == []
+    assert rec["state"] == HEALTHY
+    assert all(mk != 1 for mk in eng.routing.values())
+    assert eng.replicas.promotions == len(victims)
+    assert [eng.query(q, probe_mode=m)[0] for _, q, m in queries] == want
+    assert eng.consistency_audit() == []
+
+
+def test_route_mode_megabatch_serves_degraded_shards(graph, ref, script):
+    """The fused megabatch path under deferred failover: assembled slabs
+    whose identity is still clean serve from the flight (attributed to
+    the standby), and answers match the fault-free serial run."""
+    queries = [op[1] for op in script if op[0] == "query"][:3]
+    twin = _engine(graph, ref, k=2)
+    twin.use_cache = False
+    want = [twin.query(q, probe_mode="plane")[0] for q in queries]
+    eng = _engine(graph, ref, k=2, failover="route")
+    eng.use_cache = False
+    eng.handle_machine_failure(0)
+    got = eng.query_batch(queries)
+    assert [m for m, _ in got] == want
+    assert any(t.outcome.served_degraded for _, t in got)
+    assert eng.replicas.promotions == 0
+
+
+def test_megabatch_per_shard_fallback_on_stale_slab(graph, ref, script):
+    """A shard index replaced between dispatch and consume (migration)
+    orphans ONLY that shard's fused rows: the consume step re-probes it
+    per shard on the routed live copy instead of re-running the whole
+    batch serially.  Matches and comm bytes stay bit-identical."""
+    queries = [op[1] for op in script if op[0] == "query"][:3]
+    twin = _engine(graph, ref, k=1)
+    twin.use_cache = False
+    want = [(twin.query(q, probe_mode="plane")[0],
+             twin.query(q, probe_mode="plane")[1].comm_bytes)
+            for q in queries]
+    eng = _engine(graph, ref, k=1)
+    eng.use_cache = False
+    mb = eng._mb_dispatch(queries, "pescore")
+    sid = sorted(eng.routing)[0]
+    src = eng.routing[sid]
+    hot_migrate(eng.shards, [(sid, src, (src + 1) % N_MACHINES)],
+                eng.routing, rng=eng._rng)
+    out = eng._mb_consume(mb)
+    assert [m for m, _ in out] == [w for w, _ in want]
+    assert [t.comm_bytes for _, t in out] == [c for _, c in want]
+
+
+def test_routed_read_retries_with_backoff_under_read_faults(graph, ref,
+                                                            script):
+    """CORRUPT read attempts are caught by the CRC discipline and
+    retried on the same route with crc_transfer-style backoff; the
+    stall is typed into the outcome and folded into latency."""
+    _, q, m = next(op for op in script if op[0] == "query")
+    twin = _engine(graph, ref, k=2)
+    want, _ = twin.query(q, probe_mode=m)
+    eng = _engine(graph, ref, k=2, failover="route")
+    plan = FaultPlan([FaultSpec(kind=CORRUPT, hook=HOOK_READ, at=1,
+                                times=2)], seed=1)
+    eng.set_fault_plan(plan)
+    got, tel = eng.query(q, probe_mode=m)
+    eng.set_fault_plan(None)
+    assert got == want
+    assert tel.outcome.retries == 2
+    assert tel.outcome.hedges == 0
+    assert tel.outcome.stall_ms > 0
+    assert tel.latency_ms >= tel.outcome.stall_ms
+    # fault-free twin of the same engine state pays ZERO stall
+    got2, tel2 = _engine(graph, ref, k=2, failover="route").query(
+        q, probe_mode=m)
+    assert got2 == want and tel2.outcome.stall_ms == 0.0
+
+
+def test_routed_read_hedges_to_next_holder(graph, ref, script):
+    """TIMEOUT attempts past hedge_after_ms re-issue the read to the
+    NEXT live holder — served from a standby before (and without) any
+    promotion, still bit-identical."""
+    _, q, m = next(op for op in script if op[0] == "query")
+    twin = _engine(graph, ref, k=2)
+    want, _ = twin.query(q, probe_mode=m)
+    eng = _engine(graph, ref, k=2, failover="route")
+    plan = FaultPlan([FaultSpec(kind=TIMEOUT, hook=HOOK_READ, at=1,
+                                times=2)], seed=2)
+    eng.set_fault_plan(plan)
+    got, tel = eng.query(q, probe_mode=m,
+                         budget=QueryBudget(hedge_after_ms=5.0))
+    eng.set_fault_plan(None)
+    assert got == want
+    assert tel.outcome.hedges >= 1
+    assert tel.outcome.served_degraded           # the hedge IS a standby read
+    assert eng.router.standby_reads >= 1
+
+
+def test_deadline_budget_raises_typed_mid_read(graph, ref, script):
+    """A hard timeout_ms breach mid-read raises QueryDeadlineExceeded
+    (typed, engine fully-old); the same query then succeeds fault-free."""
+    _, q, m = next(op for op in script if op[0] == "query")
+    eng = _engine(graph, ref, k=2, failover="route")
+    plan = FaultPlan([FaultSpec(kind=TIMEOUT, hook=HOOK_READ, at=1,
+                                times=3)], seed=3)
+    eng.set_fault_plan(plan)
+    with pytest.raises(QueryDeadlineExceeded) as exc:
+        eng.query(q, probe_mode=m,
+                  budget=QueryBudget(timeout_ms=10.0, hedge_after_ms=1e9))
+    eng.set_fault_plan(None)
+    assert exc.value.budget_ms == 10.0
+    assert exc.value.spent_ms > 10.0
+    want, _ = _engine(graph, ref, k=2).query(q, probe_mode=m)
+    got, tel = eng.query(q, probe_mode=m)
+    assert got == want and not tel.outcome.deadline_exceeded
+
+
+def test_routed_read_exhaustion_is_typed(graph, ref, script):
+    """Every attempt of the read budget lost -> TransferTimeoutError
+    (never a silent partial answer)."""
+    _, q, m = next(op for op in script if op[0] == "query")
+    eng = _engine(graph, ref, k=2, failover="route")
+    plan = FaultPlan([FaultSpec(kind=TIMEOUT, hook=HOOK_READ, at=1,
+                                times=QueryBudget().max_attempts)], seed=4)
+    eng.set_fault_plan(plan)
+    with pytest.raises(TransferTimeoutError):
+        eng.query(q, probe_mode=m,
+                  budget=QueryBudget(hedge_after_ms=1e9))
+    eng.set_fault_plan(None)
+
+
+def test_brownout_sheds_low_priority_queries_typed(graph, ref, script):
+    """Two crashes inside the fault window trip BROWNOUT: queries below
+    the priority floor are shed with a typed AdmissionRejected; default-
+    priority queries keep flowing with exact answers; recover()
+    un-latches the state machine back to HEALTHY."""
+    _, q, m = next(op for op in script if op[0] == "query")
+    twin = _engine(graph, ref, k=2)
+    want, _ = twin.query(q, probe_mode=m)
+    eng = _engine(graph, ref, k=2, failover="route")
+    eng.handle_machine_failure(0)
+    eng.handle_machine_failure(1)
+    assert eng.router.state() == BROWNOUT
+    with pytest.raises(AdmissionRejected) as exc:
+        eng.query(q, probe_mode=m, budget=QueryBudget(priority=0))
+    assert exc.value.state == BROWNOUT
+    assert exc.value.priority == 0
+    assert eng.router.shed_queries == 1
+    got, tel = eng.query(q, probe_mode=m)        # floor priority: served
+    assert got == want
+    assert tel.outcome.health == BROWNOUT
+    assert tel.outcome.served_degraded
+    rec = eng.recover()
+    assert rec["lost"] == [] and rec["state"] == HEALTHY
+    assert eng.router.state() == HEALTHY
+    got2, tel2 = eng.query(q, probe_mode=m)
+    assert got2 == want and tel2.outcome.health == HEALTHY
+
+
+def test_route_mode_lost_shard_degrades_per_query_not_latched(graph, ref,
+                                                              script):
+    """Losing a shard's LAST copy in route mode does not latch the
+    engine: only queries needing that shard raise (structured sids), the
+    rest keep serving, and recover() reports the loss."""
+    queries = [op for op in script if op[0] == "query"]
+    eng = _engine(graph, ref, k=1, failover="route")
+    victim_sid = min(sid for sid, mk in eng.routing.items() if mk == 0)
+    eng.replicas.drop_shard(victim_sid)          # the standby rotted
+    eng.handle_machine_failure(0)                # no raise: deferred
+    assert eng._unavailable is None
+    assert eng.router.lost_sids() == [victim_sid]
+    assert eng.router.state() == BROWNOUT
+    hits = fails = 0
+    for _, q, m in queries:
+        try:
+            eng.query(q, probe_mode=m)
+            hits += 1
+        except ClusterUnavailableError as exc:
+            assert exc.reason == "no-live-copy"
+            assert victim_sid in exc.sids
+            fails += 1
+    assert fails > 0                             # some query needed it
+    rec = eng.recover()
+    assert rec["lost"] == [victim_sid]
+    assert eng.router.state() == BROWNOUT        # loss persists, typed
+
+
+# ------------------------------------------------------------------------- #
+# the availability oracle: every schedule with a live copy gets the answer
+# ------------------------------------------------------------------------- #
+
+def _read_storm(seed):
+    """Deterministic flaky-read overlay: CORRUPT/TIMEOUT/SLOW at the
+    router.read hook, times < max_attempts so no read exhausts."""
+    rng = np.random.default_rng(seed * 131 + 7)
+    kinds = (CORRUPT, TIMEOUT, SLOW)
+    return [FaultSpec(kind=kinds[int(rng.integers(3))], hook=HOOK_READ,
+                      at=int(rng.integers(1, 40)), times=1,
+                      factor=float(2.0 + 5.0 * rng.random()))
+            for _ in range(int(rng.integers(1, 4)))]
+
+
+def _avail_hand_schedules():
+    mk = FaultSpec
+    return [
+        ("route-crash-query", [mk(kind=CRASH, hook=HOOK_QUERY, at=2,
+                                  machine=1)]),
+        ("route-crash-two", [mk(kind=CRASH, hook=HOOK_QUERY, at=2,
+                                machine=0),
+                             mk(kind=CRASH, hook=HOOK_BATCH, at=1,
+                                machine=2)]),
+        ("route-crash-mid-megabatch", [mk(kind=CRASH, hook=HOOK_BATCH,
+                                          at=1, machine=2)]),
+        ("route-crash-mid-update", [mk(kind=CRASH, hook=HOOK_UPDATE_STAGE,
+                                       at=1, machine=0)]),
+        ("route-crash-rebalance", [mk(kind=CRASH, hook=HOOK_REBALANCE,
+                                      at=1, machine=1)]),
+        ("route-read-flakes", [mk(kind=TIMEOUT, hook=HOOK_READ, at=2),
+                               mk(kind=CORRUPT, hook=HOOK_READ, at=7),
+                               mk(kind=SLOW, hook=HOOK_READ, at=11,
+                                  factor=20.0)]),
+        ("route-crash-plus-read-storm", [mk(kind=CRASH, hook=HOOK_QUERY,
+                                            at=3, machine=0),
+                                         mk(kind=TIMEOUT, hook=HOOK_READ,
+                                            at=4),
+                                         mk(kind=TIMEOUT, hook=HOOK_READ,
+                                            at=9)]),
+        ("route-link-storm", [mk(kind=TORN, hook=HOOK_TRANSFER, at=1,
+                                 times=2),
+                              mk(kind=CORRUPT, hook=HOOK_TRANSFER, at=4),
+                              mk(kind=TIMEOUT, hook=HOOK_READ, at=3)]),
+    ]
+
+
+AVAIL_CASES = ([(name, FaultPlan(faults, seed=50 + i))
+                for i, (name, faults) in enumerate(_avail_hand_schedules())]
+               + [(f"avail-random-{s}",
+                   FaultPlan(random_fault_plan(
+                       100 + s, n_faults=4,
+                       n_machines=N_MACHINES).faults
+                       + tuple(_read_storm(s)), seed=100 + s))
+                  for s in range(24)])
+assert len(AVAIL_CASES) >= 30
+
+
+@pytest.mark.parametrize("name,plan", AVAIL_CASES,
+                         ids=[c[0] for c in AVAIL_CASES])
+def test_availability_oracle_live_copy_schedules_always_answer(
+        graph, ref, script, baseline, name, plan):
+    """Tentpole oracle: k=2 on 3 machines with <= 2 crashes leaves every
+    shard >= 1 live CRC-verified copy, so EVERY query of EVERY schedule
+    must return the bit-identical answer — no ClusterUnavailableError,
+    no Unavailable slot, no silent drop.  Strictly stronger than the
+    PR-8 contract (never wrong): never wrong AND always answered."""
+    eng = _engine(graph, ref, k=2, failover="route")
+    answers, outcome = run_script(eng, script, plan=plan.replay(),
+                                  on_unavailable="continue")
+    assert outcome == "completed", f"{name}: {outcome}"
+    lost = [i for i, a in enumerate(answers) if isinstance(a, Unavailable)]
+    assert not lost, f"{name}: typed losses at {lost} with live copies"
+    assert answers == baseline, f"{name}: answers diverged"
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_availability_oracle_quorum_loss_is_structured(graph, ref, script,
+                                                       baseline, seed):
+    """Quorum-loss schedules in continue mode: queries over genuinely
+    lost shards yield structured Unavailable slots (reason + sids), all
+    other answers stay bit-identical to the fault-free baseline."""
+    plan = FaultPlan([FaultSpec(kind=CRASH, hook=HOOK_QUERY, at=2 + i,
+                                machine=(seed + i) % N_MACHINES)
+                     for i in range(N_MACHINES)], seed=seed)
+    eng = _engine(graph, ref, k=1, failover="route")
+    answers, outcome = run_script(eng, script, plan=plan,
+                                  on_unavailable="continue")
+    slots = [a for a in answers if isinstance(a, Unavailable)]
+    if outcome == "completed" and not slots:
+        assert answers == baseline
+        return
+    for a in slots:
+        assert a.reason in ("no-live-copy", "no-survivors")
+        assert a.reason != "no-live-copy" or a.sids
+        lost = set(eng.router.lost_sids())
+        assert set(a.sids) <= lost or not lost
+    good = [(i, a) for i, a in enumerate(answers)
+            if not isinstance(a, Unavailable)]
+    for i, a in good:
+        assert a == baseline[i], f"answer {i} diverged"
+
+
+_DEAD_SUBSETS = [(0,), (1,), (2,), (0, 1), (0, 2), (1, 2)]
+
+
+@given(dead=st.sampled_from(_DEAD_SUBSETS))
+@settings(max_examples=len(_DEAD_SUBSETS), deadline=None)
+def test_cross_mode_bit_identity_under_any_live_subset(graph, ref, script,
+                                                       dead):
+    """Property (satellite): for EVERY dead-machine subset that leaves
+    >= 1 live copy of each shard (k=2 guarantees all subsets of size
+    <= 2 do), the routed answers AND the deterministic counters AND the
+    comm bytes are bit-identical across host / device / plane /
+    megabatch execution."""
+    counters = ("n_matches", "comm_bytes", "cross_shard_rows",
+                "shards_skipped", "paths_executed", "paths_skipped")
+    queries = [op[1] for op in script if op[0] == "query"][:2]
+    eng = _engine(graph, ref, k=2, failover="route")
+    eng.use_cache = False
+    for mk in dead:
+        eng.handle_machine_failure(mk)
+    assert eng.router.lost_sids() == []
+    ref_runs = []
+    for q in queries:
+        m0, t0 = eng.query(q, probe_mode="host")
+        ref_runs.append((m0, t0))
+    for mode in ("device", "plane"):
+        for q, (m0, t0) in zip(queries, ref_runs):
+            m1, t1 = eng.query(q, probe_mode=mode)
+            assert m1 == m0
+            for f in counters:
+                assert getattr(t1, f) == getattr(t0, f), (mode, f)
+    for (m2, t2), (m0, t0) in zip(eng.query_batch(queries), ref_runs):
+        assert m2 == m0
+        for f in counters:
+            assert getattr(t2, f) == getattr(t0, f), ("megabatch", f)
