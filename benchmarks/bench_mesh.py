@@ -1,0 +1,108 @@
+"""Mesh transport benchmark: seam overhead + bytes-on-wire validation.
+
+Two CI-gated measurements, emitted into a stable-schema BENCH_mesh.json:
+
+  * **loopback overhead** — the same plane-mode workload on a
+    SimTransport engine vs a world-1 MeshTransport engine (every
+    delivered byte round-trips through the local JAX device).  Answers
+    and the logical wire ledger must agree exactly; the wall-clock
+    overhead of the seam must stay <= 25%.
+  * **census** — the 300-vertex bench through the in-process census
+    scenario: the dryrun-side collective-byte prediction
+    (``predicted_wire`` over the sim ledger) vs the mesh transport's
+    *measured* physical traffic, gated at <= 10% relative error per
+    channel (``launch/dryrun.py --validate-census`` runs the same
+    comparison, optionally over real process ranks).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import merge_json
+from repro.data.synthetic import make_workload
+from repro.dist.meshrun import bench_graph, build_pair, run_scenario
+from repro.dist.transport import CHANNELS, MeshTransport
+
+MESH_SCHEMA_VERSION = 1
+MAX_OVERHEAD_FRAC = 0.25
+
+
+def loopback_overhead(n_vertices: int = 300, n_queries: int = 12,
+                      reps: int = 2) -> dict:
+    """Wall-clock cost of metering every byte through the seam's mesh
+    delivery path, against the sim oracle on an identical workload."""
+    g = bench_graph(n_vertices=n_vertices)
+    sim, mesh = build_pair(g, MeshTransport(), probe_mode="plane")
+    sim.use_cache = mesh.use_cache = False   # time probes, not lookups
+    qs = make_workload(g, n_queries, seed=11, hot_fraction=0.4)
+    for q in qs:                          # compile warmup for both
+        sim.query(q, probe_mode="plane")
+        mesh.query(q, probe_mode="plane")
+    t_sim = t_mesh = 0.0
+    m_sim = m_mesh = 0
+    for _ in range(reps):                 # interleave to balance drift
+        t0 = time.perf_counter()
+        for q in qs:
+            m_sim += sim.query(q, probe_mode="plane")[1].n_matches
+        t_sim += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for q in qs:
+            m_mesh += mesh.query(q, probe_mode="plane")[1].n_matches
+        t_mesh += time.perf_counter() - t0
+    assert m_sim == m_mesh, \
+        f"mesh backend changed answers: {m_sim} vs {m_mesh}"
+    assert dict(sim.transport.wire) == dict(mesh.transport.wire), \
+        "sim/mesh logical wire ledgers diverged"
+    overhead = (t_mesh - t_sim) / max(t_sim, 1e-9)
+    assert overhead <= MAX_OVERHEAD_FRAC, \
+        f"mesh seam overhead {overhead:.1%} exceeds " \
+        f"{MAX_OVERHEAD_FRAC:.0%}"
+    out = {
+        "config": {"n_vertices": n_vertices, "n_queries": n_queries,
+                   "reps": reps},
+        "sim_wall_s": round(t_sim, 3),
+        "mesh_wall_s": round(t_mesh, 3),
+        "overhead_frac": round(overhead, 4),
+        "matches": m_sim,
+        "wire_bytes": {ch: int(sim.transport.wire[ch])
+                       for ch in CHANNELS},
+        "measured_bytes": mesh.transport.measured(),
+    }
+    merge_json("BENCH_mesh.json", "loopback_overhead",
+               {"schema_version": MESH_SCHEMA_VERSION, **out})
+    return out
+
+
+def census() -> dict:
+    """Predicted vs measured bytes-on-wire (the <=10% dryrun gate)."""
+    rec = run_scenario("census")
+    assert rec["ledger_identical"], "sim/mesh wire ledgers diverged"
+    assert rec["within_10pct"], \
+        f"census breach: worst channel error {rec['worst_rel_err']:.1%}"
+    out = {"schema_version": MESH_SCHEMA_VERSION,
+           "world": rec["world"],
+           "channels": rec["channels"],
+           "total": rec["total"],
+           "worst_rel_err": round(rec["worst_rel_err"], 4),
+           "within_10pct": rec["within_10pct"]}
+    merge_json("BENCH_mesh.json", "census", out)
+    return out
+
+
+def run() -> list[tuple]:
+    over = loopback_overhead()
+    cen = census()
+    return [
+        ("mesh/loopback_overhead_frac", over["overhead_frac"] * 1e6,
+         f"wall {over['mesh_wall_s']}s vs {over['sim_wall_s']}s"),
+        ("mesh/census_worst_rel_err", cen["worst_rel_err"] * 1e6,
+         f"total {cen['total']['measured']}B vs "
+         f"{cen['total']['predicted']}B predicted (world="
+         f"{cen['world']})"),
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

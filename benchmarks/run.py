@@ -20,12 +20,13 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="partition|migration|cache|plan|pruning|e2e|chaos")
+                    help="partition|migration|cache|plan|pruning|e2e|"
+                         "chaos|mesh")
     args = ap.parse_args()
 
     from benchmarks import (bench_cache, bench_chaos, bench_e2e,
-                            bench_migration, bench_partition, bench_plan,
-                            bench_pruning)
+                            bench_mesh, bench_migration, bench_partition,
+                            bench_plan, bench_pruning)
     from benchmarks.common import emit
 
     suites = {
@@ -36,6 +37,7 @@ def main() -> None:
         "pruning": bench_pruning.run,
         "e2e": bench_e2e.run,
         "chaos": bench_chaos.run,
+        "mesh": bench_mesh.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

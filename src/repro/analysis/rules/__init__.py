@@ -3,8 +3,8 @@
 from repro.analysis.rules import (rpr001_buckets, rpr002_epoch, rpr003_crc,
                                   rpr004_wallclock, rpr005_sync,
                                   rpr006_contract, rpr007_chaosrng,
-                                  rpr008_router)
+                                  rpr008_router, rpr009_transport)
 
 __all__ = ["rpr001_buckets", "rpr002_epoch", "rpr003_crc",
            "rpr004_wallclock", "rpr005_sync", "rpr006_contract",
-           "rpr007_chaosrng", "rpr008_router"]
+           "rpr007_chaosrng", "rpr008_router", "rpr009_transport"]

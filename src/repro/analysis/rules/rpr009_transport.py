@@ -1,0 +1,118 @@
+"""RPR009: every cross-machine byte goes through the transport seam.
+
+The transport refactor (repro.dist.transport) holds its cross-backend
+bit-identity contract — "SimTransport and MeshTransport agree on
+matches, counters, and comm bytes" — only if NO engine code moves
+another machine's bytes around the seam.  Two bypass shapes exist:
+
+  * calling the legacy link primitives (``crc_transfer`` /
+    ``_link_faults``) directly — those ship bytes through the
+    process-wide default SimTransport, so a mesh engine would silently
+    run that transfer in-process: the fault-free run still passes and
+    the divergence only surfaces as a wire-ledger mismatch (or worse,
+    bytes that never physically reach their rank);
+  * reading another machine's replica image via a
+    ``replicas.copies[sid][m]`` subscript — the standby bytes must come
+    through ``transport.fetch_replica`` (the remote-read site on a real
+    mesh), exactly as RPR008 funnels primary reads through the router.
+
+Heuristic, inside ``src/repro/dist/``: any Call to ``crc_transfer`` or
+``_link_faults`` (plain or attribute form) is flagged, and any
+Load-context subscript of an attribute named ``copies`` is flagged
+unless it sits inside an assignment/delete target (ownership mutations
+— e.g. the COMMIT-phase ``del self.replicas.copies[sid][m]`` — stay
+legal).  ``transport.py`` itself and ``replica.py`` (the store's owner
+module) are exempt; ``migration.py``'s ``crc_transfer`` *definition* is
+the out-of-engine compat shim and defines, not calls, the primitive.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.registry import Rule, register
+
+LINK_PRIMITIVES = frozenset({"crc_transfer", "_link_faults"})
+
+REPLICA_STORE_ATTR = "copies"
+
+
+def _iter_functions(tree: ast.AST) -> Iterator[ast.AST]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _call_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _mutation_target_ids(tree: ast.AST) -> set:
+    """ids of every AST node inside an assignment or delete target —
+    ownership mutations of the replica store are the owner's business,
+    only *reads* of another machine's bytes must cross the seam."""
+    out: set = set()
+
+    def mark(node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            out.add(id(sub))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Assign, ast.Delete)):
+            for tgt in node.targets:
+                mark(tgt)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            mark(node.target)
+    return out
+
+
+@register
+class TransportSeamRule(Rule):
+    id = "RPR009"
+    name = "transport-seam"
+    scope = ("src/repro/dist/*.py",)
+
+    def check(self, ctx):
+        if ctx.rel.endswith("/transport.py"):
+            return
+        in_targets = _mutation_target_ids(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                name = _call_name(node)
+                if name in LINK_PRIMITIVES:
+                    yield self.finding(
+                        ctx, node,
+                        f"direct call to link primitive '{name}' — bytes "
+                        "bypass the engine's transport backend (a mesh "
+                        "engine would ship this transfer in-process, off "
+                        "the wire ledger)",
+                        hint="route the transfer through "
+                             "engine.transport.transfer(...); "
+                             "migration.crc_transfer is a compat shim "
+                             "for out-of-engine callers only")
+                continue
+            if ctx.rel.endswith("/replica.py"):
+                continue            # the store's owner module
+            if not isinstance(node, ast.Subscript):
+                continue
+            if not isinstance(node.ctx, ast.Load):
+                continue
+            if id(node) in in_targets:
+                continue            # inside an assign/delete target
+            val = node.value
+            if isinstance(val, ast.Attribute) \
+                    and val.attr == REPLICA_STORE_ATTR:
+                yield self.finding(
+                    ctx, node,
+                    "direct read of the replica store "
+                    "('.copies[...]') outside the transport — standby "
+                    "bytes must come through the seam so a mesh "
+                    "backend can home them remotely",
+                    hint="use engine.transport.fetch_replica(sid, "
+                         "machine) for standby reads")

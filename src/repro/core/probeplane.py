@@ -76,8 +76,13 @@ class TreePlane:
         return int(self.rows.size) * 4
 
 
-def build_tree_plane(tree: ARTree) -> TreePlane:
-    """Pack one non-empty aR-tree into its device-resident plane."""
+def build_tree_plane(tree: ARTree, device=None) -> TreePlane:
+    """Pack one non-empty aR-tree into its device-resident plane.
+
+    ``device`` pins the packed rows to a specific jax device — the mesh
+    transport homes each machine's planes on that machine's local device
+    (`ClusterPlanes.device_of`); the default commits to the launch
+    device exactly as before."""
     import jax.numpy as jnp
 
     from repro.kernels.dominance.ops import ROW_BUCKET, bucket
@@ -106,8 +111,13 @@ def build_tree_plane(tree: ARTree) -> TreePlane:
     internal[:offsets[-1]] = True
     leaf = np.zeros(r_b, bool)
     leaf[offsets[-1]:n_rows] = True
+    if device is not None:
+        import jax
+        dev_rows = jax.device_put(padded, device)
+    else:
+        dev_rows = jnp.asarray(padded)
     return TreePlane(tree=tree, token=next(_PLANE_TOKENS),
-                     rows=jnp.asarray(padded), n_rows=n_rows,
+                     rows=dev_rows, n_rows=n_rows,
                      n_levels=tree.n_levels, leaf_offset=int(offsets[-1]),
                      parent=parent, is_root=is_root, internal=internal,
                      leaf=leaf)
@@ -409,11 +419,14 @@ class ClusterPlanes:
         self._planes: dict[tuple[int, int], TreePlane] = {}
         self._assembled: OrderedDict[tuple, AssembledPlanes] = OrderedDict()
         self._mega: OrderedDict[tuple, MegaAssembly] = OrderedDict()
+        # transport hook: sid -> jax device its plane is pinned to.
+        # None (default) = launch device, the single-device behavior.
+        self.device_of = None
         self.stats = {"plane_builds": 0, "invalidations": 0,
                       "assembles": 0, "assemble_reuses": 0, "probes": 0,
                       "mega_assembles": 0, "mega_assemble_reuses": 0,
                       "mega_probes": 0,
-                      "h2d_bytes": 0, "d2h_bytes": 0}
+                      "h2d_bytes": 0, "d2h_bytes": 0, "gather_bytes": 0}
 
     def resident_bytes(self) -> int:
         """Total device bytes held: per-tree planes PLUS the assembled
@@ -433,11 +446,31 @@ class ClusterPlanes:
             return cached
         if cached is not None:      # index replaced behind our back
             self._drop(key)
-        plane = build_tree_plane(tree)
+        device = self.device_of(sid) if self.device_of else None
+        plane = build_tree_plane(tree, device=device)
         self._planes[key] = plane
         self.stats["plane_builds"] += 1
         self.stats["h2d_bytes"] += plane.device_nbytes
         return plane
+
+    def _gathered(self, plane: TreePlane) -> TreePlane:
+        """The plane with rows on the LAUNCH device.
+
+        Assembly stacks rows from many planes into one slab, which JAX
+        requires to be co-located — with per-machine pinning active the
+        remote-homed planes are pulled to the launch device here, each
+        pull metered as `gather_bytes` (the mesh cross-device traffic),
+        never as `h2d_bytes` (which feeds per-query telemetry and must
+        stay bit-identical across backends)."""
+        if self.device_of is None:
+            return plane
+        import jax
+        launch = jax.devices()[0]
+        if next(iter(plane.rows.devices())) == launch:
+            return plane
+        rows = jax.device_put(plane.rows, launch)
+        self.stats["gather_bytes"] += plane.device_nbytes
+        return dataclasses.replace(plane, rows=rows)
 
     def build_shard(self, sid: int, index) -> None:
         """Eagerly pack every non-empty tree of a freshly built index."""
@@ -486,6 +519,8 @@ class ClusterPlanes:
             self._assembled.move_to_end(sig)
             self.stats["assemble_reuses"] += 1
             return hit
+        # cold assembly: remote-pinned planes gather to the launch device
+        planes = [self._gathered(p) for p in planes]
         assembled = _assemble(planes, keys)
         self._assembled[sig] = assembled
         while len(self._assembled) > _MAX_ASSEMBLED:
@@ -534,6 +569,8 @@ class ClusterPlanes:
             self._mega.move_to_end(sig)
             self.stats["mega_assemble_reuses"] += 1
             return hit
+        # cold assembly: remote-pinned planes gather to the launch device
+        planes = {k: self._gathered(p) for k, p in planes.items()}
 
         moved = 0
         blocks: dict[int, MegaBlock] = {}

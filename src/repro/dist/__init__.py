@@ -4,6 +4,10 @@ Modules:
   partition   — METIS-role graph partitioner (min edge-cut + size balance).
   shard       — ultra-fine shards with halo context + CRC32'd byte images.
   loadbalance — multi-metric load fusion, sigma trigger, Algorithm-1 planner.
+  transport   — THE inter-machine seam: every cross-machine byte flows
+                through Transport.transfer/account/broadcast/gather
+                (RPR009).  SimTransport = deterministic oracle;
+                MeshTransport = real jax.distributed process ranks.
   migration   — CRC-verified hot shard migration with exponential backoff
                 and two-phase prepare/commit (non-interruptible queries).
   chaos       — deterministic seeded fault schedules (FaultPlan), named
@@ -11,5 +15,7 @@ Modules:
   replica     — k-replica standby placement with anti-affinity, CRC'd
                 full/delta sync, failover promotion, quorum audit.
   cluster     — the DistributedGNNPE engine tying everything together.
+  meshrun     — multi-process rank launcher + cross-backend scenarios
+                (identity / megabatch / chaos / census).
   sharding    — logical-axis -> mesh-axis rule registry for the JAX models.
 """

@@ -65,9 +65,11 @@ from repro.dist import loadbalance as lb
 from repro.dist.chaos import (CRASH, HOOK_BATCH, HOOK_QUERY, HOOK_REBALANCE,
                               HOOK_UPDATE_COMMIT, HOOK_UPDATE_STAGE,
                               ClusterUnavailableError, TransferTimeoutError)
-from repro.dist.migration import (LINK_BYTES_PER_MS, crc_transfer,
-                                  hot_migrate, migrate_with_retry)
+from repro.dist.migration import hot_migrate, migrate_with_retry
 from repro.dist.replica import ReplicaSet
+from repro.dist.transport import (CH_DELTA, CH_OPERANDS, CH_READBACK,
+                                  CH_ROWS, LINK_BYTES_PER_MS,
+                                  make_transport)
 from repro.dist.router import QueryBudget, QueryOutcome, Route, ShardRouter
 from repro.dist.partition import (Partition, edge_cut, metis_like_partition,
                                   size_balance)
@@ -193,7 +195,9 @@ class DistributedGNNPE:
               assignment: np.ndarray | None = None,
               params: dict | None = None,
               replication: int = 0,
-              failover_mode: str = "promote") -> "DistributedGNNPE":
+              failover_mode: str = "promote",
+              backend: str = "sim",
+              transport=None) -> "DistributedGNNPE":
         """Offline build.  `assignment` / `params` inject a fixed
         partition assignment and pretrained GNN params instead of
         running the partitioner / trainer — the rebuild-equivalence
@@ -217,6 +221,14 @@ class DistributedGNNPE:
             `recover()` (or the next write/rebalance, which recovers
             first).  No one-way unavailability latch: queries fail
             typed only when a shard they NEED lost every copy.
+
+        `backend` picks the transport every inter-machine byte crosses
+        (repro.dist.transport): "sim" (default, in-process link model —
+        the deterministic oracle) or "mesh" (jax.distributed process
+        ranks; bytes physically ship between ranks / through the local
+        device).  `transport` injects a pre-configured Transport
+        instance instead (e.g. a MeshTransport with explicit
+        world/rank/coordinator); it overrides `backend`.
         """
         self = object.__new__(cls)
         # reprolint: disable=RPR004 -- build_s is a wall diagnostic
@@ -235,6 +247,11 @@ class DistributedGNNPE:
         if failover_mode not in ("promote", "route"):
             raise ValueError(f"unknown failover_mode {failover_mode!r}")
         self.failover_mode = failover_mode
+        # the transport seam: every cross-machine byte (shard images,
+        # deltas, candidate rows, megabatch operands/readbacks) flows
+        # through self.transport, which owns the chaos plan + wire ledger
+        self.transport = (transport if transport is not None
+                          else make_transport(backend)).bind(self)
         # default probe path: "host" (per-(path, shard) traversal),
         # "device" (PR-2 per-path slab launch), or "plane" (device-
         # resident planes, one fused launch per query plan).  The legacy
@@ -311,6 +328,10 @@ class DistributedGNNPE:
         # initial placement doubles as the index-build job allocation:
         # both balance estimated shard work over heterogeneous machines
         self.routing: dict[int, int] = dict(train_alloc)
+        # topology exists (shards + planes + routing): let the transport
+        # home per-machine state (mesh backend pins probe planes to each
+        # machine's local device; sim is placement-agnostic)
+        self.transport.on_topology(self)
 
         # 5. PE-score model: shard features -> global features; labels
         #    from sampled offline probes
@@ -353,7 +374,8 @@ class DistributedGNNPE:
             for sid in sorted(self.shards):
                 self.replicas.sync_full(sid, self.shards[sid],
                                         self.routing[sid],
-                                        self.dead_machines, rng)
+                                        self.dead_machines, rng,
+                                        transport=self.transport)
         # 7c. degraded-mode serving: the router is the single resolver
         #     for shard reads (primary-or-standby, RPR008) and owns the
         #     HEALTHY/DEGRADED/BROWNOUT health state machine
@@ -605,6 +627,18 @@ class DistributedGNNPE:
     # ------------------------------------------------------------------ #
     # chaos harness + replication plumbing
     # ------------------------------------------------------------------ #
+    @property
+    def chaos(self):
+        """The attached FaultPlan.  Ownership lives on the transport —
+        link faults fire inside Transport.transfer — and this view keeps
+        the engine's hook sites (`self.chaos.fire`, RPR007 rng rule)
+        reading naturally."""
+        return self.transport.chaos
+
+    @chaos.setter
+    def chaos(self, plan) -> None:
+        self.transport.chaos = plan
+
     def set_fault_plan(self, plan) -> None:
         """Attach a chaos FaultPlan (None detaches).  Every named hook
         point consults the plan; with none attached hooks are no-ops."""
@@ -618,7 +652,8 @@ class DistributedGNNPE:
             for sid in sorted(self.shards):
                 self.replicas.sync_full(sid, self.shards[sid],
                                         self.routing[sid],
-                                        self.dead_machines, self._rng)
+                                        self.dead_machines, self._rng,
+                                        transport=self.transport)
 
     def _check_available(self) -> None:
         if self._unavailable is not None:
@@ -974,6 +1009,9 @@ class DistributedGNNPE:
             rows_by_machine[mk] += n_rows
         tel.comm_bytes += tx_bytes
         tel.cross_shard_rows += n_rows
+        if tx_bytes:
+            # surviving candidate rows travel shard-holder -> master
+            self.transport.account(CH_ROWS, tx_bytes, dst=mk)
         for i in range(l + 1):
             pos_mask[i, gverts[:, i]] = True
 
@@ -1261,11 +1299,17 @@ class DistributedGNNPE:
                                                       l + 1)[0])
                     mask_rows[l].append(rows[::-1])
             if qmat:
-                flight = self.planes.mega_dispatch(
-                    assembly,
-                    {l: np.stack(v) for l, v in qmat.items()},
-                    {l: np.stack(v) for l, v in mask_rows.items()},
-                    mask_bits)
+                qstk = {l: np.stack(v) for l, v in qmat.items()}
+                mstk = {l: np.stack(v) for l, v in mask_rows.items()}
+                # the fused-launch operands (query embeddings, mask-row
+                # indirection, packed masks) ship master -> every
+                # shard-holder rank before the launch
+                self.transport.broadcast(
+                    CH_OPERANDS,
+                    mask_bits.nbytes + sum(a.nbytes for a in qstk.values())
+                    + sum(a.nbytes for a in mstk.values()))
+                flight = self.planes.mega_dispatch(assembly, qstk, mstk,
+                                                   mask_bits)
             h2d = self.planes.stats["h2d_bytes"] - h2d0
         return {"items": items, "flight": flight, "plan_mode": plan_mode,
                 "h2d_bytes": h2d, "data_epoch": self._data_epoch,
@@ -1315,6 +1359,9 @@ class DistributedGNNPE:
             res = self.planes.mega_readback(flight)
             d2h = res.d2h_bytes
             h2d_sel = self.planes.stats["h2d_bytes"] - h2d0
+            if d2h:
+                # surviving candidate ids gather back from the ranks
+                self.transport.gather(CH_READBACK, d2h)
         out = []
         for i, it in enumerate(items):
             matches, tel = self._consume_query(it, res, fb_keys,
@@ -1596,9 +1643,10 @@ class DistributedGNNPE:
                 # planes), and every live standby replica stages the
                 # same image so it commits in lockstep with the primary
                 blob = shard_delta(old_shard, new_shard)
-                tr = crc_transfer(blob, rng=self._rng,
-                                  corrupt_prob=corrupt_prob,
-                                  chaos=self.chaos)
+                tr = self.transport.transfer(
+                    blob, rng=self._rng, dst=self.routing.get(sid),
+                    channel=CH_DELTA, corrupt_prob=corrupt_prob,
+                    chaos=self.chaos)
                 report.retransmissions += tr.retransmissions
                 report.virtual_ms += tr.virtual_ms
                 report.delta_bytes += len(blob)
@@ -1615,7 +1663,7 @@ class DistributedGNNPE:
                                apply_shard_delta(old_shard, tr.received)))
                 rep_staged.extend(self.replicas.stage_delta(
                     sid, blob, self.dead_machines, self._rng,
-                    chaos=self.chaos))
+                    chaos=self.chaos, transport=self.transport))
             # final fault point before the commit: a timeout or crash
             # here must still leave the engine fully-old
             self._fire_hook(HOOK_UPDATE_COMMIT)
@@ -1692,7 +1740,8 @@ class DistributedGNNPE:
                     self.replicas.sync_full(sid, self.shards[sid],
                                             self.routing[sid],
                                             self.dead_machines, self._rng,
-                                            chaos=self.chaos)
+                                            chaos=self.chaos,
+                                            transport=self.transport)
             except TransferTimeoutError:
                 pass
         self.update_reports.append(report)
@@ -1826,7 +1875,8 @@ class DistributedGNNPE:
                 res = migrate_with_retry(self.shards, plan.moves,
                                          self.routing, rng=self._rng,
                                          corrupt_prob=corrupt_prob,
-                                         chaos=self.chaos)
+                                         chaos=self.chaos,
+                                         transport=self.transport)
                 self.aborted_transactions += res.timeouts
                 if res.migrated:
                     self.migrations.append(res)
@@ -1846,7 +1896,8 @@ class DistributedGNNPE:
                                     sid, self.shards[sid],
                                     self.routing[sid],
                                     self.dead_machines, self._rng,
-                                    chaos=self.chaos)
+                                    chaos=self.chaos,
+                                    transport=self.transport)
                         except TransferTimeoutError:
                             pass
                     self._refresh_loads()
@@ -1949,7 +2000,8 @@ class DistributedGNNPE:
                           key=lambda k: (loads[k] / self.cpu_w[k], k))
                 loads[tgt] += self._shard_bytes[sid]
                 moves.append((sid, machine_id, tgt))
-            hot_migrate(self.shards, moves, self.routing, rng=self._rng)
+            hot_migrate(self.shards, moves, self.routing, rng=self._rng,
+                        transport=self.transport)
         for sid in victims:
             self.planes.invalidate(sid)
         if self.replicas.k:
@@ -1960,7 +2012,8 @@ class DistributedGNNPE:
                     self.replicas.sync_full(sid, self.shards[sid],
                                             self.routing[sid],
                                             self.dead_machines, self._rng,
-                                            chaos=self.chaos)
+                                            chaos=self.chaos,
+                                            transport=self.transport)
             except TransferTimeoutError:
                 pass
         return victims
@@ -2004,7 +2057,8 @@ class DistributedGNNPE:
                     self.replicas.sync_full(sid, self.shards[sid],
                                             self.routing[sid],
                                             self.dead_machines, self._rng,
-                                            chaos=self.chaos)
+                                            chaos=self.chaos,
+                                            transport=self.transport)
             except TransferTimeoutError:
                 pass
         if not lost:

@@ -1,0 +1,365 @@
+"""Mesh runner: real-process rank bootstrap + cross-backend scenarios.
+
+``python -m repro.dist.meshrun --launch N --scenario S`` starts N real
+OS processes (rank 0 drives, ranks 1..N-1 serve as the remote ends of
+every transport link), bootstraps them into one ``jax.distributed``
+cluster over a loopback coordinator, runs scenario S on the driver and
+prints its JSON verdict.  The scenarios are the cross-backend
+acceptance property made executable:
+
+  * ``identity``  — the same workload, same seeds, on a SimTransport
+    engine and a MeshTransport engine; matches, per-query counters and
+    the per-channel wire ledger must agree bit-for-bit in host and
+    plane probe modes.
+  * ``megabatch`` — the same property through ``query_batch`` (fused
+    multi-query launches, operand broadcast + candidate readback).
+  * ``chaos``     — one seeded FaultPlan crash schedule replayed on
+    both backends; every answer (including typed Unavailable slots)
+    must be identical.
+  * ``census``    — the 300-vertex bench: dryrun's collective-byte
+    census prediction (:func:`repro.dist.transport.predicted_wire`
+    over the sim ledger) vs the mesh transport's *measured*
+    bytes-on-wire, gated at <=10% relative error per channel.
+
+Every scenario builds the sim engine first and injects its partition
+assignment + GNN params into the mesh engine, so both executions are
+bit-comparable index for index (the ``rebuild_reference`` trick).  The
+scenarios also run in-process on a ``world=1`` loopback MeshTransport
+(tests, ``dryrun.py --validate-census``) — same code path, no
+coordinator needed.
+
+A child that cannot bootstrap ``jax.distributed`` (sandboxed CI, no
+loopback sockets) exits with :data:`INIT_FAILED_EXIT`; the launcher
+reports ``ok=False, init_failed=True`` so callers can skip rather than
+fail.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.dist.shard import shard_crc32
+from repro.dist.transport import (CHANNELS, MeshTransport, SimTransport,
+                                  predicted_wire)
+
+__all__ = ["SCENARIOS", "INIT_FAILED_EXIT", "bench_graph", "bench_queries",
+           "build_engine", "build_pair", "run_scenario", "launch",
+           "census_diff"]
+
+SCENARIOS = ("identity", "megabatch", "chaos", "census")
+INIT_FAILED_EXIT = 77        # child could not bootstrap jax.distributed
+_RESULT_MARK = "MESHRUN_RESULT "
+_BASE_PORT = 29400           # + pid spread, so parallel CI runs don't clash
+
+# the shared scenario cluster shape: 4 machines x 2 shards, replication 1
+N_MACHINES = 4
+SEED = 7
+
+
+def bench_graph(n_vertices: int = 120, seed: int = SEED):
+    """The deterministic scenario data graph (300v for the census)."""
+    from repro.data.synthetic import community_graph
+    return community_graph(n_vertices, max(n_vertices // 50, 2), 0.3, 0.02,
+                           4, seed=seed)
+
+
+def bench_queries(graph, n: int = 4, seed: int = SEED):
+    from repro.data.synthetic import make_workload
+    return make_workload(graph, n_queries=n, seed=seed + 1)
+
+
+def build_engine(graph, *, transport=None, probe_mode: str = "host",
+                 twin=None, replication: int = 1,
+                 failover_mode: str = "promote"):
+    """One scenario engine; `transport=None` -> sim backend.  `twin`
+    injects a prior engine's assignment/params so both backends build
+    bit-comparable indexes without re-running partitioner + trainer."""
+    from repro.dist.cluster import DistributedGNNPE
+    kw = {}
+    if twin is not None:
+        kw = dict(assignment=twin.assignment, params=twin.params)
+    return DistributedGNNPE.build(
+        graph, n_machines=N_MACHINES, shards_per_machine=2,
+        gnn_train_steps=4, seed=SEED, probe_mode=probe_mode,
+        replication=replication, failover_mode=failover_mode,
+        transport=transport, **kw)
+
+
+def build_pair(graph, mesh_transport, probe_mode: str = "host",
+               replication: int = 1, failover_mode: str = "promote"):
+    """(sim engine, mesh engine) over identical indexes and seeds."""
+    sim = build_engine(graph, probe_mode=probe_mode,
+                       replication=replication,
+                       failover_mode=failover_mode)
+    mesh = build_engine(graph, transport=mesh_transport,
+                        probe_mode=probe_mode, twin=sim,
+                        replication=replication,
+                        failover_mode=failover_mode)
+    return sim, mesh
+
+
+def _match_digest(matches: list) -> list:
+    """[n_matches, crc32 of the canonically-serialized match list] —
+    compact but collision-safe enough to assert bit-identity across
+    process boundaries."""
+    blob = json.dumps(sorted([list(map(int, m)) for m in matches]),
+                      separators=(",", ":")).encode()
+    return [len(matches), shard_crc32(blob)]
+
+
+def _wire(t) -> dict:
+    return {ch: int(t.wire[ch]) for ch in CHANNELS}
+
+
+def _run_queries(engine, queries, probe_mode: str) -> dict:
+    digests, comm = [], []
+    for q in queries:
+        m, tel = engine.query(q, probe_mode=probe_mode)
+        digests.append(_match_digest(m))
+        comm.append(int(tel.comm_bytes))
+    return {"matches": digests, "comm_bytes": comm}
+
+
+def _scenario_identity(mesh_t) -> dict:
+    g = bench_graph()
+    qs = bench_queries(g)
+    sim, mesh = build_pair(g, mesh_t)
+    out: dict = {"modes": {}}
+    for mode in ("host", "plane"):
+        a = _run_queries(sim, qs, mode)
+        b = _run_queries(mesh, qs, mode)
+        out["modes"][mode] = {"sim": a, "mesh": b,
+                              "identical": a == b}
+    out["sim_wire"] = _wire(sim.transport)
+    out["mesh_wire"] = _wire(mesh.transport)
+    out["identical"] = (all(v["identical"] for v in out["modes"].values())
+                        and out["sim_wire"] == out["mesh_wire"])
+    return out
+
+
+def _scenario_megabatch(mesh_t) -> dict:
+    g = bench_graph()
+    qs = bench_queries(g, n=4)
+    sim, mesh = build_pair(g, mesh_t, probe_mode="plane")
+    a = [(_match_digest(m), int(t.n_matches)) for m, t in
+         sim.query_batch(qs)]
+    b = [(_match_digest(m), int(t.n_matches)) for m, t in
+         mesh.query_batch(qs)]
+    out = {"sim": a, "mesh": b,
+           "sim_wire": _wire(sim.transport),
+           "mesh_wire": _wire(mesh.transport)}
+    out["identical"] = a == b and out["sim_wire"] == out["mesh_wire"]
+    return out
+
+
+def _answers_digest(answers: list) -> list:
+    """Typed serialization of run_script answers: match lists digest,
+    counters pass through, Unavailable slots keep their typed fields."""
+    from repro.dist.chaos import Unavailable
+    out = []
+    for a in answers:
+        if isinstance(a, Unavailable):
+            out.append(["unavailable", a.reason, list(a.sids),
+                        list(a.machines)])
+        elif isinstance(a, list):
+            out.append(["matches"] + _match_digest(a))
+        else:
+            out.append(["count", int(a)])
+    return out
+
+
+def _scenario_chaos(mesh_t) -> dict:
+    from repro.dist.chaos import (CRASH, HOOK_QUERY, HOOK_READ, TIMEOUT,
+                                  FaultPlan, FaultSpec, default_script,
+                                  run_script)
+    g = bench_graph()
+    plan = FaultPlan([
+        FaultSpec(CRASH, HOOK_QUERY, at=2, machine=2),
+        FaultSpec(TIMEOUT, HOOK_READ, at=1, times=2),
+        FaultSpec(CRASH, HOOK_QUERY, at=6, machine=1),
+    ], seed=5)
+    ops = default_script(g, seed=3, n_queries=4, modes=("host", "plane"),
+                         with_update=False)
+    sim, mesh = build_pair(g, mesh_t, replication=1,
+                           failover_mode="route")
+    plan_a, plan_b = plan.replay(), plan.replay()
+    a_ans, a_out = run_script(sim, ops, plan=plan_a,
+                              on_unavailable="continue")
+    b_ans, b_out = run_script(mesh, ops, plan=plan_b,
+                              on_unavailable="continue")
+    a = {"answers": _answers_digest(a_ans), "outcome": a_out,
+         "fired": len(plan_a.fired)}
+    b = {"answers": _answers_digest(b_ans), "outcome": b_out,
+         "fired": len(plan_b.fired)}
+    return {"sim": a, "mesh": b, "identical": a == b}
+
+
+def census_diff(sim_transport, mesh_transport, world: int) -> dict:
+    """Predicted (census) vs measured mesh wire bytes, per channel.
+
+    Relative error is |measured - predicted| / predicted per nonzero
+    predicted channel plus the total; channels the census predicts as
+    silent must measure below 10% of total traffic (headers/control)."""
+    pred = predicted_wire(sim_transport, world)
+    meas = mesh_transport.measured()
+    per: dict = {}
+    total_p = sum(pred.values())
+    total_m = sum(meas.values())
+    worst = 0.0
+    for ch in CHANNELS:
+        p, m = pred[ch], meas.get(ch, 0)
+        if p:
+            err = abs(m - p) / p
+            per[ch] = {"predicted": int(p), "measured": int(m),
+                       "rel_err": err}
+            worst = max(worst, err)
+        elif m:
+            err = m / max(total_m, 1)
+            per[ch] = {"predicted": 0, "measured": int(m),
+                       "share_of_total": err}
+            worst = max(worst, err)
+    total_err = (abs(total_m - total_p) / total_p) if total_p else 0.0
+    worst = max(worst, total_err)
+    return {"channels": per,
+            "total": {"predicted": int(total_p), "measured": int(total_m),
+                      "rel_err": total_err},
+            "worst_rel_err": worst,
+            "within_10pct": worst <= 0.10}
+
+
+def _scenario_census(mesh_t) -> dict:
+    g = bench_graph(n_vertices=300)
+    qs = bench_queries(g, n=6)
+    sim, mesh = build_pair(g, mesh_t, probe_mode="plane")
+    for e in (sim, mesh):
+        for q in qs[:3]:
+            e.query(q, probe_mode="plane")
+        e.query_batch(qs[3:])
+    out = census_diff(sim.transport, mesh.transport, mesh_t.world)
+    out["sim_wire"] = _wire(sim.transport)
+    out["mesh_wire"] = _wire(mesh.transport)
+    out["ledger_identical"] = out["sim_wire"] == out["mesh_wire"]
+    out["identical"] = out["ledger_identical"] and out["within_10pct"]
+    return out
+
+
+_SCENARIO_FNS = {"identity": _scenario_identity,
+                 "megabatch": _scenario_megabatch,
+                 "chaos": _scenario_chaos,
+                 "census": _scenario_census}
+
+
+def run_scenario(scenario: str, mesh_transport=None) -> dict:
+    """Run one scenario against `mesh_transport` (default: a fresh
+    world=1 loopback MeshTransport) and return its JSON-able verdict."""
+    if scenario not in SCENARIOS:
+        raise ValueError(f"unknown scenario {scenario!r}")
+    t = mesh_transport if mesh_transport is not None else MeshTransport()
+    out = _SCENARIO_FNS[scenario](t)
+    out["scenario"] = scenario
+    out["world"] = t.world
+    return out
+
+
+# -------------------------------------------------------------------- #
+# multi-process launch
+# -------------------------------------------------------------------- #
+def _child_env() -> dict:
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def launch(world: int, scenario: str, timeout_s: float = 600.0) -> dict:
+    """Start `world` real processes, run `scenario` on rank 0, return
+    its parsed verdict.  ``ok=False, init_failed=True`` means the ranks
+    could not bootstrap (callers should skip, not fail)."""
+    port = _BASE_PORT + (os.getpid() % 2000)
+    coord = f"127.0.0.1:{port}"
+    env = _child_env()
+    procs = []
+    for rank in range(world):
+        cmd = [sys.executable, "-m", "repro.dist.meshrun",
+               "--world", str(world), "--rank", str(rank),
+               "--coord", coord, "--scenario", scenario]
+        procs.append(subprocess.Popen(
+            cmd, env=env,
+            stdout=subprocess.PIPE if rank == 0 else subprocess.DEVNULL,
+            stderr=subprocess.PIPE if rank == 0 else subprocess.DEVNULL,
+            text=True))
+    try:
+        stdout, stderr = procs[0].communicate(timeout=timeout_s)
+        for p in procs[1:]:
+            p.wait(timeout=60.0)
+    except subprocess.TimeoutExpired:
+        for p in procs:
+            p.kill()
+        return {"ok": False, "init_failed": False,
+                "detail": f"timeout after {timeout_s}s"}
+    codes = [p.returncode for p in procs]
+    if any(c == INIT_FAILED_EXIT for c in codes):
+        return {"ok": False, "init_failed": True, "exit_codes": codes}
+    result = None
+    for line in (stdout or "").splitlines():
+        if line.startswith(_RESULT_MARK):
+            result = json.loads(line[len(_RESULT_MARK):])
+    if result is None or any(codes):
+        return {"ok": False, "init_failed": False, "exit_codes": codes,
+                "detail": (stderr or "")[-2000:]}
+    return {"ok": True, "init_failed": False, "exit_codes": codes,
+            "result": result}
+
+
+def _child_main(world: int, rank: int, coord: str, scenario: str) -> int:
+    import faulthandler
+    faulthandler.enable()
+    t = MeshTransport(world=world, rank=rank, coordinator=coord,
+                      timeout_ms=300_000)
+    try:
+        t.connect()
+    except Exception as exc:                      # noqa: BLE001
+        print(f"meshrun rank {rank}: init failed: {exc}", file=sys.stderr)
+        return INIT_FAILED_EXIT
+    if rank != 0:
+        t.serve()
+        return 0
+    out = run_scenario(scenario, t)
+    t.close()
+    print(_RESULT_MARK + json.dumps(out))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="mesh transport rank runner / launcher")
+    ap.add_argument("--launch", type=int, default=0, metavar="N",
+                    help="launch N real ranks and run the scenario")
+    ap.add_argument("--scenario", choices=SCENARIOS, default="identity")
+    ap.add_argument("--world", type=int, default=1)
+    ap.add_argument("--rank", type=int, default=0)
+    ap.add_argument("--coord", default="")
+    args = ap.parse_args(argv)
+    if args.launch:
+        out = launch(args.launch, args.scenario)
+        print(json.dumps(out, indent=2))
+        ok = out.get("ok") and out.get("result", {}).get("identical",
+                                                         True)
+        if out.get("init_failed"):
+            print("meshrun: ranks could not bootstrap jax.distributed "
+                  "(skipping)", file=sys.stderr)
+            return 0
+        return 0 if ok else 1
+    return _child_main(args.world, args.rank, args.coord, args.scenario)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,16 +17,14 @@ Queries are **non-interruptible** during migration because
     — a query always sees either the complete pre-batch or complete
     post-batch placement, never a torn mix.
 
-The network is simulated: transfer time is charged in *virtual ms* from a
-1 Gbps link model plus a fixed per-transfer handshake and per-retry
-exponential backoff.  `corrupt_prob` injects in-flight byte flips from
-the *engine* rng to exercise retransmission; a chaos `FaultPlan`
-(repro.dist.chaos) injects corruption / timeouts / slowdowns / torn
-images from its own rng at the ``migration.transfer`` hook, and —
-unlike `corrupt_prob`, whose final attempt is clean by construction —
-chaos faults may exhaust the retry budget, raising a typed
-:class:`~repro.dist.chaos.TransferTimeoutError` that the surrounding
-transaction turns into a clean abort.
+The byte movement itself lives in :mod:`repro.dist.transport` — every
+transfer here flows through a :class:`~repro.dist.transport.Transport`
+(the engine threads its own; standalone callers get the process-wide
+default SimTransport), which owns the link model, chaos injection at the
+``migration.transfer`` hook, and the per-channel wire ledger.
+`crc_transfer` remains as a compatibility shim for out-of-engine callers
+(tests, the gauntlet); in-engine code must call
+``engine.transport.transfer`` directly (reprolint RPR009).
 """
 
 from __future__ import annotations
@@ -35,58 +33,21 @@ import dataclasses
 
 import numpy as np
 
-from repro.dist.chaos import (CORRUPT, HOOK_MIGRATE_PREPARE, HOOK_TRANSFER,
-                              SLOW, TIMEOUT, TORN, TransferTimeoutError)
-from repro.dist.shard import Shard, shard_crc32
+from repro.dist.chaos import (HOOK_MIGRATE_PREPARE, SLOW, TIMEOUT, TORN,
+                              TransferTimeoutError)
+from repro.dist.shard import Shard
+from repro.dist.transport import (BACKOFF_BASE_MS, BACKOFF_CAP_MS, CH_IMAGE,
+                                  HANDSHAKE_MS, LINK_BYTES_PER_MS,
+                                  MAX_RETRIES, TransferResult, Transport,
+                                  _link_faults, default_transport)
 
 __all__ = ["MigrationResult", "TransferResult", "crc_transfer",
            "hot_migrate", "migrate_with_retry", "LINK_BYTES_PER_MS",
            "HANDSHAKE_MS", "MAX_RETRIES", "BACKOFF_BASE_MS",
            "BACKOFF_CAP_MS"]
 
-LINK_BYTES_PER_MS = 125_000.0    # 1 Gbps simulated inter-machine link
-HANDSHAKE_MS = 5.0               # per-transfer setup + CRC check
-MAX_RETRIES = 16
-BACKOFF_BASE_MS = 2.0            # retry k backs off BASE * 2**(k-1) ...
-BACKOFF_CAP_MS = 64.0            # ... capped here (virtual ms)
-
-
-@dataclasses.dataclass
-class TransferResult:
-    """One CRC-verified blob delivery over the simulated link."""
-
-    received: bytes
-    ok: bool                     # delivered bytes match the source CRC
-    retransmissions: int
-    virtual_ms: float
-
-
-def _link_faults(chaos, blob: bytes) -> tuple:
-    """Apply the chaos faults due at ``migration.transfer`` to one
-    in-flight attempt.
-
-    Returns ``(received, slow_factor)`` where ``received`` is None for a
-    lost (TIMEOUT) attempt, possibly torn/corrupted bytes otherwise.
-    Draws ONLY from ``chaos.rng`` — never the engine rng — so chaos and
-    fault-free runs consume identical engine rng streams (RPR007).
-    """
-    if chaos is None:
-        return blob, 1.0
-    received: bytes | None = blob
-    factor = 1.0
-    for f in chaos.fire(HOOK_TRANSFER):
-        if f.kind == TIMEOUT:
-            received = None
-        elif f.kind == SLOW:
-            factor *= f.factor
-        elif f.kind == TORN and received is not None and len(received) > 1:
-            cut = 1 + int(chaos.rng.integers(len(received) - 1))
-            received = received[:cut]
-        elif f.kind == CORRUPT and received is not None and received:
-            bad = bytearray(received)
-            bad[int(chaos.rng.integers(len(bad)))] ^= 0xFF
-            received = bytes(bad)
-    return received, factor
+# re-exported for callers that patch/inspect the fault model directly
+_link_faults = _link_faults
 
 
 def crc_transfer(blob: bytes, rng: np.random.Generator,
@@ -94,50 +55,20 @@ def crc_transfer(blob: bytes, rng: np.random.Generator,
                  max_retries: int = MAX_RETRIES,
                  chaos=None, timeout_ms: float | None = None
                  ) -> TransferResult:
-    """Ship one byte image over the simulated link with CRC32 + retry +
-    exponential backoff.
+    """Ship one byte image over the default SimTransport link.
 
-    The shared transfer half of Algorithm 1, reused by hot shard
-    migration, the streaming-update delta protocol and replica sync.
-    ``rng`` is the *engine* rng (required — every call site threads its
-    own generator so corruption simulation is reproducible per run) and
-    is consulted only when ``corrupt_prob > 0``: attempts
-    1..max_retries may then be corrupted in flight, while attempt
-    max_retries+1 is clean by construction, so absent chaos delivery of
-    the source-identical image is guaranteed.
-
-    A chaos FaultPlan may corrupt/tear/lose/slow any attempt (final one
-    included) from its own rng; if every attempt fails, or accumulated
-    virtual time passes ``timeout_ms``, the bounded budget is exhausted
-    and :class:`TransferTimeoutError` is raised — reachable only under
-    chaos, and handled by the caller as a clean transactional abort.
+    Compatibility shim over :meth:`repro.dist.transport.Transport.transfer`
+    for out-of-engine callers (tests, the gauntlet's standalone replica
+    drills).  Semantics are unchanged: CRC32 + retry + exponential
+    backoff, ``corrupt_prob`` in-flight flips from the engine rng with a
+    clean final attempt, chaos faults from the plan's own rng, and a
+    typed :class:`TransferTimeoutError` when the bounded budget is
+    exhausted.  In-engine code goes through ``engine.transport`` instead
+    so the bytes land in the right backend and ledger (RPR009).
     """
-    crc = shard_crc32(blob)
-    retrans = 0
-    virtual_ms = 0.0
-    for attempt in range(1, max_retries + 2):
-        received, slow = _link_faults(chaos, blob)
-        if (received is not None and corrupt_prob > 0.0
-                and attempt <= max_retries and rng.random() < corrupt_prob):
-            bad = bytearray(received)
-            bad[int(rng.integers(len(bad)))] ^= 0xFF
-            received = bytes(bad)
-        virtual_ms += slow * (len(blob) / LINK_BYTES_PER_MS) + HANDSHAKE_MS
-        if received is not None and shard_crc32(received) == crc:
-            return TransferResult(received=received, ok=True,
-                                  retransmissions=retrans,
-                                  virtual_ms=virtual_ms)
-        retrans += 1
-        virtual_ms += min(BACKOFF_BASE_MS * 2.0 ** (attempt - 1),
-                          BACKOFF_CAP_MS)
-        if timeout_ms is not None and virtual_ms > timeout_ms:
-            raise TransferTimeoutError(
-                f"transfer exceeded {timeout_ms:.1f} virtual ms "
-                f"after {attempt} attempts",
-                virtual_ms=virtual_ms, attempts=attempt)
-    raise TransferTimeoutError(
-        f"transfer failed all {max_retries + 1} attempts",
-        virtual_ms=virtual_ms, attempts=max_retries + 1)
+    return default_transport().transfer(
+        blob, rng=rng, corrupt_prob=corrupt_prob, max_retries=max_retries,
+        chaos=chaos, timeout_ms=timeout_ms)
 
 
 @dataclasses.dataclass
@@ -172,7 +103,8 @@ def hot_migrate(shards: dict, moves: list, routing: dict,
                 rng: np.random.Generator,
                 corrupt_prob: float = 0.0,
                 max_retries: int = MAX_RETRIES,
-                chaos=None) -> MigrationResult:
+                chaos=None, transport: Transport | None = None
+                ) -> MigrationResult:
     """Migrate shards per `moves` = [(sid, src_machine, tgt_machine), ...]
     as one prepare/commit transaction.
 
@@ -187,7 +119,12 @@ def hot_migrate(shards: dict, moves: list, routing: dict,
     shard twice, or a shard removed/re-homed by failover between plan
     and execute, must not abort the batch.  Each skip is recorded in
     ``MigrationResult.skipped`` with its reason.
+
+    `transport` carries the bytes (and its ledger bills them to the
+    ``image`` channel per target machine); the engine passes its own,
+    standalone callers fall back to the process default.
     """
+    t = transport if transport is not None else default_transport()
     staged: list = []            # (sid, tgt, decoded replica, n bytes)
     pending: set = set()         # sids staged but not yet committed
     skipped: list = []
@@ -213,8 +150,9 @@ def hot_migrate(shards: dict, moves: list, routing: dict,
                 if f.kind == SLOW:
                     virtual_ms += f.factor * HANDSHAKE_MS
         blob = shard.serialize()
-        tr = crc_transfer(blob, rng=rng, corrupt_prob=corrupt_prob,
-                          max_retries=max_retries, chaos=chaos)
+        tr = t.transfer(blob, rng=rng, src=src, dst=tgt, channel=CH_IMAGE,
+                        corrupt_prob=corrupt_prob,
+                        max_retries=max_retries, chaos=chaos)
         retrans += tr.retransmissions
         virtual_ms += tr.virtual_ms
         staged.append((sid, tgt, Shard.deserialize(tr.received), len(blob)))
@@ -238,7 +176,9 @@ def migrate_with_retry(shards: dict, moves: list, routing: dict,
                        rng: np.random.Generator,
                        corrupt_prob: float = 0.0,
                        max_retries: int = MAX_RETRIES,
-                       chaos=None, step_retries: int = 2) -> MigrationResult:
+                       chaos=None, step_retries: int = 2,
+                       transport: Transport | None = None
+                       ) -> MigrationResult:
     """`hot_migrate` per move, with per-step retry then skip-and-report.
 
     A single :class:`TransferTimeoutError` used to abort the *whole*
@@ -260,7 +200,8 @@ def migrate_with_retry(shards: dict, moves: list, routing: dict,
             try:
                 res = hot_migrate(shards, [move], routing, rng,
                                   corrupt_prob=corrupt_prob,
-                                  max_retries=max_retries, chaos=chaos)
+                                  max_retries=max_retries, chaos=chaos,
+                                  transport=transport)
                 break
             except TransferTimeoutError:
                 out.timeouts += 1       # clean fully-old abort; retryable

@@ -17,7 +17,7 @@ move shard bytes:
 
 Failover then *promotes* a replica (pure dictionary move, zero transfer
 on the critical path) instead of rebuilding.  Because replica images
-arrive through the same ``crc_transfer`` + ``Shard.deserialize`` /
+arrive through the same ``Transport.transfer`` + ``Shard.deserialize`` /
 ``apply_shard_delta`` pipeline as primaries (RPR003), a promoted shard
 is bit-identical to the lost primary — exactness is preserved by
 construction, and the chaos oracle verifies it empirically.
@@ -35,8 +35,9 @@ from __future__ import annotations
 import numpy as np
 
 from repro.dist.chaos import ClusterUnavailableError
-from repro.dist.migration import crc_transfer
 from repro.dist.shard import Shard, apply_shard_delta
+from repro.dist.transport import (CH_DELTA, CH_IMAGE, Transport,
+                                  default_transport)
 
 __all__ = ["ReplicaSet"]
 
@@ -78,7 +79,8 @@ class ReplicaSet:
     # sync
     # ------------------------------------------------------------------ #
     def sync_full(self, sid: int, shard: Shard, primary: int, dead: set,
-                  rng: np.random.Generator, chaos=None) -> int:
+                  rng: np.random.Generator, chaos=None,
+                  transport: Transport | None = None) -> int:
         """Ship the full canonical image to every target missing a copy.
 
         The infallible purge runs FIRST (copies on dead machines, on the
@@ -90,6 +92,7 @@ class ReplicaSet:
         """
         if self.k == 0:
             return 0
+        t = transport if transport is not None else default_transport()
         targets = self.plan_targets(sid, primary, dead)
         have = self.copies.setdefault(sid, {})
         for m in list(have):
@@ -102,7 +105,8 @@ class ReplicaSet:
                 continue
             if blob is None:
                 blob = shard.serialize()
-            tr = crc_transfer(blob, rng=rng, chaos=chaos)
+            tr = t.transfer(blob, rng=rng, src=primary, dst=m,
+                            channel=CH_IMAGE, chaos=chaos)
             self.virtual_ms += tr.virtual_ms
             have[m] = Shard.deserialize(tr.received)
             shipped += len(blob)
@@ -110,16 +114,19 @@ class ReplicaSet:
         return shipped
 
     def stage_delta(self, sid: int, delta_blob: bytes, dead: set,
-                    rng: np.random.Generator, chaos=None) -> list:
+                    rng: np.random.Generator, chaos=None,
+                    transport: Transport | None = None) -> list:
         """STAGE phase of replica delta sync: transfer + decode the
         canonical delta for every live holder of `sid`, mutating
         nothing.  Returns staged ``[(sid, machine, new Shard, n bytes)]``
         for :meth:`commit_delta`.  Raises TransferTimeoutError under
         chaos — the caller's transaction then aborts fully-old.
         """
+        t = transport if transport is not None else default_transport()
         staged = []
         for m in self.holders(sid, dead):
-            tr = crc_transfer(delta_blob, rng=rng, chaos=chaos)
+            tr = t.transfer(delta_blob, rng=rng, dst=m, channel=CH_DELTA,
+                            chaos=chaos)
             self.virtual_ms += tr.virtual_ms
             new = apply_shard_delta(self.copies[sid][m], tr.received)
             staged.append((sid, m, new, len(delta_blob)))

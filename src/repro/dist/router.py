@@ -38,7 +38,10 @@ Three pieces (docs/robustness.md has the full narrative):
 
 RPR008 (reprolint) keeps this module the single place shard reads are
 resolved: serving code in ``repro.dist`` may not subscript
-``.shards``/``.routing`` directly.
+``.shards``/``.routing`` directly.  The standby bytes themselves come
+through the transport seam (``engine.transport.fetch_replica`` — RPR009
+bans direct ``replicas.copies`` reads outside it), so a mesh backend can
+home them remotely without this module changing.
 """
 
 from __future__ import annotations
@@ -47,7 +50,8 @@ import dataclasses
 
 from repro.dist.chaos import (CORRUPT, SLOW, TIMEOUT, TORN, HOOK_READ,
                               ClusterUnavailableError, TransferTimeoutError)
-from repro.dist.migration import BACKOFF_BASE_MS, BACKOFF_CAP_MS, HANDSHAKE_MS
+from repro.dist.transport import (BACKOFF_BASE_MS, BACKOFF_CAP_MS,
+                                  HANDSHAKE_MS)
 
 __all__ = ["HEALTHY", "DEGRADED", "BROWNOUT", "READ_RTT_MS",
            "BROWNOUT_FAULT_WINDOW", "BROWNOUT_FAULT_RATE",
@@ -198,11 +202,23 @@ class ShardRouter:
         return self._e.routing[sid]
 
     def holders(self, sid: int) -> list[int]:
-        """Live standby machines holding a CRC-verified copy of ``sid``."""
+        """Live standby machines holding a CRC-verified copy of ``sid``,
+        least-loaded first.
+
+        Ordering reuses the balancer's fused per-machine load metric
+        (``loadbalance.machine_load`` via ``engine._last_loads``, the
+        same signal migration planning runs on), with machine id as the
+        deterministic tiebreak.  Before any workload epoch every load is
+        0.0, so the order degrades to the legacy lowest-id walk — and
+        standby reads of a hot shard spread off the hottest holder as
+        soon as real load telemetry exists."""
         e = self._e
         if not e.replicas.k:
             return []
-        return e.replicas.holders(sid, e.dead_machines)
+        live = e.replicas.holders(sid, e.dead_machines)
+        loads = e._last_loads
+        return sorted(live, key=lambda m: (float(loads[m]) if m < len(loads)
+                                           else 0.0, m))
 
     def resolve(self, sid: int) -> Route:
         """Primary if live, else the first live standby holder.
@@ -227,8 +243,9 @@ class ShardRouter:
                 f"shard {sid}: every copy is on a dead machine",
                 reason="no-live-copy", sids=(sid,),
                 machines=tuple(sorted(e.dead_machines)))
-        m = live[0]
-        return Route(sid, m, e.replicas.copies[sid][m], degraded=True)
+        m = live[0]                  # least-loaded live holder
+        return Route(sid, m, e.transport.fetch_replica(sid, m),
+                     degraded=True)
 
     def degraded_sids(self) -> set[int]:
         """Shards whose primary is dead (standby-served or lost)."""
@@ -297,7 +314,8 @@ class ShardRouter:
                     out.retries += 1
                 if stall >= b.hedge_after_ms and alternates:
                     m = alternates.pop(0)
-                    rt = Route(sid, m, self._e.replicas.copies[sid][m],
+                    rt = Route(sid, m,
+                               self._e.transport.fetch_replica(sid, m),
                                degraded=True)
                     self.standby_reads += 1
                     if out is not None:
@@ -309,7 +327,8 @@ class ShardRouter:
                 if cost > b.hedge_after_ms + READ_RTT_MS and alternates:
                     # the hedged copy answers before the slow one does
                     m = alternates.pop(0)
-                    rt = Route(sid, m, self._e.replicas.copies[sid][m],
+                    rt = Route(sid, m,
+                               self._e.transport.fetch_replica(sid, m),
                                degraded=True)
                     self.standby_reads += 1
                     stall += b.hedge_after_ms + READ_RTT_MS

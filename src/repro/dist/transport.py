@@ -1,0 +1,567 @@
+"""Transport: the single seam every inter-machine byte crosses.
+
+Before this module, the engine moved bytes between "machines" by passing
+Python objects around and incrementing counters in four different places
+(`migration.crc_transfer`, `replica.sync_full`/`stage_delta`, the
+router's standby reads, the megabatch operand/readback accounting).
+Each of those is a *cross-machine interaction* the paper's distributed
+claims depend on, and each had its own ad-hoc fault injection and byte
+ledger.  This module carves the seam out: **no function outside the
+transport may touch another machine's shard bytes directly** (reprolint
+RPR009 enforces it, the same move RPR008 made for router reads).
+
+Two backends ship behind the seam:
+
+  * :class:`SimTransport` — today's in-process delivery plus the byte
+    ledger.  Bit-identical to the pre-seam engine: the CRC/retry/backoff
+    discipline, virtual-ms charges and rng consumption are byte-for-byte
+    the old ``crc_transfer``, so every existing test keeps its meaning.
+    The sim backend remains the deterministic oracle.
+  * :class:`MeshTransport` — real process ranks over
+    ``jax.distributed.initialize``.  Machine *k* maps to rank
+    ``k % world``; each rank's probe planes are pinned to its local
+    device (``ClusterPlanes.device_of``); shard images, update deltas,
+    megabatch operands and candidate readbacks physically ship between
+    ranks.  On real TPU/GPU meshes the shipments lower to device
+    collectives built on the :mod:`repro.dist.sharding` rules; on the
+    multi-process **CPU-rank CI fallback** XLA cannot run multiprocess
+    collectives, so bytes travel through the ``jax.distributed``
+    coordination-service KV store instead (same rank bootstrap, same
+    process topology, verified CRC per hop).  With ``world == 1``
+    ("loopback") every delivery round-trips through the local JAX device
+    so the mesh code path is exercisable in-process.
+
+Design rules the seam must keep:
+
+  * **Ledger identity** — :meth:`Transport.account` maintains the
+    *logical* per-channel byte ledger identically on every backend, so
+    sim-vs-mesh runs agree bit-for-bit on comm-byte totals (the
+    cross-backend acceptance property).  ``MeshTransport`` additionally
+    tracks *physical* bytes-on-wire (:meth:`MeshTransport.measured`),
+    which ``launch/dryrun.py --validate-census`` checks against the
+    census prediction (:func:`predicted_wire`) at a <=10% gate.
+  * **Chaos ownership** — the attached :class:`FaultPlan` lives on the
+    transport (``DistributedGNNPE.chaos`` is a view of it); link faults
+    fire inside :meth:`transfer` from the PLAN's rng only (RPR007), so
+    identical fault schedules drive both backends.
+  * **Engine-state residency** — the engine (shards dict, replica
+    store, caches) is driver-resident on rank 0 in both backends; what
+    the mesh backend distributes is the *byte movement* (and plane
+    homes), not the Python control plane.  ``fetch_replica`` is the one
+    legal accessor for standby copies; on an accelerator mesh it is
+    where the remote read would issue.
+"""
+
+from __future__ import annotations
+
+import base64
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.dist.chaos import (CORRUPT, HOOK_TRANSFER, SLOW, TIMEOUT, TORN,
+                              TransferTimeoutError)
+from repro.dist.shard import shard_crc32
+
+__all__ = ["LINK_BYTES_PER_MS", "HANDSHAKE_MS", "MAX_RETRIES",
+           "BACKOFF_BASE_MS", "BACKOFF_CAP_MS", "CH_IMAGE", "CH_DELTA",
+           "CH_REPLICA", "CH_ROWS", "CH_OPERANDS", "CH_READBACK",
+           "CH_CONTROL", "CHANNELS", "TransferResult", "Transport",
+           "SimTransport", "MeshTransport", "make_transport",
+           "default_transport", "predicted_wire"]
+
+LINK_BYTES_PER_MS = 125_000.0    # 1 Gbps simulated inter-machine link
+HANDSHAKE_MS = 5.0               # per-transfer setup + CRC check
+MAX_RETRIES = 16
+BACKOFF_BASE_MS = 2.0            # retry k backs off BASE * 2**(k-1) ...
+BACKOFF_CAP_MS = 64.0            # ... capped here (virtual ms)
+
+# wire channels: every byte the cluster moves between machines is
+# accounted under exactly one of these (the census schema)
+CH_IMAGE = "image"          # full shard images (migration, replica sync)
+CH_DELTA = "delta"          # streaming-update delta images
+CH_REPLICA = "replica"      # standby-read control traffic
+CH_ROWS = "rows"            # candidate rows, shard holder -> master
+CH_OPERANDS = "operands"    # megabatch query/mask operands, master -> ranks
+CH_READBACK = "readback"    # candidate-id readbacks, ranks -> master
+CH_CONTROL = "control"      # protocol headers / rank control messages
+CHANNELS = (CH_IMAGE, CH_DELTA, CH_REPLICA, CH_ROWS, CH_OPERANDS,
+            CH_READBACK, CH_CONTROL)
+
+
+@dataclasses.dataclass
+class TransferResult:
+    """One CRC-verified blob delivery over the link."""
+
+    received: bytes
+    ok: bool                     # delivered bytes match the source CRC
+    retransmissions: int
+    virtual_ms: float
+
+
+def _link_faults(chaos, blob: bytes) -> tuple:
+    """Apply the chaos faults due at ``migration.transfer`` to one
+    in-flight attempt.
+
+    Returns ``(received, slow_factor)`` where ``received`` is None for a
+    lost (TIMEOUT) attempt, possibly torn/corrupted bytes otherwise.
+    Draws ONLY from ``chaos.rng`` — never the engine rng — so chaos and
+    fault-free runs consume identical engine rng streams (RPR007).
+    """
+    if chaos is None:
+        return blob, 1.0
+    received: bytes | None = blob
+    factor = 1.0
+    for f in chaos.fire(HOOK_TRANSFER):
+        if f.kind == TIMEOUT:
+            received = None
+        elif f.kind == SLOW:
+            factor *= f.factor
+        elif f.kind == TORN and received is not None and len(received) > 1:
+            cut = 1 + int(chaos.rng.integers(len(received) - 1))
+            received = received[:cut]
+        elif f.kind == CORRUPT and received is not None and received:
+            bad = bytearray(received)
+            bad[int(chaos.rng.integers(len(bad)))] ^= 0xFF
+            received = bytes(bad)
+    return received, factor
+
+
+class Transport:
+    """The seam.  Subclasses implement :meth:`_deliver` (move one
+    attempt's bytes to the destination, return the CRC the destination
+    computed); everything else — retry/backoff/virtual-ms discipline,
+    fault injection, the logical byte ledger — is shared, which is what
+    keeps the backends bit-comparable."""
+
+    backend = "sim"
+
+    def __init__(self) -> None:
+        self.chaos = None            # the attached FaultPlan (or None)
+        self.wire: dict[str, int] = {ch: 0 for ch in CHANNELS}
+        self.ops: dict[str, int] = {ch: 0 for ch in CHANNELS}
+        self.by_dst: dict[tuple, int] = {}   # (channel, dst machine) -> B
+        self.transfers = 0
+        self._e = None
+
+    # ---------------------------------------------------------------- #
+    # engine attachment
+    # ---------------------------------------------------------------- #
+    def bind(self, engine) -> "Transport":
+        self._e = engine
+        return self
+
+    def on_topology(self, engine) -> None:
+        """Called once routing + probe planes exist (and again after
+        topology-changing rebuilds).  Backends that home state per
+        machine (plane pinning) hook in here; the sim backend is
+        placement-agnostic."""
+
+    # ---------------------------------------------------------------- #
+    # chaos + accounting
+    # ---------------------------------------------------------------- #
+    def fire(self, hook: str) -> list:
+        """Consult the attached fault plan at a named hook point."""
+        plan = self.chaos
+        if plan is None:
+            return []
+        return plan.fire(hook)
+
+    def account(self, channel: str, nbytes: int, dst=None) -> None:
+        """Record `nbytes` of logical cross-machine traffic.  Identical
+        on every backend — this ledger is the bit-identity surface."""
+        n = int(nbytes)
+        self.wire[channel] += n
+        self.ops[channel] += 1
+        key = (channel, dst)
+        self.by_dst[key] = self.by_dst.get(key, 0) + n
+
+    # ---------------------------------------------------------------- #
+    # verified point-to-point transfer (the old crc_transfer, per-seam)
+    # ---------------------------------------------------------------- #
+    def transfer(self, blob: bytes, *, rng: np.random.Generator,
+                 src=None, dst=None, channel: str = CH_IMAGE,
+                 corrupt_prob: float = 0.0,
+                 max_retries: int = MAX_RETRIES,
+                 chaos=None, timeout_ms: float | None = None
+                 ) -> TransferResult:
+        """Ship one byte image over the link with CRC32 + retry +
+        exponential backoff.
+
+        The shared transfer half of Algorithm 1, reused by hot shard
+        migration, the streaming-update delta protocol and replica sync.
+        ``rng`` is the *engine* rng (required — every call site threads
+        its own generator so corruption simulation is reproducible per
+        run) and is consulted only when ``corrupt_prob > 0``: attempts
+        1..max_retries may then be corrupted in flight, while attempt
+        max_retries+1 is clean by construction, so absent chaos delivery
+        of the source-identical image is guaranteed.
+
+        A chaos FaultPlan may corrupt/tear/lose/slow any attempt (final
+        one included) from its own rng; if every attempt fails, or
+        accumulated virtual time passes ``timeout_ms``, the bounded
+        budget is exhausted and :class:`TransferTimeoutError` is raised
+        — reachable only under chaos, and handled by the caller as a
+        clean transactional abort.
+        """
+        crc = shard_crc32(blob)
+        retrans = 0
+        virtual_ms = 0.0
+        for attempt in range(1, max_retries + 2):
+            received, slow = _link_faults(chaos, blob)
+            if (received is not None and corrupt_prob > 0.0
+                    and attempt <= max_retries
+                    and rng.random() < corrupt_prob):
+                bad = bytearray(received)
+                bad[int(rng.integers(len(bad)))] ^= 0xFF
+                received = bytes(bad)
+            virtual_ms += slow * (len(blob) / LINK_BYTES_PER_MS) \
+                + HANDSHAKE_MS
+            if received is not None \
+                    and self._deliver(received, src, dst, channel) == crc:
+                self.transfers += 1
+                self.account(channel, len(blob), dst=dst)
+                return TransferResult(received=received, ok=True,
+                                      retransmissions=retrans,
+                                      virtual_ms=virtual_ms)
+            retrans += 1
+            virtual_ms += min(BACKOFF_BASE_MS * 2.0 ** (attempt - 1),
+                              BACKOFF_CAP_MS)
+            if timeout_ms is not None and virtual_ms > timeout_ms:
+                raise TransferTimeoutError(
+                    f"transfer exceeded {timeout_ms:.1f} virtual ms "
+                    f"after {attempt} attempts",
+                    virtual_ms=virtual_ms, attempts=attempt)
+        raise TransferTimeoutError(
+            f"transfer failed all {max_retries + 1} attempts",
+            virtual_ms=virtual_ms, attempts=max_retries + 1)
+
+    def _deliver(self, received: bytes, src, dst, channel: str) -> int:
+        """Move one attempt's bytes to `dst`; return the CRC32 the
+        destination computed over what it got.  The sim backend's link
+        is in-process memory: delivery is the identity."""
+        return shard_crc32(received)
+
+    # ---------------------------------------------------------------- #
+    # standby reads + bulk collective-shaped movement
+    # ---------------------------------------------------------------- #
+    def fetch_replica(self, sid: int, machine: int):
+        """The CRC-verified standby copy of `sid` held by `machine` —
+        the ONLY legal accessor for another machine's replica bytes
+        (RPR009).  The copy store itself is driver-resident in both
+        backends; on an accelerator mesh this is where the remote read
+        would issue."""
+        return self._e.replicas.copies[sid][machine]
+
+    def broadcast(self, channel: str, nbytes: int) -> None:
+        """Driver -> every shard-holder rank (megabatch operands)."""
+        self.account(channel, nbytes, dst=None)
+
+    def gather(self, channel: str, nbytes: int) -> None:
+        """Shard-holder ranks -> driver (candidate readbacks)."""
+        self.account(channel, nbytes, dst=None)
+
+    # ---------------------------------------------------------------- #
+    # introspection / lifecycle
+    # ---------------------------------------------------------------- #
+    def measured(self) -> dict[str, int]:
+        """Physical bytes-on-wire per channel.  The sim link moves no
+        real bytes; the mesh backend meters its KV/device traffic."""
+        return {ch: 0 for ch in CHANNELS}
+
+    def stats(self) -> dict:
+        return {"backend": self.backend,
+                "transfers": int(self.transfers),
+                "wire_bytes": dict(self.wire),
+                "wire_ops": dict(self.ops),
+                "measured_bytes": self.measured()}
+
+    def close(self) -> None:
+        """Release backend resources (worker ranks, KV keys)."""
+
+
+class SimTransport(Transport):
+    """The default in-process backend — the deterministic oracle every
+    other backend is measured against."""
+
+    backend = "sim"
+
+
+class MeshTransport(Transport):
+    """Real process ranks over ``jax.distributed``.
+
+    ``world == 1`` ("loopback") needs no coordinator: every delivery
+    round-trips the bytes through the local JAX device, so the mesh
+    path runs in-process (tests, benchmarks).  ``world >= 2`` bootstraps
+    ``jax.distributed.initialize(coordinator, world, rank)`` — rank 0
+    drives the engine, ranks 1..world-1 run :meth:`serve` and act as the
+    remote ends of every link: each transfer attempt's bytes ship to
+    the destination rank (machine ``m`` lives on rank ``m % world``),
+    which CRC-checks and acks them.  On the CPU CI fallback the byte
+    channel is the coordination-service KV store (XLA's CPU backend has
+    no multiprocess collectives); on accelerator meshes the same seam
+    lowers to device collectives over the ``repro.dist.sharding`` rules.
+    """
+
+    backend = "mesh"
+    _CHUNK = 1 << 16             # KV values stay comfortably small
+
+    def __init__(self, world: int | None = None, rank: int | None = None,
+                 coordinator: str | None = None,
+                 timeout_ms: int = 120_000) -> None:
+        super().__init__()
+        env = os.environ
+        self.world = int(world if world is not None
+                         else env.get("REPRO_MESH_WORLD", "1"))
+        self.rank = int(rank if rank is not None
+                        else env.get("REPRO_MESH_RANK", "0"))
+        self.coordinator = (coordinator
+                            or env.get("REPRO_MESH_COORD", ""))
+        self.timeout_ms = int(timeout_ms)
+        self.phys: dict[str, int] = {ch: 0 for ch in CHANNELS}
+        self._seq: dict[int, int] = {}
+        self._pending_rows: dict[int, int] = {}
+        self._client = None
+        self._connected = False
+
+    # ---------------------------------------------------------------- #
+    # rank topology
+    # ---------------------------------------------------------------- #
+    def connect(self) -> None:
+        if self._connected:
+            return
+        if self.world > 1:
+            import jax
+            from jax._src import distributed
+            if distributed.global_state.client is None:
+                jax.distributed.initialize(
+                    coordinator_address=self.coordinator,
+                    num_processes=self.world, process_id=self.rank)
+            self._client = distributed.global_state.client
+            # every rank must join the backend topology exchange, or
+            # peers block 2 minutes waiting for this rank's devices
+            jax.local_devices()
+        self._connected = True
+
+    def rank_of(self, machine) -> int:
+        """One shard-group per rank: machine k lives on rank k % world."""
+        if machine is None:
+            return self.rank
+        return int(machine) % max(self.world, 1)
+
+    def plane_device(self, machine):
+        """The local device machine `m`'s probe planes are pinned to."""
+        import jax
+        local = jax.local_devices()
+        if machine is None:
+            return local[0]
+        return local[int(machine) % len(local)]
+
+    def on_topology(self, engine) -> None:
+        """Pin each machine's probe planes to its local device.
+
+        With one local device per process (the CPU-rank fallback) the
+        pin is the default device and resident planes are untouched —
+        plane build/invalidate statistics stay bit-identical to sim.
+        With several local devices (``DRYRUN_DEVICES`` debug runs) the
+        planes re-home: existing slabs are invalidated once so the lazy
+        repack lands them on their machine's device, and the assemble
+        step meters the gather back to the launch device
+        (``planes.stats["gather_bytes"]``).
+        """
+        planes = getattr(engine, "planes", None)
+        if planes is None:
+            return
+        import jax
+        if len(jax.local_devices()) <= 1:
+            return
+        routing = engine.routing
+
+        def device_of(sid: int):
+            return self.plane_device(routing.get(sid))
+
+        planes.device_of = device_of
+        for sid in list(engine.shards):
+            planes.invalidate(sid)
+
+    # ---------------------------------------------------------------- #
+    # delivery
+    # ---------------------------------------------------------------- #
+    def _deliver(self, received: bytes, src, dst, channel: str) -> int:
+        self.connect()
+        r = self.rank_of(dst)
+        if self.world > 1:
+            if r != self.rank:
+                return self._kv_ship(r, channel, received)
+            # destination machine lives on this rank: no wire crossed,
+            # so the physical meter stays silent
+            return shard_crc32(received)
+        # world == 1 loopback: round-trip through the local device so
+        # the bytes really move off the Python heap and back
+        arr = np.frombuffer(received, dtype=np.uint8)
+        import jax
+        back = bytes(np.asarray(jax.device_put(arr)))
+        self.phys[channel] += len(received)
+        return shard_crc32(back)
+
+    # KV byte protocol (driver side): header + chunked payload under
+    # t/<rank>/<seq>/..., CRC ack from the worker, then cleanup.  The
+    # payload rides the *string* KV API base64-encoded — the `_bytes`
+    # variant is unreliable in the pinned jaxlib (segfaults on get).
+    def _kv_ship(self, r: int, channel: str, blob: bytes,
+                 op: str = "xfer", pull_n: int = 0) -> int:
+        self.connect()
+        c = self._client
+        seq = self._seq.get(r, 0)
+        self._seq[r] = seq + 1
+        base = f"t/{r}/{seq}"
+        b64 = base64.b64encode(blob).decode("ascii")
+        chunks = [b64[i:i + self._CHUNK]
+                  for i in range(0, len(b64), self._CHUNK)] or [""]
+        hdr = json.dumps({"op": op, "ch": channel, "n": len(blob),
+                          "k": len(chunks), "pull": int(pull_n)})
+        for i, chunk in enumerate(chunks):
+            c.key_value_set(f"{base}/c{i}", chunk)
+        c.key_value_set(f"{base}/h", hdr)
+        ack = json.loads(c.blocking_key_value_get(
+            f"{base}/a", self.timeout_ms))
+        for i in range(len(chunks)):
+            c.key_value_delete(f"{base}/c{i}")
+        c.key_value_delete(f"{base}/h")
+        c.key_value_delete(f"{base}/a")
+        self.phys[channel] += len(blob) + len(hdr)
+        if pull_n:
+            self.phys[channel] += int(pull_n)
+        return int(ack["crc"])
+
+    def serve(self) -> int:
+        """Worker-rank loop: answer the driver's shipments until a quit
+        op arrives.  Returns the number of ops served."""
+        self.connect()
+        c = self._client
+        seq = 0
+        while True:
+            base = f"t/{self.rank}/{seq}"
+            hdr = json.loads(c.blocking_key_value_get(
+                f"{base}/h", self.timeout_ms))
+            blob = base64.b64decode("".join(
+                c.blocking_key_value_get(f"{base}/c{i}", self.timeout_ms)
+                for i in range(hdr["k"])))
+            c.key_value_set(
+                f"{base}/a",
+                json.dumps({"crc": shard_crc32(blob),
+                            "pull": hdr.get("pull", 0)}))
+            seq += 1
+            if hdr["op"] == "quit":
+                return seq
+
+    # ---------------------------------------------------------------- #
+    # collective-shaped movement
+    # ---------------------------------------------------------------- #
+    def account(self, channel: str, nbytes: int, dst=None) -> None:
+        super().account(channel, nbytes, dst=dst)
+        # candidate rows originate at the holder's rank; batch them into
+        # one pull per rank (flushed at measurement/close) instead of a
+        # KV round-trip per probed (path, shard)
+        if channel == CH_ROWS and self.world > 1 and nbytes:
+            r = self.rank_of(dst)
+            if r != self.rank:
+                self._pending_rows[r] = (self._pending_rows.get(r, 0)
+                                         + int(nbytes))
+
+    def broadcast(self, channel: str, nbytes: int) -> None:
+        super().broadcast(channel, nbytes)
+        if self.world > 1 and nbytes:
+            for r in range(self.world):
+                if r != self.rank:
+                    self._kv_ship(r, channel, bytes(int(nbytes)), op="oper")
+
+    def gather(self, channel: str, nbytes: int) -> None:
+        super().gather(channel, nbytes)
+        if self.world > 1 and nbytes:
+            workers = [r for r in range(self.world) if r != self.rank]
+            share = int(nbytes) // len(workers)
+            rem = int(nbytes) - share * len(workers)
+            for i, r in enumerate(workers):
+                n = share + (rem if i == 0 else 0)
+                if n:
+                    self._kv_ship(r, channel, b"", op="pull", pull_n=n)
+
+    def flush(self) -> None:
+        """Materialize batched row pulls on the wire."""
+        if self.world > 1 and self._pending_rows:
+            for r, n in sorted(self._pending_rows.items()):
+                self._kv_ship(r, CH_ROWS, b"", op="pull", pull_n=n)
+            self._pending_rows.clear()
+
+    # ---------------------------------------------------------------- #
+    # introspection / lifecycle
+    # ---------------------------------------------------------------- #
+    def measured(self) -> dict[str, int]:
+        self.flush()
+        return dict(self.phys)
+
+    def close(self) -> None:
+        self.flush()
+        if self.world > 1 and self._connected:
+            for r in range(self.world):
+                if r != self.rank:
+                    self._kv_ship(r, CH_CONTROL, b"", op="quit")
+
+
+def make_transport(backend: str = "sim", **kw) -> Transport:
+    """Backend factory used by ``DistributedGNNPE.build(backend=...)``."""
+    if backend == "sim":
+        return SimTransport()
+    if backend == "mesh":
+        return MeshTransport(**kw)
+    raise ValueError(f"unknown transport backend {backend!r}")
+
+
+_DEFAULT: SimTransport | None = None
+
+
+def default_transport() -> SimTransport:
+    """The process-wide SimTransport behind the legacy free functions
+    (``migration.crc_transfer``, standalone ``ReplicaSet`` use) — one
+    shared ledger for callers that predate the seam."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = SimTransport()
+    return _DEFAULT
+
+
+def predicted_wire(transport: Transport, world: int) -> dict[str, int]:
+    """The census: physical bytes ``MeshTransport(world=world)`` would
+    put on the wire for the logical traffic recorded in `transport`
+    (typically a SimTransport twin's ledger).
+
+    Model (mirrors the mesh delivery rules exactly):
+
+      * point-to-point transfers and rows reach the wire iff their
+        destination machine maps to a non-driver rank (``m % world``);
+        with ``world == 1`` (loopback) every transfer round-trips the
+        local device instead, so all transfer bytes count and rows
+        count zero;
+      * operands broadcast to each of the ``world - 1`` worker ranks;
+      * readbacks gather their full logical volume from the workers.
+
+    Protocol headers (CH_CONTROL and the per-op JSON header) are NOT
+    modeled — they are the slack inside the <=10% census gate.
+    """
+    pred = {ch: 0 for ch in CHANNELS}
+    p2p = (CH_IMAGE, CH_DELTA, CH_REPLICA, CH_ROWS)
+    for (ch, dst), n in transport.by_dst.items():
+        if ch not in p2p:
+            continue
+        if world > 1:
+            if dst is not None and int(dst) % world != 0:
+                pred[ch] += n
+        elif ch != CH_ROWS:
+            pred[ch] += n
+    if world > 1:
+        pred[CH_OPERANDS] = transport.wire[CH_OPERANDS] * (world - 1)
+        pred[CH_READBACK] = transport.wire[CH_READBACK]
+    return pred

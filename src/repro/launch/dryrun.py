@@ -162,6 +162,47 @@ def _mem_dict(mem) -> dict[str, float]:
     return out
 
 
+def validate_census(ranks: int = 1) -> int:
+    """Diff the transport-census prediction against MeshTransport's
+    measured bytes-on-wire on the 300v bench (<=10% relative error per
+    channel + total).
+
+    ``ranks == 1`` runs the loopback mesh in-process; ``ranks >= 2``
+    launches real jax.distributed processes.  Returns a process exit
+    code (0 = within gate, 1 = breach).
+    """
+    from repro.dist import meshrun
+    if ranks <= 1:
+        rec = meshrun.run_scenario("census")
+    else:
+        out = meshrun.launch(ranks, "census")
+        if out.get("init_failed"):
+            print("validate-census: ranks could not bootstrap "
+                  "jax.distributed — skipping")
+            return 0
+        if not out.get("ok"):
+            print("validate-census: launch failed: "
+                  + str(out.get("detail", out)))
+            return 1
+        rec = out["result"]
+    print(f"census vs measured (world={rec['world']}):")
+    for ch, row in rec["channels"].items():
+        err = row.get("rel_err", row.get("share_of_total", 0.0))
+        print(f"  {ch:<10} predicted={row['predicted']:>12,} "
+              f"measured={row['measured']:>12,}  err={err:7.2%}")
+    tot = rec["total"]
+    print(f"  {'TOTAL':<10} predicted={tot['predicted']:>12,} "
+          f"measured={tot['measured']:>12,}  err={tot['rel_err']:7.2%}")
+    verdict = "PASS" if rec["within_10pct"] else "BREACH"
+    print(f"validate-census: worst channel error "
+          f"{rec['worst_rel_err']:.2%} (gate 10%) — {verdict}")
+    if not rec.get("ledger_identical", True):
+        print("validate-census: BREACH — sim/mesh logical wire ledgers "
+              "diverge")
+        return 1
+    return 0 if rec["within_10pct"] else 1
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", type=str, default=None)
@@ -172,8 +213,18 @@ def main() -> None:
     ap.add_argument("--scale", type=int, default=16,
                     help="mesh edge (16 = production; smaller for debug; "
                          "set DRYRUN_DEVICES to 2*scale^2)")
+    ap.add_argument("--validate-census", action="store_true",
+                    help="diff the collective-byte census prediction "
+                         "against MeshTransport measured traffic on the "
+                         "300v bench (<=10%% gate)")
+    ap.add_argument("--ranks", type=int, default=1,
+                    help="process ranks for --validate-census (1 = "
+                         "in-process loopback mesh)")
     ap.add_argument("--out", type=str, default=None)
     args = ap.parse_args()
+
+    if args.validate_census:
+        raise SystemExit(validate_census(args.ranks))
 
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]

@@ -11,12 +11,42 @@ import jax
 __all__ = ["make_production_mesh", "dp_axes_of", "HW"]
 
 
-def make_production_mesh(*, multi_pod: bool = False, scale: int = 16):
+def _near_square(n: int) -> int:
+    """Largest divisor of n that is <= sqrt(n) (1 for primes)."""
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            best = d
+        d += 1
+    return best
+
+
+def make_production_mesh(*, multi_pod: bool = False, scale: int = 16,
+                         cpu_debug: bool = False):
     """16 x 16 ('data','model') single-pod; 2 x 16 x 16 + 'pod' multi-pod.
 
     `scale` shrinks the mesh for debug runs (scale=4 -> 4x4 / 2x4x4); the
     production value is 16.
+
+    `cpu_debug=True` ignores `scale` and shapes the mesh to the devices
+    actually present — the ``DRYRUN_DEVICES`` host-platform devices (or
+    real CPU process ranks), factorized onto the same axis names so the
+    sharding rules lower unchanged.  With 8 devices: single-pod 2x4,
+    multi-pod 2x2x2; an odd count drops the 'pod' axis.
     """
+    if cpu_debug:
+        n = len(jax.devices())
+        if multi_pod and n % 2 == 0 and n >= 4:
+            half = n // 2
+            a = _near_square(half)
+            shape: tuple = (2, a, half // a)
+            axes: tuple = ("pod", "data", "model")
+        else:
+            a = _near_square(n)
+            shape = (a, n // a)
+            axes = ("data", "model")
+        return jax.make_mesh(shape, axes)
     shape = (2, scale, scale) if multi_pod else (scale, scale)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)

@@ -1,0 +1,21 @@
+"""RPR009 bad fixture: engine code moves cross-machine bytes around the
+transport seam — direct link-primitive calls and replica-store reads."""
+
+from repro.dist.migration import crc_transfer
+
+
+class Engine:
+    def apply_updates(self, blob, sid):
+        tr = crc_transfer(blob, rng=self._rng)
+        return tr.received
+
+    def _sync(self, blob, chaos):
+        received, slow = _link_faults(chaos, blob)
+        return received
+
+    def resolve(self, sid, m):
+        return self.replicas.copies[sid][m]
+
+    def hedge(self, sid, m):
+        shard = self._e.replicas.copies[sid][m]
+        return shard

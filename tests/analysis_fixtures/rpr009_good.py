@@ -1,0 +1,20 @@
+"""RPR009 good fixture: every cross-machine byte flows through the
+engine's transport; store mutations stay with the owner."""
+
+
+class Engine:
+    def apply_updates(self, blob, sid):
+        tr = self.transport.transfer(blob, rng=self._rng, dst=0)
+        return tr.received
+
+    def resolve(self, sid, m):
+        return self.transport.fetch_replica(sid, m)
+
+    def promote_commit(self, sid, m, shard):
+        # ownership mutations (assign/delete targets) are legal
+        self.replicas.copies[sid][m] = shard
+        del self.replicas.copies[sid][m]
+
+    def enumerate_holders(self, sid):
+        # non-subscript traversal of the store is bookkeeping, not a read
+        return sorted(self.replicas.copies.get(sid, {}))

@@ -149,6 +149,22 @@ def test_rpr008_silent_on_router_resolution_and_owner_functions():
     assert scan_fixture("rpr008_good.py", rel) == []
 
 
+def test_rpr009_fires_on_link_primitives_and_replica_store_reads():
+    # line 9: direct crc_transfer call bypasses the engine transport
+    # line 13: direct _link_faults call (raw fault-model access)
+    # lines 17/20: Load-context reads of replicas.copies[...]
+    rel = "src/repro/dist/rpr009_bad.py"
+    assert scan_fixture("rpr009_bad.py", rel) == [("RPR009", 9),
+                                                  ("RPR009", 13),
+                                                  ("RPR009", 17),
+                                                  ("RPR009", 20)]
+
+
+def test_rpr009_silent_on_transport_calls_and_owner_mutations():
+    rel = "src/repro/dist/rpr009_good.py"
+    assert scan_fixture("rpr009_good.py", rel) == []
+
+
 # -- baseline mechanism ---------------------------------------------------
 
 def test_stale_baseline_entry_fails_the_run():
